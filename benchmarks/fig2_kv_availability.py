@@ -1,0 +1,27 @@
+"""Fig. 2: KV-cache capacity visible to ONE request, 4 GPUs.
+
+Monolithic placement: MHA(4 heads)=1, GQA(2)=1/2, MQA(1)=1/4 of the total.
+Disaggregated (CrossPool) placement: 1 for all attention algorithms.
+"""
+from __future__ import annotations
+
+from repro.core.placement import kv_availability_fraction
+
+
+def run(csv=print) -> dict:
+    cases = [("mha", 4), ("gqa", 2), ("mqa", 1)]
+    out = {}
+    for name, heads in cases:
+        mono = kv_availability_fraction(heads, 4, disaggregated=False)
+        xp = kv_availability_fraction(heads, 4, disaggregated=True)
+        csv(f"fig2,{name}_monolithic_fraction,{mono:.3f}")
+        csv(f"fig2,{name}_crosspool_fraction,{xp:.3f}")
+        out[name] = (mono, xp)
+    assert out["mha"][0] == 1.0 and out["gqa"][0] == 0.5 \
+        and out["mqa"][0] == 0.25
+    assert all(v[1] == 1.0 for v in out.values())
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,52 @@
+"""Fig. 7: decode-side TBT P95/P99 on ShareGPT-like traffic, 0.2-1.0 RPS.
+
+Discrete-event simulation of the paper's five-GPU testbed for the three
+systems.  Reports per-model P95/P99 TBT and the kvcached/crosspool P99
+ratio (the paper reports up to 10.4x at 0.8 RPS).
+"""
+from __future__ import annotations
+
+import copy
+
+import numpy as np
+
+from repro.configs import PAPER_COLOC_SET, get_config
+from repro.runtime import trace as trace_mod
+from repro.runtime.request import percentile
+from repro.runtime.simulator import DecodeSimulator, paper_placements
+
+RATES = (0.2, 0.4, 0.6, 0.8, 1.0)
+
+
+def run(csv=print, horizon_s: float = 150.0, seed: int = 0) -> dict:
+    models = {n: get_config(n) for n in PAPER_COLOC_SET}
+    out = {}
+    for rps in RATES:
+        proto = trace_mod.make_requests(
+            list(models), rps_per_model=rps, horizon_s=horizon_s,
+            kind="sharegpt", seed=seed)
+        for system in ("static", "kvcached", "crosspool"):
+            reqs = copy.deepcopy(proto)
+            pl = paper_placements(models, system)
+            res = DecodeSimulator(models, pl).run(reqs)
+            p95 = percentile(res["tbt"], 95)
+            p99 = percentile(res["tbt"], 99)
+            out[(system, rps)] = (p95, p99, res["per_model_tbt"])
+            csv(f"fig7,{system},rps={rps},p95_ms={p95 * 1e3:.2f},"
+                f"p99_ms={p99 * 1e3:.2f},finished={res['finished']}")
+    # headline: P99 reduction of crosspool vs kvcached at 0.8 RPS per model
+    for rps in (0.8, 1.0):
+        for name in models:
+            kv = percentile(out[("kvcached", rps)][2][name], 99)
+            xp = percentile(out[("crosspool", rps)][2][name], 99)
+            if np.isfinite(kv) and np.isfinite(xp) and xp > 0:
+                csv(f"fig7,p99_reduction,{name},rps={rps},"
+                    f"{kv / xp:.2f}x")
+    p99_kv = out[("kvcached", 0.8)][1]
+    p99_xp = out[("crosspool", 0.8)][1]
+    assert p99_xp < p99_kv, "crosspool must beat kvcached tail at 0.8 RPS"
+    return {k: v[:2] for k, v in out.items()}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,107 @@
+"""Kernel micro-benchmarks: Pallas (interpret) vs pure-jnp oracle.
+
+CPU wall times of interpret-mode kernels are NOT TPU performance — the
+meaningful numbers here are (a) correctness deltas and (b) the jnp-oracle
+XLA:CPU timings that anchor the engine cost model.  TPU-side performance is
+reasoned structurally in §Roofline from the lowered HLO.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.moe_gemm import moe_gemm
+from repro.kernels.paged_attention import (contiguous_decode_attention,
+                                           paged_decode_attention)
+from repro.kernels.ssd_scan import ssd_scan
+
+
+def _time(fn, *args, iters=3):
+    fn(*args)  # compile/warm
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def run(csv=print) -> dict:
+    out = {}
+    ks = jax.random.split(jax.random.PRNGKey(0), 8)
+
+    # flash attention prefill
+    B, S, H, KV, D = 1, 512, 8, 2, 64
+    q = jax.random.normal(ks[0], (B, S, H, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, KV, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, KV, D), jnp.float32)
+    t_ref = _time(jax.jit(lambda a, b, c: ref.flash_attention(a, b, c,
+                                                              D ** -0.5)),
+                  q, k, v)
+    err = float(jnp.max(jnp.abs(
+        flash_attention(q, k, v, scale=D ** -0.5)
+        - ref.flash_attention(q, k, v, D ** -0.5))))
+    csv(f"kernels,flash_attention,ref_us={t_ref:.0f},max_err={err:.2e}")
+    out["flash"] = (t_ref, err)
+
+    # contiguous decode
+    B, T = 8, 2048
+    q = jax.random.normal(ks[3], (B, 1, H, D), jnp.float32)
+    ck = jax.random.normal(ks[4], (B, T, KV, D), jnp.float32)
+    cv = jax.random.normal(ks[5], (B, T, KV, D), jnp.float32)
+    lengths = jnp.full((B,), T, jnp.int32)
+    t_ref = _time(jax.jit(lambda a, b, c, l: ref.decode_attention(
+        a, b, c, l, D ** -0.5)), q, ck, cv, lengths)
+    err = float(jnp.max(jnp.abs(
+        contiguous_decode_attention(q, ck, cv, lengths, scale=D ** -0.5)
+        - ref.decode_attention(q, ck, cv, lengths, D ** -0.5))))
+    csv(f"kernels,decode_attention,ref_us={t_ref:.0f},max_err={err:.2e}")
+    out["decode"] = (t_ref, err)
+
+    # paged decode through a shuffled table
+    ps, npages = 64, T // 64
+    pages = jnp.stack(
+        [ck.reshape(B, npages, ps, KV, D), cv.reshape(B, npages, ps, KV, D)],
+        axis=3).reshape(B * npages, ps, 2, KV, D)
+    table = jnp.arange(B * npages, dtype=jnp.int32).reshape(B, npages)
+    t_ref = _time(jax.jit(lambda a, p, t, l: ref.paged_decode_attention(
+        a, p, t, l, D ** -0.5)), q, pages, table, lengths)
+    err = float(jnp.max(jnp.abs(
+        paged_decode_attention(q, pages, table, lengths, scale=D ** -0.5)
+        - ref.paged_decode_attention(q, pages, table, lengths, D ** -0.5))))
+    csv(f"kernels,paged_decode,ref_us={t_ref:.0f},max_err={err:.2e}")
+    out["paged"] = (t_ref, err)
+
+    # grouped expert GEMM
+    N, K, M, E = 512, 128, 256, 8
+    x = jax.random.normal(ks[6], (N, K), jnp.float32)
+    w = jax.random.normal(ks[7], (E, K, M), jnp.float32) / np.sqrt(K)
+    sizes = jnp.full((E,), N // E, jnp.int32)
+    t_ref = _time(jax.jit(lambda a, b, s: ref.moe_gemm(a, b, s)), x, w, sizes)
+    err = float(jnp.max(jnp.abs(moe_gemm(x, w, sizes)
+                                - ref.moe_gemm(x, w, sizes))))
+    csv(f"kernels,moe_gemm,ref_us={t_ref:.0f},max_err={err:.2e}")
+    out["moe_gemm"] = (t_ref, err)
+
+    # SSD scan
+    B2, S2, H2, P2, N2 = 2, 256, 4, 32, 32
+    xs = jax.random.normal(ks[0], (B2, S2, H2, P2)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B2, S2, H2)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H2,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (B2, S2, 1, N2)) * 0.5
+    Cm = jax.random.normal(ks[4], (B2, S2, 1, N2)) * 0.5
+    t_ref = _time(jax.jit(lambda *a: ref.ssd_scan(*a)), xs, dt, A, Bm, Cm)
+    y_k, _ = ssd_scan(xs, dt, A, Bm, Cm, chunk=64)
+    y_r, _ = ref.ssd_scan(xs, dt, A, Bm, Cm)
+    err = float(jnp.max(jnp.abs(y_k - y_r)))
+    csv(f"kernels,ssd_scan,ref_us={t_ref:.0f},max_err={err:.2e}")
+    out["ssd"] = (t_ref, err)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,50 @@
+"""Benchmark harness: one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--only fig7]
+
+Each benchmark prints ``name,key,value`` CSV rows and asserts its paper
+claim; a failing claim fails the harness.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from benchmarks import (fig1b_kv_accumulation, fig2_kv_availability,
+                        fig6_context_scalability, fig7_tbt, kernels_bench,
+                        table1_weight_breakdown, table3_ablation)
+
+BENCHES = {
+    "fig1b": fig1b_kv_accumulation.run,
+    "fig2": fig2_kv_availability.run,
+    "table1": table1_weight_breakdown.run,
+    "fig6": fig6_context_scalability.run,
+    "fig7": fig7_tbt.run,
+    "table3": table3_ablation.run,
+    "kernels": kernels_bench.run,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, choices=list(BENCHES))
+    args = ap.parse_args()
+    todo = {args.only: BENCHES[args.only]} if args.only else BENCHES
+    failures = 0
+    for name, fn in todo.items():
+        print(f"\n# === {name} ===")
+        t0 = time.time()
+        try:
+            fn()
+            print(f"# {name}: OK ({time.time() - t0:.1f}s)")
+        except Exception:
+            failures += 1
+            print(f"# {name}: FAILED\n{traceback.format_exc()}")
+    print(f"\n# benchmarks: {len(todo) - failures}/{len(todo)} passed")
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

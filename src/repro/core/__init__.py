@@ -1,0 +1,15 @@
+"""CrossPool core: the paper's contribution.
+
+* planner      — Eq. (1)-(2) Monte Carlo P95/P99 pool sizing + plans
+* virtualizer  — paged KV virtualization of one shared physical pool
+* admission    — queue-or-reject enforcement of the planned budget
+* pools        — KVCachePool / WeightsPool engine-level disaggregation
+* split_exec   — proxy-layer split of attention vs FFN execution
+* pipeline     — layer-wise two-batch pipeline scheduler
+* control      — host-driven vs fused ("persistent kernel") decode steps
+* placement    — StaticPartition / kvcached / CrossPool capacity models
+"""
+from repro.core.admission import AdmissionController, PendingRequest  # noqa: F401
+from repro.core.planner import (PoolPlan, WorkloadSpec, plan_pool,  # noqa: F401
+                                worst_case_pages)
+from repro.core.virtualizer import KVVirtualizer, OutOfPagesError  # noqa: F401

@@ -1,0 +1,89 @@
+"""Admission control: per-model queues enforcing the planner's page budget.
+
+Paper §3.1: "if the pool page budget is exhausted, admission control queues
+or rejects new requests instead of interrupting active decode requests."
+Active pages are never revoked; shedding happens only at admission.
+"""
+from __future__ import annotations
+
+import collections
+from dataclasses import dataclass, field
+from typing import Deque, Dict, List, Optional
+
+from repro.core.virtualizer import KVVirtualizer
+
+
+@dataclass
+class PendingRequest:
+    request_id: int
+    model: str
+    prompt_tokens: int
+    expected_output: int
+    arrival_time: float
+    enqueue_time: float = 0.0
+
+
+@dataclass
+class AdmissionStats:
+    admitted: int = 0
+    queued: int = 0
+    rejected: int = 0
+    queue_wait_total: float = 0.0
+
+
+class AdmissionController:
+    """Queue-or-reject front door for the shared KV pool."""
+
+    def __init__(self, virtualizer: KVVirtualizer, *,
+                 max_queue_per_model: int = 64,
+                 reserve_output_tokens: bool = True):
+        self.virt = virtualizer
+        self.max_queue = max_queue_per_model
+        self.reserve_output = reserve_output_tokens
+        self.queues: Dict[str, Deque[PendingRequest]] = collections.defaultdict(
+            collections.deque)
+        self.stats = AdmissionStats()
+
+    def offer(self, req: PendingRequest, now: float) -> str:
+        """Returns 'admitted' | 'queued' | 'rejected'."""
+        if self._try_admit(req):
+            self.stats.admitted += 1
+            return "admitted"
+        if len(self.queues[req.model]) < self.max_queue:
+            req.enqueue_time = now
+            self.queues[req.model].append(req)
+            self.stats.queued += 1
+            return "queued"
+        self.stats.rejected += 1
+        return "rejected"
+
+    def _try_admit(self, req: PendingRequest) -> bool:
+        expect = req.expected_output if self.reserve_output else 0
+        if not self.virt.can_admit(req.model, req.prompt_tokens, expect):
+            return False
+        self.virt.register_request(req.request_id, req.model,
+                                   req.prompt_tokens)
+        return True
+
+    def drain(self, now: float) -> List[PendingRequest]:
+        """Admit queued requests that now fit (FIFO per model, round-robin
+        across models so one model cannot starve the others)."""
+        admitted: List[PendingRequest] = []
+        progress = True
+        while progress:
+            progress = False
+            for model in list(self.queues):
+                q = self.queues[model]
+                if not q:
+                    continue
+                head = q[0]
+                if self._try_admit(head):
+                    q.popleft()
+                    self.stats.queue_wait_total += now - head.enqueue_time
+                    self.stats.admitted += 1
+                    admitted.append(head)
+                    progress = True
+        return admitted
+
+    def queued_count(self) -> int:
+        return sum(len(q) for q in self.queues.values())

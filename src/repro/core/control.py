@@ -1,0 +1,112 @@
+"""Control lowering: host-driven vs device-resident decode step execution.
+
+The paper's §3.3 persistent kernels keep the per-layer control loop on the
+GPU.  The TPU/XLA analogue (DESIGN.md §2): a *fused* decode step — one XLA
+program that scans over layers — is dispatched ONCE per token per batch;
+layer transitions, the attention->FFN ping-pong and its collectives all
+live inside the compiled program, exactly like a persistent kernel that
+dispatches captured subgraphs.  The host keeps only admission and page
+mapping, the paper's split.
+
+``HostDrivenStep`` is the ablation baseline (Table 3 row 1): every layer
+issues separate attention-stage and FFN-stage dispatches with host Python
+in between — 2L+2 dispatches/token instead of 1, plus 2L inter-pool
+device transfers driven from the host.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import split_exec
+from repro.core.pools import PooledModel, transfer
+from repro.models import build_model
+
+
+class HostDrivenStep:
+    """Per-layer host dispatch across the two pools (lowering OFF)."""
+
+    def __init__(self, pooled: PooledModel, kv_device, w_device):
+        self.pooled = pooled
+        self.kv_device = kv_device
+        self.w_device = w_device
+        fns = pooled.stage_fns
+        # execution placement follows the committed pool params: attention
+        # stages run where kv_params live, FFN stages where w_params live.
+        self._embed = jax.jit(fns.embed)
+        self._attn = jax.jit(fns.attn_stage)
+        self._ffn = jax.jit(fns.ffn_stage)
+        self._combine = jax.jit(fns.combine)
+        self._logits = jax.jit(fns.logits)
+
+    def __call__(self, tokens, cache_k, cache_v, lengths
+                 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+        p_kv, p_w = self.pooled.kv_params, self.pooled.w_params
+        x = self._embed(p_kv, tokens)
+        for layer in range(self.pooled.stage_fns.n_layers):
+            x, ffn_in, cache_k, cache_v = self._attn(
+                p_kv, x, cache_k, cache_v, lengths, layer)
+            ffn_in_w = transfer(ffn_in, self.w_device)      # A-to-F
+            ffn_out = self._ffn(p_w, ffn_in_w, layer)
+            ffn_out_kv = transfer(ffn_out, self.kv_device)  # F-to-A
+            x = self._combine(x, ffn_out_kv)
+        return self._logits(p_kv, x), cache_k, cache_v
+
+    def stage_generator(self, tokens, cache_k, cache_v, lengths):
+        """Yield one pipeline stage at a time (for the layer-wise scheduler).
+
+        Yields ("attn"|"ffn", layer) after issuing that stage's dispatch;
+        the final return carries (logits, cache_k, cache_v).
+        """
+        p_kv, p_w = self.pooled.kv_params, self.pooled.w_params
+        x = self._embed(p_kv, tokens)
+        for layer in range(self.pooled.stage_fns.n_layers):
+            x, ffn_in, cache_k, cache_v = self._attn(
+                p_kv, x, cache_k, cache_v, lengths, layer)
+            yield ("attn", layer)
+            ffn_in_w = transfer(ffn_in, self.w_device)
+            ffn_out = self._ffn(p_w, ffn_in_w, layer)
+            yield ("ffn", layer)
+            ffn_out_kv = transfer(ffn_out, self.kv_device)
+            x = self._combine(x, ffn_out_kv)
+        yield ("logits", -1)
+        self.result = (self._logits(p_kv, x), cache_k, cache_v)
+
+
+class FusedStep:
+    """Device-resident control (lowering ON): one dispatch per token.
+
+    The whole stack — embed, every layer's attention + proxy boundary +
+    FFN, final logits — is a single compiled program (scan over layers).
+    """
+
+    def __init__(self, pooled: PooledModel, device=None):
+        self.pooled = pooled
+        cfg = pooled.cfg
+        model = build_model(cfg)
+        params = split_exec.merge_params(pooled.kv_params, pooled.w_params)
+        # the merged tree mixes pool devices; commit it to ONE device so the
+        # fused program has a single placement
+        device = device or jax.devices()[0]
+        self.params = jax.device_put(params, device)
+
+        def step(params, tokens, cache, lengths):
+            return model.decode_step(params, tokens, cache, lengths)
+
+        self._step = jax.jit(step)
+
+    def __call__(self, tokens, cache: Dict, lengths
+                 ) -> Tuple[jax.Array, Dict]:
+        return self._step(self.params, tokens, cache, lengths)
+
+
+def dispatch_count(n_layers: int, fused: bool) -> int:
+    """Host dispatches per decode token (the ablation's control metric)."""
+    if fused:
+        return 1
+    # embed + (attn + ffn + combine + 2 transfers) per layer + logits
+    return 2 + n_layers * 5

@@ -1,0 +1,180 @@
+"""KV-cache planner: Eq. (1)-(2) trace-driven Monte Carlo pool sizing.
+
+The planner answers C1 (paper §3.1): given per-model workload samples and
+arrival rates, size ONE shared KV-cache pool for the P95/P99 of *aggregate
+active* KV demand at a random observation time — not the per-model worst
+case — and emit a parallelism plan per model.
+
+Eq. (1): at request age u, active KV tokens grow linearly through decode:
+    Q_i(u) = (O_p,i + O_d,i * u / T_i) * 1{0 <= u < T_i}
+    K_M(t) = sum_i kappa(M) * Q_i(t - A_i)
+Eq. (2): K_pool(t) = sum_M K_M(t).
+
+Sampling draws whole trace ROWS (prompt, output, service-time) jointly, so
+the empirical correlations between the three are preserved — sizing each
+dimension independently at a worst-case percentile over-provisions (the
+paper's stated reason for Monte Carlo over closed forms).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+
+@dataclass(frozen=True)
+class WorkloadSpec:
+    """Per-model offered workload: joint samples + Poisson arrival rate."""
+
+    model: ModelConfig
+    arrival_rate: float                      # requests/s (lambda_M)
+    prompt_tokens: np.ndarray                # [n] joint trace rows
+    output_tokens: np.ndarray                # [n]
+    decode_time: np.ndarray                  # [n] seconds resident in KV pool
+
+    def sample_rows(self, rng: np.random.Generator, k: int) -> np.ndarray:
+        idx = rng.integers(0, len(self.prompt_tokens), k)
+        return idx
+
+
+@dataclass(frozen=True)
+class ModelPlan:
+    """Parallelism + paging plan for one colocated model."""
+
+    name: str
+    kv_bytes_per_token: int                  # kappa(M), all layers
+    tokens_per_page: int                     # per-layer page granularity
+    pages_per_token: float                   # amortized, all layers
+    attention_type: str                      # "type1" | "type2" | "attn_free"
+    attention_strategy: str                  # "head_tp" | "seq_sharded" | "state"
+    state_pages_per_request: int             # SSM constant-size state
+    expected_active_kv_bytes: float          # mean aggregate for this model
+
+
+@dataclass(frozen=True)
+class PoolPlan:
+    """Planner output: enforceable online budget + per-model plans."""
+
+    page_bytes: int
+    pool_page_budget: int
+    pool_bytes: float
+    quantile: float
+    mean_active_bytes: float
+    per_model: Dict[str, ModelPlan]
+    horizon_s: float
+
+    def summary(self) -> str:
+        lines = [f"pool budget: {self.pool_page_budget} pages "
+                 f"({self.pool_bytes / 2 ** 30:.2f} GiB) at P{self.quantile * 100:.0f} "
+                 f"(mean {self.mean_active_bytes / 2 ** 30:.2f} GiB)"]
+        for name, p in self.per_model.items():
+            lines.append(
+                f"  {name}: kappa={p.kv_bytes_per_token}B/token "
+                f"{p.attention_type}/{p.attention_strategy} "
+                f"tokens/page={p.tokens_per_page}")
+        return "\n".join(lines)
+
+
+def active_kv_timeline(spec: WorkloadSpec, rng: np.random.Generator,
+                       horizon_s: float, dt: float = 1.0,
+                       kappa: Optional[int] = None) -> np.ndarray:
+    """Simulate K_M(t) over ``horizon_s`` seconds on a dt grid (Eq. 1)."""
+    kappa = spec.model.kv_bytes_per_token() if kappa is None else kappa
+    n_arrivals = rng.poisson(spec.arrival_rate * horizon_s)
+    t_grid = np.arange(0.0, horizon_s, dt)
+    usage = np.zeros_like(t_grid)
+    if n_arrivals == 0:
+        return usage
+    arrivals = rng.uniform(0.0, horizon_s, n_arrivals)
+    rows = spec.sample_rows(rng, n_arrivals)
+    o_p = spec.prompt_tokens[rows].astype(np.float64)
+    o_d = spec.output_tokens[rows].astype(np.float64)
+    t_res = np.maximum(spec.decode_time[rows].astype(np.float64), dt)
+    state_const = spec.model.state_bytes_per_request()
+    for a, p, d, tr in zip(arrivals, o_p, o_d, t_res):
+        u = t_grid - a
+        live = (u >= 0) & (u < tr)
+        q = (p + d * np.minimum(u / tr, 1.0)) * live            # Eq. (1)
+        usage += kappa * q + state_const * live
+    return usage
+
+
+def plan_pool(specs: Sequence[WorkloadSpec], *, page_bytes: int = 16 * 1024,
+              quantile: float = 0.99, horizon_s: float = 3600.0,
+              n_trials: int = 8, seed: int = 0, model_axis: int = 16,
+              headroom: float = 1.05, dt: float = 2.0) -> PoolPlan:
+    """Monte Carlo P-quantile sizing of the shared pool (Eq. 2).
+
+    ``n_trials`` independent hour-long traces are simulated and the
+    (quantile) of the pooled aggregate over all sampled observation times is
+    the provisioning target, rounded up to pages with ``headroom``.
+    """
+    rng = np.random.default_rng(seed)
+    samples: List[np.ndarray] = []
+    for _ in range(n_trials):
+        total = None
+        for spec in specs:
+            u = active_kv_timeline(spec, rng, horizon_s, dt=dt)
+            total = u if total is None else total + u           # Eq. (2)
+        samples.append(total)
+    pooled = np.concatenate(samples)
+    target = float(np.quantile(pooled, quantile)) * headroom
+    budget_pages = int(math.ceil(target / page_bytes)) or 1
+
+    per_model: Dict[str, ModelPlan] = {}
+    for spec in specs:
+        cfg = spec.model
+        kappa = cfg.kv_bytes_per_token()
+        per_layer = (kappa // max(cfg.n_decoder_attn_layers, 1)
+                     if kappa else 0)
+        tpp = max(page_bytes // per_layer, 1) if per_layer else 0
+        if cfg.attn_free:
+            atype, astrat = "attn_free", "state"
+        elif cfg.attention == "mla" or cfg.n_kv_heads < model_axis:
+            atype, astrat = "type2", "seq_sharded"
+        else:
+            atype, astrat = "type1", "head_tp"
+        mean_active = float(np.mean(
+            active_kv_timeline(spec, np.random.default_rng(seed + 1),
+                               min(horizon_s, 600.0), dt=dt)))
+        per_model[cfg.name] = ModelPlan(
+            name=cfg.name,
+            kv_bytes_per_token=kappa,
+            tokens_per_page=tpp,
+            pages_per_token=(cfg.n_decoder_attn_layers / tpp) if tpp else 0.0,
+            attention_type=atype,
+            attention_strategy=astrat,
+            state_pages_per_request=int(
+                math.ceil(cfg.state_bytes_per_request() / page_bytes)),
+            expected_active_kv_bytes=mean_active,
+        )
+
+    return PoolPlan(
+        page_bytes=page_bytes,
+        pool_page_budget=budget_pages,
+        pool_bytes=budget_pages * page_bytes,
+        quantile=quantile,
+        mean_active_bytes=float(np.mean(pooled)),
+        per_model=per_model,
+        horizon_s=horizon_s,
+    )
+
+
+def worst_case_pages(specs: Sequence[WorkloadSpec], page_bytes: int,
+                     horizon_s: float = 3600.0) -> int:
+    """Static-partition comparison point: per-model worst-case reservation.
+
+    Each model reserves its own P100 concurrent demand — the 'reserve peak
+    KV per model' baseline the paper argues wastes memory (§1).
+    """
+    total = 0
+    for spec in specs:
+        rng = np.random.default_rng(1234)
+        u = active_kv_timeline(spec, rng, horizon_s)
+        total += int(math.ceil(u.max() / page_bytes))
+    return max(total, 1)

@@ -1,0 +1,104 @@
+"""Disaggregated memory pools: the engine-level objects.
+
+``KVCachePool`` owns a device, every colocated model's *non-FFN* params,
+the shared physical KV page pool (virtualizer), and the per-model decode
+caches.  ``WeightsPool`` owns another device and the consolidated FFN/MoE
+weights of ALL colocated models.  Hidden states are the only tensors that
+cross between them (``transfer``), matching the paper's NVSHMEM boundary.
+
+On a one-device host both pools may map to the same device — the data-path
+structure (split params, explicit transfers, page accounting) is identical;
+on the production mesh the same roles are expressed by the ``crosspool``
+sharding strategy inside one SPMD program.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import split_exec
+from repro.core.virtualizer import KVVirtualizer
+
+
+@dataclass
+class PooledModel:
+    cfg: ModelConfig
+    kv_params: Dict            # embeddings, norms, attention (KV pool device)
+    w_params: Dict             # FFN/MoE weights (weights pool device)
+    stage_fns: split_exec.StageFns
+
+
+class WeightsPool:
+    """Consolidated FFN weights of all colocated cold models."""
+
+    def __init__(self, device):
+        self.device = device
+        self.ffn_params: Dict[str, Dict] = {}
+
+    def add_model(self, name: str, w_params: Dict) -> None:
+        self.ffn_params[name] = jax.device_put(w_params, self.device)
+
+    def total_bytes(self) -> int:
+        return sum(
+            leaf.size * leaf.dtype.itemsize
+            for tree in self.ffn_params.values()
+            for leaf in jax.tree.leaves(tree))
+
+
+class KVCachePool:
+    """Attention-side pool: non-FFN params + the shared paged KV space."""
+
+    def __init__(self, device, models: Dict[str, ModelConfig], *,
+                 page_budget: int, page_bytes: int = 16 * 1024,
+                 allocate_device_pool: bool = True):
+        self.device = device
+        self.attn_params: Dict[str, Dict] = {}
+        self.virtualizer = KVVirtualizer(
+            models, page_budget=page_budget, page_bytes=page_bytes,
+            allocate_device_pool=allocate_device_pool)
+
+    def add_model(self, name: str, kv_params: Dict) -> None:
+        self.attn_params[name] = jax.device_put(kv_params, self.device)
+
+    def total_param_bytes(self) -> int:
+        return sum(
+            leaf.size * leaf.dtype.itemsize
+            for tree in self.attn_params.values()
+            for leaf in jax.tree.leaves(tree))
+
+
+def transfer(x: jax.Array, device) -> jax.Array:
+    """The pool boundary: explicit async hidden-state transfer."""
+    return jax.device_put(x, device)
+
+
+def build_pools(models: Dict[str, ModelConfig], params: Dict[str, Dict], *,
+                kv_device=None, w_device=None, page_budget: int,
+                page_bytes: int = 16 * 1024,
+                allocate_device_pool: bool = True,
+                ):
+    """Split every model's params across the two pools."""
+    devs = jax.devices()
+    kv_device = kv_device or devs[0]
+    w_device = w_device or devs[-1]
+    kv_pool = KVCachePool(kv_device, models, page_budget=page_budget,
+                          page_bytes=page_bytes,
+                          allocate_device_pool=allocate_device_pool)
+    w_pool = WeightsPool(w_device)
+    pooled: Dict[str, PooledModel] = {}
+    for name, cfg in models.items():
+        kv_tree, w_tree = split_exec.split_params(params[name], cfg)
+        kv_pool.add_model(name, kv_tree)
+        w_pool.add_model(name, w_tree)
+        pooled[name] = PooledModel(
+            cfg=cfg,
+            kv_params=kv_pool.attn_params[name],
+            w_params=w_pool.ffn_params[name],
+            stage_fns=split_exec.make_stage_fns(cfg),
+        )
+    return kv_pool, w_pool, pooled

@@ -1,0 +1,133 @@
+"""Split layer execution: attention sub-block vs FFN sub-block per layer.
+
+This mirrors the paper's §4 runtime integration: in the KV-cache pool the
+FFN of every transformer layer is replaced by a *proxy* — the attention
+stage returns the post-attention hidden states, the FFN stage (running in
+the weights pool, possibly another device) consumes them, and the combine
+step resumes the residual stream.  ``attn_stage``/``ffn_stage``/``combine``
+are the units the layer-wise pipeline scheduler interleaves.
+
+Supported families: dense / moe / vlm with GQA or MLA attention — the
+paper's serving targets.  (SSM/hybrid/enc-dec run through the fused path.)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import layers, moe as moe_mod
+from repro.models import transformer as tfm
+from repro.models.hooks import IDENTITY_HOOKS
+
+
+class StageFns(NamedTuple):
+    embed: Callable          # (params, tokens [B])            -> x [B,1,D]
+    attn_stage: Callable     # (params, x, cache_k, cache_v, lengths, layer)
+    #                           -> (x_resid, ffn_input, cache_k, cache_v)
+    ffn_stage: Callable      # (params, ffn_input, layer)      -> ffn_out
+    combine: Callable        # (x_resid, ffn_out)              -> x
+    logits: Callable         # (params, x)                     -> [B,V]
+    n_layers: int
+
+
+def _layer_params(params: Dict, layer) -> Dict:
+    return jax.tree.map(
+        lambda a: jax.lax.dynamic_index_in_dim(a, layer, 0, keepdims=False),
+        params["layers"])
+
+
+def make_stage_fns(cfg: ModelConfig) -> StageFns:
+    if cfg.family not in ("dense", "moe", "vlm"):
+        raise ValueError(
+            f"split execution supports dense/moe/vlm; {cfg.family} uses the "
+            f"fused path")
+
+    def embed(params, tokens):
+        return layers.embed_tokens(params["embed"], tokens[:, None])
+
+    def attn_stage(params, x, cache_k, cache_v, lengths, layer):
+        p_l = _layer_params(params, layer)
+        ck = jax.lax.dynamic_index_in_dim(cache_k, layer, 0, keepdims=False)
+        cv = jax.lax.dynamic_index_in_dim(cache_v, layer, 0, keepdims=False)
+        h = layers.rms_norm(x, p_l["ln1"], cfg.norm_eps)
+        if cfg.attention == "mla":
+            out, ck, cv = attn.mla_decode(p_l["attn"], cfg, h, ck, cv, lengths)
+        else:
+            out, ck, cv = attn.gqa_decode(p_l["attn"], cfg, h, ck, cv, lengths)
+        cache_k = jax.lax.dynamic_update_index_in_dim(cache_k, ck, layer, 0)
+        cache_v = jax.lax.dynamic_update_index_in_dim(cache_v, cv, layer, 0)
+        x = x + out
+        # the proxy boundary: pre-FFN norm runs in the KV pool, the
+        # normalized hidden states are what crosses to the weights pool
+        ffn_in = layers.rms_norm(x, p_l["ln2"], cfg.norm_eps)
+        return x, ffn_in, cache_k, cache_v
+
+    def ffn_stage(params, ffn_in, layer):
+        p_l = _layer_params(params, layer)
+        if cfg.is_moe:
+            out, _ = moe_mod.apply_moe(p_l["moe"], ffn_in, cfg)
+        else:
+            out = layers.apply_mlp(p_l["mlp"], ffn_in, cfg.mlp_kind)
+        return out
+
+    def combine(x, ffn_out):
+        return x + ffn_out
+
+    def logits(params, x):
+        x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+        return layers.unembed(params["embed"], x)[:, 0]
+
+    return StageFns(embed, attn_stage, ffn_stage, combine, logits,
+                    cfg.n_layers)
+
+
+def split_params(params: Dict, cfg: ModelConfig) -> Tuple[Dict, Dict]:
+    """Partition a param tree into (kv_pool_params, weights_pool_params).
+
+    FFN/MoE weights go to the weights pool (the dominant MoE bytes, paper
+    Table 1); embeddings, norms and attention stay with the KV pool.
+    """
+    ffn_keys = ("mlp", "moe")
+
+    def is_ffn(path):
+        return any(k in path for k in ffn_keys)
+
+    kv_tree = {}
+    w_tree = {}
+
+    def walk(src, kv_dst, w_dst, path=()):
+        for k, v in src.items():
+            p = path + (k,)
+            if isinstance(v, dict):
+                kv_sub, w_sub = {}, {}
+                walk(v, kv_sub, w_sub, p)
+                if kv_sub:
+                    kv_dst[k] = kv_sub
+                if w_sub:
+                    w_dst[k] = w_sub
+            else:
+                (w_dst if is_ffn(p) else kv_dst)[k] = v
+
+    walk(params, kv_tree, w_tree)
+    return kv_tree, w_tree
+
+
+def merge_params(kv_tree: Dict, w_tree: Dict) -> Dict:
+    out: Dict = {}
+
+    def walk(src, dst):
+        for k, v in src.items():
+            if isinstance(v, dict):
+                dst.setdefault(k, {})
+                walk(v, dst[k])
+            else:
+                dst[k] = v
+
+    walk(kv_tree, out)
+    walk(w_tree, out)
+    return out

@@ -1,0 +1,234 @@
+"""KV-cache virtualizer: paged virtualization of one shared physical pool.
+
+TPU adaptation of the paper's CUDA-VMM design (DESIGN.md §2): XLA has no
+virtual-memory API, so the pool is ONE pre-allocated device array of
+fixed-size pages, and "mapping" is page-table bookkeeping on the host —
+identical bytes, identical slow-path/fast-path split:
+
+  * fast path (per token, on device): attention kernels read K/V through a
+    page table (``repro.kernels.paged_attention``), writes go to
+    (page, slot) coordinates — no allocation on the critical path;
+  * slow path (per ~page, on host): ``map_pages`` / ``unmap_pages`` update
+    the free list and per-request page tables against the planner's budget.
+
+Heterogeneity (C1): the pool is untyped (flat bf16 elements).  Each model
+views a page as ``tokens_per_page(M)`` tokens of ONE layer's K+V (or MLA
+latent+rope, or SSM state), so models with different KV layouts share the
+same physical pages.  ``tokens_per_page`` = page_elems // per-token-elems,
+with the remainder as internal fragmentation — as in any real pager.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+
+class OutOfPagesError(RuntimeError):
+    pass
+
+
+@dataclass
+class ModelView:
+    """How one model interprets physical pages."""
+
+    name: str
+    per_token_elems: int          # one layer's K+V (or latent) elems per token
+    tokens_per_page: int
+    n_kv_layers: int
+    kv_shape: Tuple[int, ...]     # per-token per-layer logical shape
+
+    def pages_for(self, tokens: int) -> int:
+        """Physical pages to hold ``tokens`` across all KV layers."""
+        if self.tokens_per_page == 0:
+            return 0
+        per_layer = math.ceil(tokens / self.tokens_per_page)
+        return per_layer * self.n_kv_layers
+
+
+def make_view(cfg: ModelConfig, page_elems: int) -> ModelView:
+    if cfg.attn_free:
+        return ModelView(cfg.name, 0, 0, 0, ())
+    if cfg.attention == "mla":
+        m = cfg.mla
+        per_tok = m.kv_lora_rank + m.qk_rope_head_dim
+        shape = (per_tok,)
+    else:
+        per_tok = 2 * cfg.n_kv_heads * cfg.head_dim
+        shape = (2, cfg.n_kv_heads, cfg.head_dim)
+    tpp = page_elems // per_tok
+    if tpp == 0:
+        raise ValueError(
+            f"{cfg.name}: per-token KV ({per_tok} elems) exceeds page size "
+            f"({page_elems} elems); increase page_bytes")
+    return ModelView(cfg.name, per_tok, tpp, cfg.n_decoder_attn_layers, shape)
+
+
+@dataclass
+class RequestPages:
+    """Per-request mapping: page_table[layer][chunk] -> physical page id."""
+
+    request_id: int
+    model: str
+    tokens: int = 0
+    tables: List[List[int]] = field(default_factory=list)   # [layer][chunk]
+    state_pages: List[int] = field(default_factory=list)    # SSM constant state
+
+
+class KVVirtualizer:
+    """Host-side pager over one device-resident physical pool."""
+
+    def __init__(self, models: Dict[str, ModelConfig], *,
+                 page_budget: int, page_bytes: int = 16 * 1024,
+                 dtype=jnp.bfloat16, allocate_device_pool: bool = True):
+        self.page_bytes = page_bytes
+        self.page_elems = page_bytes // 2          # bf16
+        self.page_budget = page_budget
+        self.views = {n: make_view(c, self.page_elems)
+                      for n, c in models.items()}
+        self.configs = dict(models)
+        self.free_list: List[int] = list(range(page_budget - 1, -1, -1))
+        self.requests: Dict[int, RequestPages] = {}
+        self.pool: Optional[jax.Array] = None
+        if allocate_device_pool:
+            self.pool = jnp.zeros((page_budget, self.page_elems), dtype)
+        # stats
+        self.peak_mapped = 0
+        self.map_events = 0
+        self.unmap_events = 0
+
+    # ------------------------------------------------------------------
+    # accounting
+    # ------------------------------------------------------------------
+    @property
+    def mapped_pages(self) -> int:
+        return self.page_budget - len(self.free_list)
+
+    @property
+    def free_pages(self) -> int:
+        return len(self.free_list)
+
+    def can_admit(self, model: str, prompt_tokens: int,
+                  expected_output: int = 0) -> bool:
+        view = self.views[model]
+        cfg = self.configs[model]
+        need = view.pages_for(prompt_tokens + expected_output) if view.n_kv_layers \
+            else 0
+        need += math.ceil(cfg.state_bytes_per_request() / self.page_bytes)
+        return need <= self.free_pages
+
+    # ------------------------------------------------------------------
+    # slow path: map / unmap
+    # ------------------------------------------------------------------
+    def _take(self, n: int) -> List[int]:
+        if n > len(self.free_list):
+            raise OutOfPagesError(
+                f"need {n} pages, {len(self.free_list)} free "
+                f"(budget {self.page_budget})")
+        pages = [self.free_list.pop() for _ in range(n)]
+        self.map_events += n
+        self.peak_mapped = max(self.peak_mapped, self.mapped_pages)
+        return pages
+
+    def register_request(self, request_id: int, model: str,
+                         prompt_tokens: int) -> RequestPages:
+        """Map pages for a request's prompt KV (+ SSM state)."""
+        view = self.views[model]
+        cfg = self.configs[model]
+        req = RequestPages(request_id, model)
+        if view.n_kv_layers:
+            chunks = math.ceil(max(prompt_tokens, 1) / view.tokens_per_page)
+            for _ in range(view.n_kv_layers):
+                req.tables.append(self._take(chunks))
+        state_pages = math.ceil(cfg.state_bytes_per_request() / self.page_bytes)
+        if state_pages:
+            req.state_pages = self._take(state_pages)
+        req.tokens = prompt_tokens
+        self.requests[request_id] = req
+        return req
+
+    def extend_request(self, request_id: int, new_tokens: int = 1) -> None:
+        """Grow a request by ``new_tokens`` (decode); maps pages on demand."""
+        req = self.requests[request_id]
+        view = self.views[req.model]
+        if view.n_kv_layers:
+            have = len(req.tables[0]) * view.tokens_per_page
+            need_tokens = req.tokens + new_tokens
+            while have < need_tokens:
+                for t in req.tables:
+                    t.extend(self._take(1))
+                have += view.tokens_per_page
+        req.tokens += new_tokens
+
+    def release_request(self, request_id: int) -> None:
+        req = self.requests.pop(request_id)
+        n = 0
+        for t in req.tables:
+            self.free_list.extend(t)
+            n += len(t)
+        self.free_list.extend(req.state_pages)
+        n += len(req.state_pages)
+        self.unmap_events += n
+
+    # ------------------------------------------------------------------
+    # fast path: device views
+    # ------------------------------------------------------------------
+    def page_table_array(self, request_ids: List[int], layer: int,
+                         max_pages: int) -> jax.Array:
+        """[B, max_pages] int32 physical ids (-1 = unmapped) for one layer."""
+        out = np.full((len(request_ids), max_pages), -1, np.int32)
+        for i, rid in enumerate(request_ids):
+            tab = self.requests[rid].tables[layer]
+            out[i, : min(len(tab), max_pages)] = tab[: max_pages]
+        return jnp.asarray(out)
+
+    def typed_pages(self, model: str) -> jax.Array:
+        """The pool viewed as ``[n_pages, tokens_per_page, *kv_shape]``.
+
+        Zero-copy reshape of the shared flat pool; the slack elements at the
+        end of each page are invisible to the kernel.
+        """
+        view = self.views[model]
+        used = view.tokens_per_page * view.per_token_elems
+        return self.pool[:, :used].reshape(
+            (self.page_budget, view.tokens_per_page) + view.kv_shape)
+
+    def write_tokens(self, model: str, layer: int, request_id: int,
+                     start_token: int, kv: jax.Array) -> None:
+        """Write ``kv [n_new, *kv_shape]`` at token offset ``start_token``.
+
+        Slow-ish host-coordinated scatter (engine path; per-layer per-step).
+        """
+        view = self.views[model]
+        req = self.requests[request_id]
+        flat = kv.reshape(kv.shape[0], view.per_token_elems).astype(
+            self.pool.dtype)
+        for j in range(kv.shape[0]):
+            tok = start_token + j
+            page = req.tables[layer][tok // view.tokens_per_page]
+            off = (tok % view.tokens_per_page) * view.per_token_elems
+            self.pool = jax.lax.dynamic_update_slice(
+                self.pool, flat[j][None, :], (page, off))
+
+    # ------------------------------------------------------------------
+    def utilization(self) -> Dict[str, float]:
+        frag = 0.0
+        for rid, req in self.requests.items():
+            view = self.views[req.model]
+            if not view.n_kv_layers:
+                continue
+            used = req.tokens * view.per_token_elems * view.n_kv_layers
+            held = sum(len(t) for t in req.tables) * self.page_elems
+            frag += held - used
+        return {
+            "mapped_pages": self.mapped_pages,
+            "free_pages": self.free_pages,
+            "peak_mapped": self.peak_mapped,
+            "internal_frag_bytes": frag * 2,
+        }

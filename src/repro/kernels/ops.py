@@ -1,0 +1,83 @@
+"""Public jit'd wrappers for the kernel layer.
+
+Implementation selection:
+  * ``xla``     — pure-jnp reference (ref.py).  Default; used by the
+                  distributed dry-run so cost_analysis sees real FLOPs.
+  * ``pallas``  — pl.pallas_call TPU kernels, run in interpret mode on CPU.
+
+Select globally via :func:`set_default_impl` or per-call via ``impl=``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+
+_DEFAULT_IMPL = "xla"
+
+
+def set_default_impl(impl: str) -> None:
+    global _DEFAULT_IMPL
+    assert impl in ("xla", "pallas")
+    _DEFAULT_IMPL = impl
+
+
+def get_default_impl() -> str:
+    return _DEFAULT_IMPL
+
+
+def _resolve(impl: Optional[str]) -> str:
+    return impl or _DEFAULT_IMPL
+
+
+# --- flash attention -------------------------------------------------------
+
+def flash_attention(q, k, v, *, scale: float, impl: Optional[str] = None):
+    if _resolve(impl) == "pallas":
+        from repro.kernels import flash_attention as fk
+        return fk.flash_attention(q, k, v, scale=scale)
+    return ref.flash_attention(q, k, v, scale)
+
+
+# --- decode attention ------------------------------------------------------
+
+def decode_attention(q, cache_k, cache_v, lengths, *, scale: float,
+                     impl: Optional[str] = None):
+    if _resolve(impl) == "pallas":
+        from repro.kernels import paged_attention as pk
+        return pk.contiguous_decode_attention(q, cache_k, cache_v, lengths,
+                                              scale=scale)
+    return ref.decode_attention(q, cache_k, cache_v, lengths, scale)
+
+
+def paged_decode_attention(q, kv_pages, page_table, lengths, *, scale: float,
+                           impl: Optional[str] = None):
+    if _resolve(impl) == "pallas":
+        from repro.kernels import paged_attention as pk
+        return pk.paged_decode_attention(q, kv_pages, page_table, lengths,
+                                         scale=scale)
+    return ref.paged_decode_attention(q, kv_pages, page_table, lengths, scale)
+
+
+# --- grouped expert GEMM ---------------------------------------------------
+
+def moe_gemm(x, w, group_sizes, *, impl: Optional[str] = None):
+    if _resolve(impl) == "pallas":
+        from repro.kernels import moe_gemm as mk
+        return mk.moe_gemm(x, w, group_sizes)
+    return ref.moe_gemm(x, w, group_sizes)
+
+
+# --- Mamba2 SSD ------------------------------------------------------------
+
+def ssd_scan(x, dt, A, B_, C_, *, chunk: int = 64, h0=None,
+             impl: Optional[str] = None):
+    if _resolve(impl) == "pallas":
+        from repro.kernels import ssd_scan as sk
+        return sk.ssd_scan(x, dt, A, B_, C_, chunk=chunk, h0=h0)
+    from repro.kernels.ssd_chunked import ssd_scan_chunked
+    return ssd_scan_chunked(x, dt, A, B_, C_, chunk=chunk, h0=h0)

@@ -1,0 +1,108 @@
+"""Chunked Mamba2 SSD (state-space duality) in pure JAX.
+
+This is the *scalable* full-sequence form: O(S/chunk) scan steps with
+matmuls inside, vs. the O(S) sequential recurrence in ``ref.ssd_scan``.
+Validated against the sequential oracle in tests; the Pallas ``ssd_scan``
+kernel implements the same chunk decomposition with VMEM tiling.
+
+Math (arXiv:2405.21060 §6): within a chunk of length L with per-step log
+decay a_t = dt_t * A and inclusive cumsum La_t:
+
+  intra:  Y[t] += sum_{s<=t} (C_t.B_s) exp(La_t - La_s) dt_s x_s
+  state:  S_c   = sum_s exp(La_L - La_s) dt_s (B_s ⊗ x_s)
+  recur:  h_{c+1} = exp(La_L) h_c + S_c
+  inter:  Y[t] += C_t . (exp(La_t) h_c)
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_scan_chunked(x: jax.Array, dt: jax.Array, A: jax.Array,
+                     B_: jax.Array, C_: jax.Array, chunk: int = 64,
+                     h0: Optional[jax.Array] = None,
+                     ) -> Tuple[jax.Array, jax.Array]:
+    """Same contract as ``ref.ssd_scan``.
+
+    x: [B,S,H,P]; dt: [B,S,H]; A: [H]; B_/C_: [B,S,G,N]; h0: [B,H,P,N].
+    S must be divisible by ``chunk`` (pad upstream).
+    """
+    Bb, S, H, P = x.shape
+    G, N = B_.shape[2], B_.shape[3]
+    rep = H // G
+    assert S % chunk == 0, f"seq {S} not divisible by chunk {chunk}"
+    nc = S // chunk
+
+    f32 = jnp.float32
+    xc = x.astype(f32).reshape(Bb, nc, chunk, H, P)
+    dtc = dt.astype(f32).reshape(Bb, nc, chunk, H)
+    Bc = jnp.repeat(B_.astype(f32), rep, axis=2).reshape(Bb, nc, chunk, H, N)
+    Cc = jnp.repeat(C_.astype(f32), rep, axis=2).reshape(Bb, nc, chunk, H, N)
+
+    a = dtc * A[None, None, None, :]                  # [B,nc,L,H] log decays
+    La = jnp.cumsum(a, axis=2)                        # inclusive cumsum
+    La_total = La[:, :, -1, :]                        # [B,nc,H]
+
+    # --- intra-chunk (quadratic within chunk) ------------------------------
+    # decay[l,s] = exp(La_l - La_s) for s<=l else 0
+    diff = La[:, :, :, None, :] - La[:, :, None, :, :]      # [B,nc,L,S=L,H]
+    l_idx = jnp.arange(chunk)
+    tri = (l_idx[:, None] >= l_idx[None, :])[None, None, :, :, None]
+    # double-where: masked (upper-triangle) entries have diff > 0 and can
+    # overflow exp; zeroing them AFTER exp still leaks NaN through the
+    # gradient of where — so clamp inside first.
+    decay = jnp.where(tri, jnp.exp(jnp.where(tri, diff, 0.0)), 0.0)
+    scores = jnp.einsum("bclhn,bcshn->bclsh", Cc, Bc) * decay
+    y_intra = jnp.einsum("bclsh,bcsh,bcshp->bclhp", scores, dtc, xc)
+
+    # --- per-chunk end states ----------------------------------------------
+    decay_to_end = jnp.exp(La_total[:, :, None, :] - La)    # [B,nc,L,H]
+    S_c = jnp.einsum("bcsh,bcshn,bcshp->bchpn",
+                     dtc * decay_to_end, Bc, xc)            # [B,nc,H,P,N]
+
+    # --- inter-chunk recurrence (scan over chunks) --------------------------
+    if h0 is None:
+        h0 = jnp.zeros((Bb, H, P, N), f32)
+
+    def step(h, inp):
+        s_c, la_tot = inp                                   # [B,H,P,N],[B,H]
+        h_next = h * jnp.exp(la_tot)[..., None, None] + s_c
+        return h_next, h                                    # emit state at chunk START
+
+    S_cm = jnp.moveaxis(S_c, 1, 0)                          # [nc,B,H,P,N]
+    La_tm = jnp.moveaxis(La_total, 1, 0)                    # [nc,B,H]
+    h_final, h_starts = jax.lax.scan(step, h0, (S_cm, La_tm))
+    h_starts = jnp.moveaxis(h_starts, 0, 1)                 # [B,nc,H,P,N]
+
+    # --- inter-chunk contribution -------------------------------------------
+    C_dec = Cc * jnp.exp(La)[..., None]                     # [B,nc,L,H,N]
+    y_inter = jnp.einsum("bclhn,bchpn->bclhp", C_dec, h_starts)
+
+    y = (y_intra + y_inter).reshape(Bb, S, H, P).astype(x.dtype)
+    return y, h_final
+
+
+def ssd_decode_step(h: jax.Array, x_t: jax.Array, dt_t: jax.Array,
+                    A: jax.Array, B_t: jax.Array, C_t: jax.Array,
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """Single-token SSD recurrence (the decode fast path).
+
+    h: [B,H,P,N] (f32); x_t: [B,H,P]; dt_t: [B,H]; B_t/C_t: [B,G,N].
+    Returns (y_t [B,H,P], h_next).  The state h *is* this family's
+    "KV cache": constant size per request — the planner treats it as a
+    fixed page allocation (DESIGN.md §Arch-applicability).
+    """
+    H = x_t.shape[1]
+    G = B_t.shape[1]
+    rep = H // G
+    Bh = jnp.repeat(B_t.astype(jnp.float32), rep, axis=1)   # [B,H,N]
+    Ch = jnp.repeat(C_t.astype(jnp.float32), rep, axis=1)
+    dA = jnp.exp(dt_t.astype(jnp.float32) * A[None, :])     # [B,H]
+    h_next = (h * dA[..., None, None]
+              + dt_t.astype(jnp.float32)[..., None, None]
+              * x_t.astype(jnp.float32)[..., :, None] * Bh[..., None, :])
+    y = jnp.einsum("bhpn,bhn->bhp", h_next, Ch).astype(x_t.dtype)
+    return y, h_next

@@ -1,0 +1,318 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any jax import: jax locks the device
+# count at first backend initialization, and the multi-pod dry-run needs 512
+# placeholder host devices to build the production meshes.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this driver:
+  1. builds the production mesh ((16,16) single-pod / (2,16,16) multi-pod),
+  2. constructs the Strategy (train / crosspool / monolithic),
+  3. lowers the cell's step function against ShapeDtypeStruct inputs
+     (NO real allocation anywhere),
+  4. compiles, printing ``memory_analysis()`` (proves per-device fit) and
+     ``cost_analysis()`` (FLOPs/bytes for §Roofline),
+  5. parses collective bytes from the partitioned HLO,
+  6. emits a JSON record consumed by EXPERIMENTS.md §Dry-run / §Roofline.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-14b --shape decode_32k
+  python -m repro.launch.dryrun --all --multi-pod --out reports/dryrun.json
+"""
+import argparse
+import functools
+import json
+import math
+import time
+import traceback
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import (ARCH_NAMES, SHAPES_BY_NAME, get_config,
+                           shape_applicable)
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.launch import roofline as rf
+from repro.launch.mesh import make_production_mesh, mesh_chip_count
+from repro.models import build_model
+from repro.sharding.strategies import Strategy, make_strategy
+from repro.training.optimizer import AdamW
+from repro.training.train_step import make_train_step, TrainState
+
+SDS = jax.ShapeDtypeStruct
+
+# Gradient-accumulation depth per arch for train_4k (activation-memory
+# lever; tuned against memory_analysis -- see EXPERIMENTS.md §Dry-run).
+TRAIN_MICROBATCHES = {
+    "llama3-405b": 16,
+    "qwen3-moe-235b-a22b": 8,
+    "llava-next-34b": 8,
+    "gemma3-12b": 4,
+    "qwen3-14b": 4,
+    "moonshot-v1-16b-a3b": 4,
+    "minicpm3-4b": 2,
+    "zamba2-1.2b": 2,
+    "mamba2-130m": 1,
+    "whisper-small": 1,
+}
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, SDS]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    B, S = shape.global_batch, shape.seq_len
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    specs: Dict[str, SDS] = {}
+    if shape.kind in ("train", "prefill"):
+        txt = S
+        if cfg.frontend == "vision_patches":
+            txt = S - cfg.frontend_tokens
+            specs["embeddings"] = SDS((B, cfg.frontend_tokens, cfg.d_model), dt)
+        if cfg.family == "audio":
+            specs["encoder_frames"] = SDS((B, cfg.encoder_seq, cfg.d_model), dt)
+        specs["tokens"] = SDS((B, txt), jnp.int32)
+    else:  # decode: one new token against a seq_len-deep cache
+        specs["tokens"] = SDS((B,), jnp.int32)
+        specs["lengths"] = SDS((), jnp.int32)
+    return specs
+
+
+def _spec_shardings(strategy: Strategy, specs: Dict[str, SDS]) -> Dict:
+    out = {}
+    for k, v in specs.items():
+        if k == "lengths":
+            out[k] = strategy.scalar_sharding()
+        else:
+            out[k] = strategy.input_sharding(len(v.shape))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Cell builders: (fn, arg_specs, in_shardings)
+# ---------------------------------------------------------------------------
+
+def build_train_cell(cfg: ModelConfig, shape: ShapeConfig,
+                     strategy: Strategy):
+    model = build_model(cfg)
+    optimizer = AdamW(
+        moment_dtype="bfloat16" if cfg.param_counts()["total"] > 5e10
+        else "float32")
+    mb = strategy.perf.microbatches or TRAIN_MICROBATCHES.get(cfg.name, 1)
+    compress = strategy.perf.compress_grads
+    specs = input_specs(cfg, shape)
+    extra = None
+    if "embeddings" in specs or "encoder_frames" in specs:
+        keys = [k for k in ("embeddings", "encoder_frames") if k in specs]
+        extra = lambda batch: {k: batch[k] for k in keys}
+    step = make_train_step(model, optimizer, hooks=strategy.hooks(),
+                           num_microbatches=mb, remat=True,
+                           compress=compress, extra_inputs=extra)
+
+    params_spec = jax.eval_shape(
+        lambda: model.init(jax.random.PRNGKey(0)))
+    opt_spec = jax.eval_shape(lambda: optimizer.init(params_spec))
+    if compress:
+        from repro.training import compression
+        ef_spec = jax.eval_shape(
+            lambda: compression.init_error_feedback(params_spec))
+    else:
+        ef_spec = None
+    state_spec = TrainState(params_spec, opt_spec, ef_spec)
+
+    p_sh = strategy.params_shardings(params_spec)
+    mesh = strategy.mesh
+    opt_sh = type(opt_spec)(
+        count=NamedSharding(mesh, P()),
+        m=strategy.params_shardings(params_spec),
+        v=strategy.params_shardings(params_spec),
+    )
+    ef_sh = strategy.params_shardings(params_spec) if compress else None
+    state_sh = TrainState(p_sh, opt_sh, ef_sh)
+    batch_spec = dict(specs)
+    batch_sh = _spec_shardings(strategy, specs)
+    # donate the train state: params/m/v buffers alias their updates —
+    # without this the step holds two copies of every 405B-param tensor
+    jitted = jax.jit(step, in_shardings=(state_sh, batch_sh),
+                     out_shardings=(state_sh, None), donate_argnums=(0,))
+    return jitted, (state_spec, batch_spec)
+
+
+def build_serve_cell(cfg: ModelConfig, shape: ShapeConfig,
+                     strategy: Strategy):
+    """decode shapes -> serve_step (one token, seq_len-deep cache);
+    prefill shapes -> prefill (seed the cache + first logits)."""
+    model = build_model(cfg)
+    hooks = strategy.hooks()
+    mesh = strategy.mesh
+    B, S = shape.global_batch, shape.seq_len
+
+    params_spec = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    p_sh = strategy.params_shardings(params_spec)
+    cache_spec = model.cache_specs(B, S, kv_dtype=strategy.perf.kv_dtype)
+    c_sh = strategy.cache_shardings(cache_spec)
+    specs = input_specs(cfg, shape)
+    in_sh = _spec_shardings(strategy, specs)
+
+    if shape.is_decode:
+        def serve_step(params, tokens, cache, lengths):
+            logits, cache = model.decode_step(params, tokens, cache, lengths,
+                                              hooks=hooks)
+            return jnp.argmax(logits, -1).astype(jnp.int32), cache
+
+        # donate the KV cache: the updated cache aliases the old buffers
+        jitted = jax.jit(
+            serve_step,
+            in_shardings=(p_sh, in_sh["tokens"], c_sh, in_sh["lengths"]),
+            out_shardings=(strategy.input_sharding(1), c_sh),
+            donate_argnums=(2,))
+        arg_specs = (params_spec, specs["tokens"], cache_spec,
+                     specs["lengths"])
+        return jitted, arg_specs
+
+    # prefill
+    extra_keys = [k for k in ("embeddings", "encoder_frames") if k in specs]
+
+    def prefill_fn(params, tokens, cache, *extra):
+        kw = dict(zip(extra_keys, extra))
+        logits, cache = model.prefill(params, tokens, cache, hooks=hooks,
+                                      **kw)
+        return jnp.argmax(logits, -1).astype(jnp.int32), cache
+
+    jitted = jax.jit(
+        prefill_fn,
+        in_shardings=(p_sh, in_sh["tokens"], c_sh,
+                      *[in_sh[k] for k in extra_keys]),
+        out_shardings=(strategy.input_sharding(1), c_sh),
+        donate_argnums=(2,))
+    arg_specs = (params_spec, specs["tokens"], cache_spec,
+                 *[specs[k] for k in extra_keys])
+    return jitted, arg_specs
+
+
+# ---------------------------------------------------------------------------
+# Runner
+# ---------------------------------------------------------------------------
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             strategy_name: str = "auto", verbose: bool = True,
+             perf=None) -> Dict:
+    cfg = get_config(arch)
+    shape = SHAPES_BY_NAME[shape_name]
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    record: Dict = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                    "strategy": strategy_name, "ok": False}
+
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        record.update(skipped=True, reason=why)
+        if verbose:
+            print(f"[skip] {arch} x {shape_name}: {why}")
+        return record
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    strategy = make_strategy(strategy_name, mesh, cfg, shape, perf=perf)
+    record["strategy"] = strategy.name
+    if perf is not None:
+        record["perf"] = {k: v for k, v in vars(perf).items()
+                          if v not in (None, False)}
+
+    t0 = time.time()
+    with mesh:
+        if shape.kind == "train":
+            jitted, arg_specs = build_train_cell(cfg, shape, strategy)
+        else:
+            jitted, arg_specs = build_serve_cell(cfg, shape, strategy)
+        lowered = jitted.lower(*arg_specs)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+
+    chips = mesh_chip_count(mesh)
+    mb = 1
+    if shape.kind == "train":
+        mb = (perf.microbatches if perf and perf.microbatches
+              else TRAIN_MICROBATCHES.get(arch, 1))
+    kv_item = 1 if (perf and perf.kv_dtype == "f8") else 2
+    report = rf.build_report(arch=arch, shape=shape, mesh_name=mesh_name,
+                             strategy=strategy.name, chips=chips,
+                             cost=cost, hlo_text=hlo, cfg=cfg,
+                             microbatches=mb, kv_itemsize=kv_item)
+    record.update(
+        ok=True,
+        lower_s=round(t_lower, 1), compile_s=round(t_compile, 1),
+        memory={
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "code_bytes": getattr(mem, "generated_code_size_in_bytes", None),
+        },
+        roofline=report.to_dict(),
+    )
+    if verbose:
+        m = record["memory"]
+        arg_gb = (m["argument_bytes"] or 0) / 2 ** 30
+        tmp_gb = (m["temp_bytes"] or 0) / 2 ** 30
+        r = record["roofline"]
+        print(f"[ok] {arch} x {shape_name} x {mesh_name} ({strategy.name}) "
+              f"lower {t_lower:.0f}s compile {t_compile:.0f}s | "
+              f"args {arg_gb:.2f} GiB temp {tmp_gb:.2f} GiB /dev | "
+              f"compute {r['t_compute']:.3e}s memory {r['t_memory']:.3e}s "
+              f"collective {r['t_collective']:.3e}s -> {r['dominant']}")
+    return record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list(ARCH_NAMES))
+    ap.add_argument("--shape", choices=list(SHAPES_BY_NAME))
+    ap.add_argument("--strategy", default="auto",
+                    choices=["auto", "train", "crosspool", "monolithic"])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="sweep every (arch x shape) cell")
+    ap.add_argument("--out", default=None, help="append JSON records here")
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for arch in ARCH_NAMES:
+            for shape in SHAPES_BY_NAME:
+                cells.append((arch, shape))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    records = []
+    failures = 0
+    for arch, shape in cells:
+        try:
+            rec = run_cell(arch, shape, multi_pod=args.multi_pod,
+                           strategy_name=args.strategy)
+        except Exception as e:  # a failing cell is a bug in our system
+            failures += 1
+            rec = {"arch": arch, "shape": shape, "ok": False,
+                   "mesh": "pod2x16x16" if args.multi_pod else "pod16x16",
+                   "error": f"{type(e).__name__}: {e}",
+                   "trace": traceback.format_exc()[-2000:]}
+            print(f"[FAIL] {arch} x {shape}: {type(e).__name__}: {e}")
+        records.append(rec)
+        if args.out:
+            with open(args.out, "a") as f:
+                f.write(json.dumps(rec) + "\n")
+
+    n_ok = sum(1 for r in records if r.get("ok"))
+    n_skip = sum(1 for r in records if r.get("skipped"))
+    print(f"\n== dry-run: {n_ok} ok, {n_skip} skipped, {failures} failed, "
+          f"{len(records)} total ==")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,231 @@
+"""Structural HLO analysis with loop-aware execution counts.
+
+XLA's ``cost_analysis()`` counts every computation body ONCE — a
+scan-over-layers while body is tallied as a single layer (verified
+empirically on this backend; see EXPERIMENTS.md §Methodology).  This module
+re-derives per-module totals by parsing the post-partitioning HLO text:
+
+  * builds a symbol table of result shapes per computation,
+  * attributes dot FLOPs (2 * |result| * contraction) per computation,
+  * finds while ops and their body computations, assigns each body an
+    execution count = parent count x trip count, where trip counts come
+    from the KNOWN program structure (scan lengths: layers, microbatches,
+    groups) supplied by the caller as a per-depth list,
+  * sums collective payload bytes with the same counts.
+
+Elementwise/reduce FLOPs are ignored (matmul-dominated workloads) and
+fusion-internal dots are attributed to the computation containing the
+fusion — both noted as methodology caveats.
+"""
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?(%[\w.\-]+)\s*=\s*(.*)$")
+_COMP_RE = re.compile(r"^(ENTRY\s+)?(%[\w.\-]+)\s*(?:\([^)]*\))?.*\{\s*$")
+_CALLEE_RE = re.compile(r"(?:body|to_apply|branch_computations|"
+                        r"called_computations|condition)=\{?(%[\w.\-]+)")
+_BODY_RE = re.compile(r"body=(%[\w.\-]+)")
+_CALLS_RE = re.compile(r"calls=(%[\w.\-]+)")
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_dims(tok: str) -> Tuple[str, List[int]]:
+    m = _SHAPE_RE.match(tok)
+    if not m:
+        return "f32", []
+    dt, dims = m.groups()
+    return dt, [int(d) for d in dims.split(",") if d]
+
+
+def _first_shape(text: str) -> Optional[str]:
+    m = _SHAPE_RE.search(text)
+    return m.group(0) if m else None
+
+
+@dataclass
+class Computation:
+    name: str
+    is_entry: bool = False
+    shapes: Dict[str, Tuple[str, List[int]]] = field(default_factory=dict)
+    dot_flops: float = 0.0
+    collectives: Dict[str, int] = field(default_factory=dict)
+    coll_count: int = 0
+    # (body comp name, known trip count or None)
+    whiles: List[Tuple[str, Optional[int]]] = field(default_factory=list)
+    calls: List[str] = field(default_factory=list)      # fusions/calls
+    conds: List[str] = field(default_factory=list)      # while conditions
+
+
+_COMMENT_RE = re.compile(r"/\*.*?\*/")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+
+
+def parse_module(hlo: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for raw in hlo.splitlines():
+        raw = _COMMENT_RE.sub("", raw)          # strip /*index=N*/ comments
+        mc = _COMP_RE.match(raw)
+        if mc and "=" not in raw.split("{")[0]:
+            cur = Computation(mc.group(2), is_entry=bool(mc.group(1)))
+            comps[cur.name] = cur
+            continue
+        if raw.startswith("}"):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        md = _DEF_RE.match(raw)
+        if not md:
+            continue
+        name, rhs = md.groups()
+        shape_tok = _first_shape(rhs)
+        if shape_tok:
+            cur.shapes[name] = _shape_dims(shape_tok)
+
+        if " dot(" in rhs or rhs.startswith("dot("):
+            cur.dot_flops += _dot_flops(rhs, cur.shapes)
+        for kind in _COLLECTIVES:
+            if f" {kind}(" in rhs:
+                dt, dims = _shape_dims(shape_tok or "f32[]")
+                nbytes = _DTYPE_BYTES.get(dt, 4) * math.prod(dims or [0])
+                cur.collectives[kind] = cur.collectives.get(kind, 0) + nbytes
+                cur.coll_count += 1
+                break
+        mw = _BODY_RE.search(rhs)
+        if mw and " while(" in rhs:
+            mt = _TRIP_RE.search(rhs)
+            cur.whiles.append((mw.group(1),
+                               int(mt.group(1)) if mt else None))
+        mcall = _CALLS_RE.search(rhs)
+        if mcall:
+            cur.calls.append(mcall.group(1))
+        for m in re.finditer(r"to_apply=(%[\w.\-]+)", rhs):
+            cur.calls.append(m.group(1))
+        for m in re.finditer(r"condition=(%[\w.\-]+)", rhs):
+            cur.conds.append(m.group(1))
+    return comps
+
+
+def _dot_flops(rhs: str, shapes: Dict[str, Tuple[str, List[int]]]) -> float:
+    """2 * |result| * K for one dot line."""
+    shape_tok = _first_shape(rhs)
+    if not shape_tok:
+        return 0.0
+    _, result_dims = _shape_dims(shape_tok)
+    # operands
+    args = re.findall(r"dot\(([^)]*)\)", rhs)
+    if not args:
+        return 0.0
+    operands = [a.strip() for a in args[0].split(",")]
+    lhs_name = operands[0] if operands else None
+    lhs = shapes.get(lhs_name)
+    mcon = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", rhs)
+    if lhs and mcon:
+        k = 1
+        for d in mcon.group(1).split(","):
+            if d and int(d) < len(lhs[1]):
+                k *= lhs[1][int(d)]
+    else:
+        k = 1
+    return 2.0 * math.prod(result_dims or [1]) * k
+
+
+@dataclass
+class ModuleStats:
+    flops: float
+    collective_bytes: Dict[str, int]
+    collective_total: int
+    coll_count: int
+
+
+def analyze(hlo: str, depth_trips: List[int]) -> ModuleStats:
+    """Walk from ENTRY, assigning execution counts.
+
+    ``depth_trips[d]`` = trip count of while loops at nesting depth d
+    (depth 0 = whiles in ENTRY).  Deeper loops than provided reuse the last
+    entry.  Fusions/calls inherit their caller's count.
+    """
+    comps = parse_module(hlo)
+    entry = next((c for c in comps.values() if c.is_entry), None)
+    if entry is None:
+        # scheduled SPMD modules print no ENTRY prefix: the entry is the
+        # computation no other computation references
+        referenced = set()
+        for c in comps.values():
+            referenced.update(b for b, _ in c.whiles)
+            referenced.update(c.calls)
+            referenced.update(c.conds)
+        roots = [c for c in comps.values() if c.name not in referenced]
+        entry = max(roots, key=lambda c: len(c.shapes), default=None)
+    if entry is None:
+        return ModuleStats(0.0, {}, 0, 0)
+
+    counts: Dict[str, float] = {}
+
+    def visit(comp: Computation, count: float, depth: int):
+        counts[comp.name] = counts.get(comp.name, 0.0) + count
+        for body, known_trips in comp.whiles:
+            if known_trips is not None:
+                trips = known_trips           # exact, from backend_config
+            elif depth_trips:
+                trips = depth_trips[min(depth, len(depth_trips) - 1)]
+            else:
+                trips = 1
+            if body in comps:
+                visit(comps[body], count * trips, depth + 1)
+        for callee in comp.calls:
+            if callee in comps:
+                visit(comps[callee], count, depth)
+
+    visit(entry, 1.0, 0)
+
+    flops = 0.0
+    coll: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    n_coll = 0
+    for name, comp in comps.items():
+        c = counts.get(name, 0.0)
+        if c == 0.0:
+            continue
+        flops += comp.dot_flops * c
+        for kind, b in comp.collectives.items():
+            coll[kind] += int(b * c)
+        n_coll += int(comp.coll_count * c)
+    return ModuleStats(flops, coll, sum(coll.values()), n_coll)
+
+
+def depth_trips_for(cfg, shape, microbatches: int = 1) -> List[int]:
+    """Per-depth while trip counts from the KNOWN program structure."""
+    fam = cfg.family
+    if fam == "hybrid":
+        inner = [max(cfg.hybrid_groups + (1 if cfg.tail_ssm_layers else 0), 1),
+                 max(cfg.ssm_per_group, 1)]
+    elif cfg.swa_pattern > 0:
+        inner = [max(cfg.n_layers // cfg.swa_pattern, 1),
+                 max(cfg.swa_pattern - 1, 1)]
+    elif fam == "audio":
+        # encoder + decoder scans sit at the same depth; average trip
+        inner = [max((cfg.n_encoder_layers + cfg.n_layers) // 2, 1)]
+    else:
+        inner = [max(cfg.n_layers, 1)]
+    # SSD chunked scan adds one more while level on full-sequence paths
+    if fam in ("ssm", "hybrid") and shape.kind in ("train", "prefill"):
+        seq = shape.seq_len
+        chunk = next((c for c in (256, 128, 64, 32, 16, 8, 4, 2, 1)
+                      if c <= seq and seq % c == 0), 1)
+        inner = inner + [max(seq // chunk, 1)]
+    if shape.kind == "train" and microbatches > 1:
+        return [microbatches] + inner
+    return inner

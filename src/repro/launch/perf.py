@@ -1,0 +1,90 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Perf hillclimb driver: baseline + named variants for one cell.
+
+Each variant re-lowers the cell with different Strategy/PerfOpts knobs and
+reports the three roofline terms + per-device memory, appending JSONL for
+EXPERIMENTS.md §Perf.
+
+  python -m repro.launch.perf --cell llama3-405b:train_4k \
+      --variants baseline,seq_parallel,mb32,mb32+sp,compress
+"""
+import argparse
+import json
+from typing import Dict, Optional
+
+from repro.launch import dryrun
+from repro.sharding.strategies import PerfOpts
+
+VARIANTS: Dict[str, Dict] = {
+    "baseline": {},
+    "seq_parallel": {"perf": PerfOpts(seq_parallel=True)},
+    "compress": {"perf": PerfOpts(compress_grads=True)},
+    "sp+compress": {"perf": PerfOpts(seq_parallel=True, compress_grads=True)},
+    "mb16": {"perf": PerfOpts(microbatches=16)},
+    "mb8": {"perf": PerfOpts(microbatches=8)},
+    "mb4": {"perf": PerfOpts(microbatches=4)},
+    "mb32": {"perf": PerfOpts(microbatches=32)},
+    "mb64": {"perf": PerfOpts(microbatches=64)},
+    "mb32+sp": {"perf": PerfOpts(microbatches=32, seq_parallel=True)},
+    "mb64+sp": {"perf": PerfOpts(microbatches=64, seq_parallel=True)},
+    "mb64+sp+compress": {"perf": PerfOpts(microbatches=64, seq_parallel=True,
+                                          compress_grads=True)},
+    "monolithic": {"strategy_name": "monolithic"},
+    "kv_model": {"perf": PerfOpts(kv_seq_override=("model",))},
+    "kv_data_model": {"perf": PerfOpts(kv_seq_override=("data", "model"))},
+    "moe_a2a": {"perf": PerfOpts(moe_a2a=True)},
+    "kv_f8": {"perf": PerfOpts(kv_dtype="f8")},
+    "moe_a2a+kv_f8": {"perf": PerfOpts(moe_a2a=True, kv_dtype="f8")},
+    "a2a+mb16": {"perf": PerfOpts(moe_a2a=True, microbatches=16)},
+    "a2a+mb16+f8d": {"perf": PerfOpts(moe_a2a=True, microbatches=16,
+                                      f8_dispatch=True)},
+    "a2a+f8d+kv_f8": {"perf": PerfOpts(moe_a2a=True, f8_dispatch=True,
+                                       kv_dtype="f8")},
+    "a2a+sp": {"perf": PerfOpts(moe_a2a=True, seq_parallel=True)},
+    "a2a+sp+compress": {"perf": PerfOpts(moe_a2a=True, seq_parallel=True,
+                                         compress_grads=True)},
+}
+
+
+def run_variant(arch: str, shape: str, name: str, *, multi_pod: bool,
+                out: Optional[str]) -> Dict:
+    kw = dict(VARIANTS[name])
+    rec = dryrun.run_cell(arch, shape, multi_pod=multi_pod,
+                          strategy_name=kw.pop("strategy_name", "auto"),
+                          verbose=False, **kw)
+    rec["variant"] = name
+    if rec.get("ok"):
+        r = rec["roofline"]
+        m = rec["memory"]
+        fit = (m["argument_bytes"] or 0) + (m["temp_bytes"] or 0)
+        print(f"{arch} x {shape} [{name:>18}]: "
+              f"compute {r['t_compute']:.3e}  memory {r['t_memory']:.3e}  "
+              f"collective {r['t_collective']:.3e}  -> {r['dominant']:>10} | "
+              f"hbm {fit / 2 ** 30:5.1f} GiB/dev | "
+              f"frac {r['roofline_fraction'] * 100:5.1f}%")
+    else:
+        print(f"{arch} x {shape} [{name:>18}]: FAIL "
+              f"{rec.get('error', rec.get('reason', ''))[:100]}")
+    if out:
+        with open(out, "a") as f:
+            f.write(json.dumps(rec) + "\n")
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=True, help="arch:shape")
+    ap.add_argument("--variants", default="baseline")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default="reports/perf.jsonl")
+    args = ap.parse_args()
+    arch, shape = args.cell.split(":")
+    for name in args.variants.split(","):
+        run_variant(arch, shape, name.strip(), multi_pod=args.multi_pod,
+                    out=args.out)
+
+
+if __name__ == "__main__":
+    main()

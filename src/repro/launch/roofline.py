@@ -1,0 +1,294 @@
+"""Roofline derivation from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), in seconds (TPU v5e constants):
+
+  compute    = HLO_FLOPs_per_device / peak_FLOP/s
+  memory     = HLO_bytes_per_device / HBM_bw
+  collective = collective_bytes_per_device / link_bw
+
+FLOPs/bytes come from ``compiled.cost_analysis()`` (per-device on the
+partitioned module).  Collective bytes are NOT in cost_analysis: we parse
+the post-partitioning HLO text and sum the result-shape bytes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+instance (per-device payload; ring-algorithm wire bytes are ~(n-1)/n of
+this, so the term is a slight over-estimate — consistent across cells).
+"""
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "tuple": 0, "token": 0,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# matches e.g.  "bf16[16,4096]{1,0} all-gather(" including tuple shapes
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Bytes of one shape token like 'bf16[16,4096]'."""
+    m = _SHAPE_RE.match(shape_str)
+    if not m:
+        return 0
+    dt, dims = m.groups()
+    nbytes = _DTYPE_BYTES.get(dt, 4)
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * nbytes
+
+
+def collective_bytes(hlo_text: str, loop_factor: int = 1) -> Dict[str, int]:
+    """Sum result-shape bytes per collective kind over the whole module.
+
+    XLA cost analysis (and a naive text scan) counts a while-loop body ONCE,
+    but a scan-over-layers body executes ``loop_factor`` times.  Collectives
+    in non-ENTRY computations (loop bodies) are therefore multiplied by
+    ``loop_factor``; ENTRY-level collectives (e.g. the post-accumulation
+    gradient reduction) count once.
+    """
+    out = {k: 0 for k in _COLLECTIVES}
+    out["count"] = 0
+    in_entry = False
+    for raw in hlo_text.splitlines():
+        line = raw.strip()
+        if raw.startswith("ENTRY"):
+            in_entry = True
+            continue
+        if raw.startswith("}"):
+            in_entry = False
+            continue
+        for kind in _COLLECTIVES:
+            marker = f" {kind}("
+            if marker not in line or "=" not in line:
+                continue
+            lhs, rhs = line.split("=", 1)
+            rhs = rhs.strip()
+            # result shape(s) precede the op name
+            head = rhs.split(marker)[0].strip()
+            total = 0
+            for m in _SHAPE_RE.finditer(head):
+                total += _shape_bytes(m.group(0))
+            scale = 1 if in_entry else loop_factor
+            out[kind] += total * scale
+            out["count"] += 1
+            break
+    return out
+
+
+@dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    strategy: str
+    chips: int
+    flops_per_device: float
+    bytes_per_device: float                  # HLO 'bytes accessed' (raw)
+    bytes_model: float                       # analytic minimum HBM traffic
+    collective_per_device: float
+    collective_breakdown: Dict[str, int]
+    model_flops: float                       # 6*N*D (or active) for train;
+    #                                          2*N_active*tokens for serving
+    peak_flops: float = PEAK_FLOPS_BF16
+    hbm_bw: float = HBM_BW
+    link_bw: float = ICI_BW
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_device / self.peak_flops
+
+    @property
+    def t_memory_hlo(self) -> float:
+        return self.bytes_per_device / self.hbm_bw
+
+    @property
+    def t_memory(self) -> float:
+        """Memory term: analytic minimum traffic (weights + KV + optimizer
+        + activations actually touched per step, per device).  The HLO
+        'bytes accessed' number is reported alongside but its loop/fusion
+        accounting on this backend is unreliable for ranking."""
+        return self.bytes_model / self.hbm_bw
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_per_device / self.link_bw
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_time(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / total compiled FLOPs — remat/redundancy waste."""
+        total = self.flops_per_device * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the bound term that is useful model compute —
+        (model_flops/chips/peak) / bound_time."""
+        if self.bound_time == 0:
+            return 0.0
+        ideal = self.model_flops / self.chips / self.peak_flops
+        return ideal / self.bound_time
+
+    def to_dict(self) -> Dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "strategy": self.strategy, "chips": self.chips,
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "bytes_model": self.bytes_model,
+            "collective_per_device": self.collective_per_device,
+            "collective_breakdown": self.collective_breakdown,
+            "t_compute": self.t_compute, "t_memory": self.t_memory,
+            "t_memory_hlo": self.t_memory_hlo,
+            "t_collective": self.t_collective, "dominant": self.dominant,
+            "model_flops": self.model_flops,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def model_flops_estimate(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """Useful FLOPs per executed step.
+
+    train: 6 * N_active * tokens  (fwd 2ND + bwd 4ND)
+    prefill: 2 * N_active * tokens (+ attention quadratic term)
+    decode: 2 * N_active * batch (one token each) + attention context reads
+    """
+    n_active = cfg.active_param_counts()
+    tokens = shape.global_batch * shape.seq_len
+    if shape.kind == "train":
+        base = 6.0 * n_active * tokens
+    elif shape.kind == "prefill":
+        base = 2.0 * n_active * tokens
+        # causal attention score+value FLOPs: 2 * 2 * B * S^2/2 * H * hd
+        if not cfg.attn_free:
+            base += (2.0 * shape.global_batch * shape.seq_len ** 2 / 2
+                     * cfg.n_heads * cfg.head_dim * 2)
+    else:  # decode: one token per sequence
+        base = 2.0 * n_active * shape.global_batch
+        if not cfg.attn_free:
+            base += (4.0 * shape.global_batch * shape.seq_len
+                     * cfg.n_heads * cfg.head_dim)
+    return base
+
+
+def analytic_bytes_estimate(cfg: ModelConfig, shape: ShapeConfig,
+                            chips: int, microbatches: int = 1,
+                            kv_itemsize: int = 2) -> float:
+    """Minimum per-device HBM traffic per executed step (napkin math).
+
+    decode : active weights read once + full KV cache read + 1-token write
+    prefill: weights + KV written + O(tokens*d) activation traffic
+    train  : weights read fwd+bwd (2x2B) + f32 grads written (4B) + AdamW
+             state read+write (m,v: 2x2xmb) + params update (2x2B)
+             + saved scan carries (remat: one [B,S,D] per layer per mb)
+    All divided by ``chips`` (weights/KV/activations are all sharded over
+    the mesh under every strategy used here).
+    """
+    n_active = cfg.active_param_counts()
+    n_total = cfg.param_counts()["total"]
+    B, S = shape.global_batch, shape.seq_len
+    kappa = cfg.kv_bytes_per_token() * kv_itemsize / 2
+    state = cfg.state_bytes_per_request()
+
+    if shape.kind == "decode":
+        # SWA archs only keep window-KV on local layers
+        if cfg.swa_pattern > 0:
+            g = cfg.n_global_attn_layers
+            loc = cfg.n_layers - g
+            per_layer = kappa / max(cfg.n_decoder_attn_layers, 1)
+            kv = B * (g * S + loc * min(cfg.sliding_window, S)) * per_layer
+        else:
+            kv = B * S * kappa
+        # weight read: non-FFN fully + DISTINCT experts for MoE
+        counts = cfg.param_counts()
+        w = (counts["total"] - counts["ffn"]) * 2
+        if cfg.is_moe:
+            expert_bytes = 3 * cfg.d_model * cfg.d_ff * 2
+            distinct = min(cfg.n_experts, B * cfg.experts_per_token) \
+                + cfg.n_shared_experts
+            w += cfg.n_layers * distinct * expert_bytes
+        else:
+            w += counts["ffn"] * 2
+        return (w + kv + B * state) / chips
+
+    if shape.kind == "prefill":
+        kv = B * S * kappa
+        act = B * S * cfg.d_model * 2 * cfg.n_layers * 4
+        return (2 * n_active + kv + act) / chips
+
+    # train
+    mdt = 2 if n_total > 5e10 else 4          # moment dtype bytes
+    weights = 2 * n_total * 2                 # fwd + bwd reads (bf16)
+    grads = 4 * n_total                       # f32 grad write
+    opt = n_total * (2 * 2 * mdt + 2 * 2)     # m,v r/w + param r/w
+    carries = B * S * cfg.d_model * 2 * cfg.n_layers  # remat-saved inputs
+    act = B * S * cfg.d_model * 2 * cfg.n_layers * 6  # recompute traffic
+    return (weights * max(microbatches, 1) + grads + opt + carries + act) \
+        / chips
+
+
+def trip_factor(cfg: ModelConfig, shape: ShapeConfig,
+                microbatches: int = 1) -> int:
+    """How many times the dominant scan body executes per step.
+
+    XLA cost analysis counts while bodies once; the per-layer scan body runs
+    L times (enc+dec for whisper), and the gradient-accumulation scan
+    multiplies by ``microbatches`` for train cells.  Nested structures
+    (gemma3 groups, zamba2 hybrid) still total ~n_layers body executions.
+    """
+    L = cfg.n_layers
+    if cfg.family == "audio":
+        L += cfg.n_encoder_layers
+    if shape.kind == "train":
+        L *= max(microbatches, 1)
+    return max(L, 1)
+
+
+def build_report(*, arch: str, shape: ShapeConfig, mesh_name: str,
+                 strategy: str, chips: int, cost: Dict, hlo_text: str,
+                 cfg: ModelConfig, microbatches: int = 1,
+                 kv_itemsize: int = 2) -> RooflineReport:
+    """FLOPs + collective bytes via loop-aware HLO parsing (hlo_analysis);
+    raw cost_analysis values are kept for reference.  XLA counts while
+    bodies once (verified empirically), so the parser multiplies every
+    computation by its execution count derived from the known scan
+    structure."""
+    from repro.launch import hlo_analysis as ha
+    trips = ha.depth_trips_for(cfg, shape, microbatches)
+    stats = ha.analyze(hlo_text, trips)
+    coll = dict(stats.collective_bytes)
+    coll["count"] = stats.coll_count
+    return RooflineReport(
+        arch=arch, shape=shape.name, mesh=mesh_name, strategy=strategy,
+        chips=chips,
+        flops_per_device=stats.flops,
+        bytes_per_device=float(cost.get("bytes accessed", 0.0)),
+        bytes_model=analytic_bytes_estimate(cfg, shape, chips, microbatches,
+                                            kv_itemsize),
+        collective_per_device=float(stats.collective_total),
+        collective_breakdown=coll,
+        model_flops=model_flops_estimate(cfg, shape),
+    )

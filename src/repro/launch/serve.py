@@ -1,0 +1,69 @@
+"""Serving launcher: the CrossPool engine over colocated cold models.
+
+  python -m repro.launch.serve --rps 0.5 --horizon 20 --pipeline --lowering
+  python -m repro.launch.serve --arch qwen3-14b --shape decode_32k --dry-run
+
+Host-scale runs colocate the paper's model trio at smoke scale and report
+decode TBT percentiles + pool statistics; --dry-run lowers the production
+serve_step for an (arch x shape) cell instead.
+"""
+from __future__ import annotations
+
+import argparse
+from typing import Optional
+
+
+def main(argv: Optional[list] = None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="dry-run arch")
+    ap.add_argument("--shape", default="decode_32k")
+    ap.add_argument("--strategy", default="crosspool",
+                    choices=["crosspool", "monolithic"])
+    ap.add_argument("--dry-run", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    # engine options
+    ap.add_argument("--rps", type=float, default=0.5)
+    ap.add_argument("--horizon", type=float, default=10.0)
+    ap.add_argument("--pipeline", action="store_true", default=True)
+    ap.add_argument("--no-pipeline", dest="pipeline", action="store_false")
+    ap.add_argument("--lowering", action="store_true", default=True)
+    ap.add_argument("--no-lowering", dest="lowering", action="store_false")
+    ap.add_argument("--page-budget", type=int, default=8192)
+    ap.add_argument("--max-new", type=int, default=8)
+    args = ap.parse_args(argv)
+
+    if args.dry_run:
+        from repro.launch import dryrun
+        assert args.arch, "--arch required with --dry-run"
+        rec = dryrun.run_cell(args.arch, args.shape,
+                              multi_pod=args.multi_pod,
+                              strategy_name=args.strategy)
+        raise SystemExit(0 if rec.get("ok") else 1)
+
+    from repro.configs import PAPER_COLOC_SET, get_smoke_config
+    from repro.runtime import trace as trace_mod
+    from repro.runtime.engine import CrossPoolEngine, EngineMode
+    from repro.runtime.request import percentile
+
+    models = {n: get_smoke_config(n) for n in PAPER_COLOC_SET}
+    engine = CrossPoolEngine(
+        models, page_budget=args.page_budget, max_batch=4, max_ctx=128,
+        mode=EngineMode(pipeline=args.pipeline, lowering=args.lowering))
+    reqs = trace_mod.make_requests(
+        list(models), rps_per_model=args.rps, horizon_s=args.horizon,
+        kind="sharegpt", scale_tokens=0.1, max_new_cap=args.max_new)
+    print(f"serving {len(reqs)} requests across {len(models)} cold models "
+          f"(pipeline={args.pipeline}, lowering={args.lowering})")
+    stats = engine.run(reqs)
+    print(f"tokens out: {stats.tokens_out}  virtual wall: {stats.wall_s:.2f}s "
+          f"throughput: {stats.throughput:.1f} tok/s")
+    print(f"TBT p50/p95/p99: {percentile(stats.tbt, 50) * 1e3:.1f} / "
+          f"{percentile(stats.tbt, 95) * 1e3:.1f} / "
+          f"{percentile(stats.tbt, 99) * 1e3:.1f} ms")
+    print(f"admission: {engine.admission.stats}")
+    print(f"pool: {engine.virt.utilization()}")
+    print(f"straggler steps flagged: {stats.slow_steps}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""Pure-JAX model zoo: dense / MoE / MLA / SSM / hybrid / enc-dec backbones.
+
+Public entry point: :func:`repro.models.model.build_model`.
+"""
+from repro.models.model import Model, build_model  # noqa: F401

@@ -1,0 +1,443 @@
+"""Decode-side programs: cache init, prefill (cache seeding), one-token step.
+
+The cache pytrees defined here are exactly the objects the CrossPool
+KV-cache pool holds; their per-layer layouts are what ``hooks.kv`` shards.
+
+Cache layouts (T = max context length in the cache):
+  gqa dense/moe/vlm : {"k","v": [L,B,T,KV,hd]}
+  mla               : {"latent": [L,B,T,r], "rope": [L,B,T,rp]}
+  gemma3 swa        : local ring  {"lk","lv": [G,P-1,B,W,KV,hd], "lpos": [G,P-1,B,W]}
+                      global full {"gk","gv": [G,B,T,KV,hd]}
+  ssm               : {"h": [L,B,H,Ph,N] f32, "conv": [L,B,Wc-1,conv]}
+  hybrid            : ssm stacks + shared-attn {"k","v": [G,B,T,KV,hd]}
+  audio             : self {"k","v": [L,B,T,KV,hd]} + static cross
+                      {"ck","cv": [L,B,Tenc,KV,hd]}
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import layers, moe as moe_mod, ssm as ssm_mod
+from repro.models import transformer as tfm
+from repro.models.hooks import Hooks, IDENTITY_HOOKS
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# Cache construction
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               kv_dtype: Optional[str] = None) -> Dict:
+    """``kv_dtype``: None = model dtype; "f8" = fp8-e4m3 KV (halves cache
+    memory + per-step KV read bytes; dequantized on-chip at attention)."""
+    if kv_dtype == "f8":
+        dt = jnp.float8_e4m3fn
+    elif kv_dtype is not None:
+        dt = jnp.dtype(kv_dtype)
+    else:
+        dt = _dtype(cfg)
+    fam = cfg.family
+    L, KV, hd = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
+
+    if fam in ("dense", "vlm", "moe"):
+        if cfg.attention == "mla":
+            m = cfg.mla
+            return {
+                "latent": jnp.zeros((L, batch, max_len, m.kv_lora_rank), dt),
+                "rope": jnp.zeros((L, batch, max_len, m.qk_rope_head_dim), dt),
+            }
+        if cfg.swa_pattern > 0:
+            G = cfg.n_layers // cfg.swa_pattern
+            P = cfg.swa_pattern
+            W = min(cfg.sliding_window, max_len)
+            return {
+                "lk": jnp.zeros((G, P - 1, batch, W, KV, hd), dt),
+                "lv": jnp.zeros((G, P - 1, batch, W, KV, hd), dt),
+                "lpos": jnp.full((G, P - 1, batch, W), -1, jnp.int32),
+                "gk": jnp.zeros((G, batch, max_len, KV, hd), dt),
+                "gv": jnp.zeros((G, batch, max_len, KV, hd), dt),
+            }
+        return {
+            "k": jnp.zeros((L, batch, max_len, KV, hd), dt),
+            "v": jnp.zeros((L, batch, max_len, KV, hd), dt),
+        }
+
+    if fam == "ssm":
+        st = ssm_mod.init_ssm_state(cfg, batch)
+        return {
+            "h": jnp.zeros((L,) + st["h"].shape, st["h"].dtype),
+            "conv": jnp.zeros((L,) + st["conv"].shape, st["conv"].dtype),
+        }
+
+    if fam == "hybrid":
+        st = ssm_mod.init_ssm_state(cfg, batch)
+        G = cfg.hybrid_groups
+        n_ssm = G * cfg.ssm_per_group
+        c: Dict = {
+            "h": jnp.zeros((n_ssm,) + st["h"].shape, st["h"].dtype),
+            "conv": jnp.zeros((n_ssm,) + st["conv"].shape, st["conv"].dtype),
+            "k": jnp.zeros((G, batch, max_len, KV, hd), dt),
+            "v": jnp.zeros((G, batch, max_len, KV, hd), dt),
+        }
+        if cfg.tail_ssm_layers:
+            c["tail_h"] = jnp.zeros((cfg.tail_ssm_layers,) + st["h"].shape,
+                                    st["h"].dtype)
+            c["tail_conv"] = jnp.zeros((cfg.tail_ssm_layers,) + st["conv"].shape,
+                                       st["conv"].dtype)
+        return c
+
+    if fam == "audio":
+        return {
+            "k": jnp.zeros((L, batch, max_len, KV, hd), dt),
+            "v": jnp.zeros((L, batch, max_len, KV, hd), dt),
+            "ck": jnp.zeros((L, batch, cfg.encoder_seq, KV, hd), dt),
+            "cv": jnp.zeros((L, batch, cfg.encoder_seq, KV, hd), dt),
+        }
+
+    raise ValueError(f"unknown family {fam}")
+
+
+def _seed(cache_layer: jax.Array, new: jax.Array) -> jax.Array:
+    """Write prefill KV [B,S,...] into cache layer [B,T,...] at offset 0."""
+    zeros = (0,) * new.ndim
+    return jax.lax.dynamic_update_slice(cache_layer, new.astype(cache_layer.dtype),
+                                        zeros)
+
+
+# ---------------------------------------------------------------------------
+# Prefill: full-sequence forward that also seeds the decode cache
+# ---------------------------------------------------------------------------
+
+def prefill(params: Dict, cfg: ModelConfig, tokens: jax.Array, cache: Dict, *,
+            embeddings: Optional[jax.Array] = None,
+            encoder_frames: Optional[jax.Array] = None,
+            hooks: Hooks = IDENTITY_HOOKS, impl: str = "xla",
+            logit_index=None,
+            ) -> Tuple[jax.Array, Dict]:
+    """Returns (last-position logits [B,V], seeded cache).
+
+    ``logit_index``: optional traced position whose logits to return instead
+    of the last — used when prompts are right-padded to a bucket length
+    (the engine's anti-recompile path)."""
+    fam = cfg.family
+    B = tokens.shape[0]
+    S = tokens.shape[1] + (embeddings.shape[1] if embeddings is not None else 0)
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    x = tfm.embed_inputs(params, cfg, tokens, embeddings, positions)
+
+    if fam in ("dense", "vlm", "moe"):
+        if cfg.swa_pattern > 0:
+            x, cache = _prefill_swa(params, cfg, x, positions, cache, hooks, impl)
+        elif cfg.attention == "mla":
+            def body(xc, ys):
+                p_l, c_lat, c_rope = ys
+                h = layers.rms_norm(xc, p_l["ln1"], cfg.norm_eps)
+                out, (lat, rp) = attn.mla_full(p_l["attn"], cfg, h, positions,
+                                               hooks=hooks)
+                xc = xc + hooks.act(out)
+                xc, _ = tfm._ffn_full(p_l, cfg, xc, hooks)
+                return xc, (_seed(c_lat, lat), _seed(c_rope, rp))
+            x, (lat, rp) = jax.lax.scan(
+                body, x, (params["layers"], cache["latent"], cache["rope"]))
+            cache = {"latent": lat, "rope": rp}
+        else:
+            def body(xc, ys):
+                p_l, ck, cv = ys
+                xc, (k, v) = tfm._attn_full(p_l, cfg, xc, positions, 0, hooks, impl)
+                xc, _ = tfm._ffn_full(p_l, cfg, xc, hooks)
+                return xc, (_seed(ck, k), _seed(cv, v))
+            x, (k, v) = jax.lax.scan(
+                body, x, (params["layers"], cache["k"], cache["v"]))
+            cache = {"k": k, "v": v}
+
+    elif fam == "ssm":
+        def body(xc, ys):
+            p_l, = ys
+            h = layers.rms_norm(xc, p_l["ln"], cfg.norm_eps)
+            out, st = ssm_mod.ssm_full(p_l["ssm"], cfg, h, hooks=hooks)
+            return xc + hooks.act(out), (st["h"], st["conv"])
+        x, (hs, convs) = jax.lax.scan(body, x, (params["layers"],))
+        cache = {"h": hs, "conv": convs}
+
+    elif fam == "hybrid":
+        x, cache = _prefill_hybrid(params, cfg, x, positions, cache, hooks, impl)
+
+    elif fam == "audio":
+        enc_out = tfm.encode(params, cfg, encoder_frames, hooks=hooks)
+
+        def body(xc, ys):
+            p_l, ck, cv, cck, ccv = ys
+            h = layers.rms_norm(xc, p_l["ln1"], cfg.norm_eps)
+            out, (k, v) = attn.gqa_full(p_l["self"], cfg, h, positions,
+                                        hooks=hooks, impl=impl)
+            xc = xc + hooks.act(out)
+            kx, vx = tfm._cross_kv(p_l["cross"], cfg, enc_out)
+            h = layers.rms_norm(xc, p_l["ln2"], cfg.norm_eps)
+            out, _ = attn.gqa_full(p_l["cross"], cfg, h, positions,
+                                   kv_override=(kx, vx), causal=False,
+                                   hooks=hooks)
+            xc = xc + hooks.act(out)
+            h = layers.rms_norm(xc, p_l["ln3"], cfg.norm_eps)
+            h = hooks.boundary_in(h)
+            f = layers.apply_mlp(p_l["mlp"], h, cfg.mlp_kind,
+                                 hook=hooks.ffn_hidden)
+            xc = xc + hooks.act(hooks.boundary_out(f))
+            return xc, (_seed(ck, k), _seed(cv, v), _seed(cck, kx), _seed(ccv, vx))
+
+        x, (k, v, ck, cv) = jax.lax.scan(
+            body, x, (params["layers"], cache["k"], cache["v"],
+                      cache["ck"], cache["cv"]))
+        cache = {"k": k, "v": v, "ck": ck, "cv": cv}
+    else:
+        raise ValueError(f"unknown family {fam}")
+
+    if logit_index is None:
+        x_last = x[:, -1:, :]
+    else:
+        x_last = jax.lax.dynamic_slice_in_dim(x, logit_index, 1, axis=1)
+    logits = tfm._logits(params, cfg, x_last, hooks)[:, 0]
+    return logits, cache
+
+
+def _prefill_swa(params, cfg, x, positions, cache, hooks, impl):
+    """gemma3: groups of (P-1 local ring layers + 1 global layer)."""
+    G, P = cfg.n_layers // cfg.swa_pattern, cfg.swa_pattern
+    S = x.shape[1]
+    W = cache["lk"].shape[3]
+    grouped = jax.tree.map(
+        lambda a: a.reshape(G, P, *a.shape[1:]), params["layers"])
+    local_p = jax.tree.map(lambda a: a[:, : P - 1], grouped)
+    global_p = jax.tree.map(lambda a: a[:, P - 1], grouped)
+
+    # static ring layout: slot w holds the latest position p with p % W == w
+    slot_pos = np.array([S - 1 - ((S - 1 - w) % W) for w in range(W)])
+    slot_valid = slot_pos >= max(0, S - W)
+    slot_pos = np.where(slot_valid, slot_pos, -1)
+    gather_idx = jnp.asarray(np.maximum(slot_pos, 0))
+    ring_pos = jnp.broadcast_to(jnp.asarray(slot_pos)[None, :], (x.shape[0], W))
+
+    def local_body(xc, ys):
+        p_l, lk, lv, lpos = ys
+        xc, (k, v) = tfm._attn_full(p_l, cfg, xc, positions,
+                                    cfg.sliding_window, hooks, impl)
+        xc, _ = tfm._ffn_full(p_l, cfg, xc, hooks)
+        rk = jnp.where(ring_pos[..., None, None] >= 0,
+                       k[:, gather_idx].astype(lk.dtype), lk)
+        rv = jnp.where(ring_pos[..., None, None] >= 0,
+                       v[:, gather_idx].astype(lv.dtype), lv)
+        return xc, (rk, rv, ring_pos.astype(lpos.dtype))
+
+    def group_body(xc, ys):
+        g_local, g_global, lk, lv, lpos, gk, gv = ys
+        xc, (rk, rv, rp) = jax.lax.scan(local_body, xc, (g_local, lk, lv, lpos))
+        xc, (k, v) = tfm._attn_full(g_global, cfg, xc, positions, 0, hooks, impl)
+        xc, _ = tfm._ffn_full(g_global, cfg, xc, hooks)
+        return xc, (rk, rv, rp, _seed(gk, k), _seed(gv, v))
+
+    x, (lk, lv, lpos, gk, gv) = jax.lax.scan(
+        group_body, x,
+        (local_p, global_p, cache["lk"], cache["lv"], cache["lpos"],
+         cache["gk"], cache["gv"]))
+    return x, {"lk": lk, "lv": lv, "lpos": lpos, "gk": gk, "gv": gv}
+
+
+def _prefill_hybrid(params, cfg, x, positions, cache, hooks, impl):
+    G, per = cfg.hybrid_groups, cfg.ssm_per_group
+
+    def ssm_body(xc, ys):
+        p_l, = ys
+        h = layers.rms_norm(xc, p_l["ln"], cfg.norm_eps)
+        out, st = ssm_mod.ssm_full(p_l["ssm"], cfg, h, hooks=hooks)
+        return xc + hooks.act(out), (st["h"], st["conv"])
+
+    grouped = jax.tree.map(
+        lambda a: a.reshape(G, per, *a.shape[1:]), params["layers"])
+
+    def group_body(xc, ys):
+        g_params, ck, cv = ys
+        xc, (hs, convs) = jax.lax.scan(ssm_body, xc, (g_params,))
+        xc, (k, v) = tfm._attn_full(params["shared_block"], cfg, xc, positions,
+                                    0, hooks, impl)
+        xc, _ = tfm._ffn_full(params["shared_block"], cfg, xc, hooks)
+        return xc, (hs, convs, _seed(ck, k), _seed(cv, v))
+
+    x, (hs, convs, k, v) = jax.lax.scan(
+        group_body, x, (grouped, cache["k"], cache["v"]))
+    new = {
+        "h": hs.reshape(G * per, *hs.shape[2:]),
+        "conv": convs.reshape(G * per, *convs.shape[2:]),
+        "k": k, "v": v,
+    }
+    if cfg.tail_ssm_layers:
+        x, (th, tc) = jax.lax.scan(ssm_body, x, (params["tail"],))
+        new["tail_h"], new["tail_conv"] = th, tc
+    return x, new
+
+
+# ---------------------------------------------------------------------------
+# One-token decode step
+# ---------------------------------------------------------------------------
+
+def decode_step(params: Dict, cfg: ModelConfig, tokens: jax.Array, cache: Dict,
+                lengths, *, hooks: Hooks = IDENTITY_HOOKS, impl: str = "xla",
+                ) -> Tuple[jax.Array, Dict]:
+    """tokens: [B] next-token ids; lengths: scalar or [B] current context
+    length.  Returns (logits [B,V], updated cache)."""
+    fam = cfg.family
+    B = tokens.shape[0]
+    pos = (jnp.broadcast_to(jnp.asarray(lengths), (B,))[:, None]
+           if jnp.ndim(lengths) > 0 else jnp.full((B, 1), lengths, jnp.int32))
+    x = tfm.embed_inputs(params, cfg, tokens[:, None], None,
+                         pos if cfg.rope_theta == 0 else None)
+
+    if fam in ("dense", "vlm", "moe"):
+        if cfg.swa_pattern > 0:
+            x, cache = _decode_swa(params, cfg, x, cache, lengths, hooks)
+        elif cfg.attention == "mla":
+            def body(xc, ys):
+                p_l, c_lat, c_rope = ys
+                h = layers.rms_norm(xc, p_l["ln1"], cfg.norm_eps)
+                out, c_lat, c_rope = attn.mla_decode(
+                    p_l["attn"], cfg, h, c_lat, c_rope, lengths, hooks=hooks)
+                xc = xc + hooks.act(out)
+                xc, _ = tfm._ffn_full(p_l, cfg, xc, hooks)
+                return xc, (c_lat, c_rope)
+            x, (lat, rp) = jax.lax.scan(
+                body, x, (params["layers"], cache["latent"], cache["rope"]))
+            cache = {"latent": lat, "rope": rp}
+        else:
+            def body(xc, ys):
+                p_l, ck, cv = ys
+                h = layers.rms_norm(xc, p_l["ln1"], cfg.norm_eps)
+                out, ck, cv = attn.gqa_decode(p_l["attn"], cfg, h, ck, cv,
+                                              lengths, hooks=hooks, impl=impl)
+                xc = xc + hooks.act(out)
+                xc, _ = tfm._ffn_full(p_l, cfg, xc, hooks)
+                return xc, (ck, cv)
+            x, (k, v) = jax.lax.scan(
+                body, x, (params["layers"], cache["k"], cache["v"]))
+            cache = {"k": k, "v": v}
+
+    elif fam == "ssm":
+        def body(xc, ys):
+            p_l, h_st, conv_st = ys
+            h = layers.rms_norm(xc, p_l["ln"], cfg.norm_eps)
+            out, st = ssm_mod.ssm_decode(p_l["ssm"], cfg, h,
+                                         {"h": h_st, "conv": conv_st},
+                                         hooks=hooks)
+            return xc + hooks.act(out), (st["h"], st["conv"])
+        x, (hs, convs) = jax.lax.scan(
+            body, x, (params["layers"], cache["h"], cache["conv"]))
+        cache = {"h": hs, "conv": convs}
+
+    elif fam == "hybrid":
+        x, cache = _decode_hybrid(params, cfg, x, cache, lengths, hooks, impl)
+
+    elif fam == "audio":
+        def body(xc, ys):
+            p_l, ck, cv, cck, ccv = ys
+            h = layers.rms_norm(xc, p_l["ln1"], cfg.norm_eps)
+            out, ck, cv = attn.gqa_decode(p_l["self"], cfg, h, ck, cv, lengths,
+                                          hooks=hooks, impl=impl)
+            xc = xc + hooks.act(out)
+            h = layers.rms_norm(xc, p_l["ln2"], cfg.norm_eps)
+            out, _ = attn.gqa_full(p_l["cross"], cfg, h, pos,
+                                   kv_override=(cck, ccv), causal=False,
+                                   hooks=hooks)
+            xc = xc + hooks.act(out)
+            h = layers.rms_norm(xc, p_l["ln3"], cfg.norm_eps)
+            h = hooks.boundary_in(h)
+            f = layers.apply_mlp(p_l["mlp"], h, cfg.mlp_kind,
+                                 hook=hooks.ffn_hidden)
+            xc = xc + hooks.act(hooks.boundary_out(f))
+            return xc, (ck, cv)
+        x, (k, v) = jax.lax.scan(
+            body, x, (params["layers"], cache["k"], cache["v"],
+                      cache["ck"], cache["cv"]))
+        cache = {"k": k, "v": v, "ck": cache["ck"], "cv": cache["cv"]}
+    else:
+        raise ValueError(f"unknown family {fam}")
+
+    logits = tfm._logits(params, cfg, x, hooks)[:, 0]
+    return logits, cache
+
+
+def _decode_swa(params, cfg, x, cache, lengths, hooks):
+    G, P = cfg.n_layers // cfg.swa_pattern, cfg.swa_pattern
+    grouped = jax.tree.map(
+        lambda a: a.reshape(G, P, *a.shape[1:]), params["layers"])
+    local_p = jax.tree.map(lambda a: a[:, : P - 1], grouped)
+    global_p = jax.tree.map(lambda a: a[:, P - 1], grouped)
+
+    def local_body(xc, ys):
+        p_l, lk, lv, lpos = ys
+        h = layers.rms_norm(xc, p_l["ln1"], cfg.norm_eps)
+        out, lk, lv, lpos = attn.swa_decode(p_l["attn"], cfg, h, lk, lv, lpos,
+                                            lengths, hooks=hooks)
+        xc = xc + hooks.act(out)
+        xc, _ = tfm._ffn_full(p_l, cfg, xc, hooks)
+        return xc, (lk, lv, lpos)
+
+    def group_body(xc, ys):
+        g_local, g_global, lk, lv, lpos, gk, gv = ys
+        xc, (lk, lv, lpos) = jax.lax.scan(local_body, xc, (g_local, lk, lv, lpos))
+        h = layers.rms_norm(xc, g_global["ln1"], cfg.norm_eps)
+        out, gk, gv = attn.gqa_decode(g_global["attn"], cfg, h, gk, gv,
+                                      lengths, hooks=hooks)
+        xc = xc + hooks.act(out)
+        xc, _ = tfm._ffn_full(g_global, cfg, xc, hooks)
+        return xc, (lk, lv, lpos, gk, gv)
+
+    x, (lk, lv, lpos, gk, gv) = jax.lax.scan(
+        group_body, x,
+        (local_p, global_p, cache["lk"], cache["lv"], cache["lpos"],
+         cache["gk"], cache["gv"]))
+    return x, {"lk": lk, "lv": lv, "lpos": lpos, "gk": gk, "gv": gv}
+
+
+def _decode_hybrid(params, cfg, x, cache, lengths, hooks, impl):
+    G, per = cfg.hybrid_groups, cfg.ssm_per_group
+    grouped = jax.tree.map(
+        lambda a: a.reshape(G, per, *a.shape[1:]), params["layers"])
+    h_g = cache["h"].reshape(G, per, *cache["h"].shape[1:])
+    c_g = cache["conv"].reshape(G, per, *cache["conv"].shape[1:])
+
+    def ssm_body(xc, ys):
+        p_l, h_st, conv_st = ys
+        h = layers.rms_norm(xc, p_l["ln"], cfg.norm_eps)
+        out, st = ssm_mod.ssm_decode(p_l["ssm"], cfg, h,
+                                     {"h": h_st, "conv": conv_st}, hooks=hooks)
+        return xc + hooks.act(out), (st["h"], st["conv"])
+
+    def group_body(xc, ys):
+        g_params, hs, convs, ck, cv = ys
+        xc, (hs, convs) = jax.lax.scan(ssm_body, xc, (g_params, hs, convs))
+        h = layers.rms_norm(xc, params["shared_block"]["ln1"], cfg.norm_eps)
+        out, ck, cv = attn.gqa_decode(params["shared_block"]["attn"], cfg, h,
+                                      ck, cv, lengths, hooks=hooks, impl=impl)
+        xc = xc + hooks.act(out)
+        xc, _ = tfm._ffn_full(params["shared_block"], cfg, xc, hooks)
+        return xc, (hs, convs, ck, cv)
+
+    x, (hs, convs, k, v) = jax.lax.scan(
+        group_body, x, (grouped, h_g, c_g, cache["k"], cache["v"]))
+    new = {
+        "h": hs.reshape(G * per, *hs.shape[2:]),
+        "conv": convs.reshape(G * per, *convs.shape[2:]),
+        "k": k, "v": v,
+    }
+    if cfg.tail_ssm_layers:
+        x, (th, tc) = jax.lax.scan(
+            ssm_body, x, (params["tail"], cache["tail_h"], cache["tail_conv"]))
+        new["tail_h"], new["tail_conv"] = th, tc
+    return x, new

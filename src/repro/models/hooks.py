@@ -1,0 +1,51 @@
+"""Sharding hooks: the seam between the model zoo and the distribution layer.
+
+Models are written sharding-agnostic; a :class:`Hooks` instance injects
+``with_sharding_constraint`` at the logical points that matter for the
+paper's disaggregation:
+
+* ``boundary_in`` / ``boundary_out`` — the CrossPool *pool boundary*: hidden
+  states leaving the KV-cache pool (attention layout) for the weights pool
+  (FFN layout) and back.  Under the crosspool strategy these re-layouts are
+  where XLA emits the hidden-state transfer collectives (paper §3, C2).
+* ``kv`` — KV-cache placement (sequence-sharded under crosspool, batch- or
+  head-sharded under monolithic).
+* ``ffn_hidden`` / ``moe_*`` — weights-pool internal layouts.
+
+Everything defaults to identity so models run standalone on one device.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+Array = object
+
+
+def _identity(x):
+    return x
+
+
+@dataclass(frozen=True)
+class Hooks:
+    act: Callable = _identity          # residual stream [B,S,D]
+    attn_q: Callable = _identity       # query tensor [B,S,H,hd]
+    attn_out: Callable = _identity     # attention output [B,S,D]
+    kv: Callable = _identity           # KV-cache tensors (any per-layer layout)
+    kv_state: Callable = _identity     # SSM recurrent state
+    boundary_in: Callable = _identity  # hidden entering the weights pool
+    boundary_out: Callable = _identity # hidden returning to the KV-cache pool
+    ffn_hidden: Callable = _identity   # dense MLP hidden [B,S,F]
+    moe_inputs: Callable = _identity   # dispatched expert inputs [E,G,C,D]
+    moe_hidden: Callable = _identity   # expert hidden [E,G,C,F]
+    logits: Callable = _identity       # LM head output [B,S,V]
+    # --- algorithm overrides (crosspool sequence-sharded decode) -----------
+    # fn(q [B,1,H,D], cache_k, cache_v, lengths_incl [B]) -> out [B,1,H,D]
+    decode_attn: Optional[Callable] = None
+    # fn(q_lat, q_rope, cache_latent, cache_rope, lengths_incl) -> ctx_lat
+    decode_attn_mla: Optional[Callable] = None
+    # fn(moe_params, x [B,S,D]) -> (out, aux): explicit all-to-all dispatch
+    moe_apply: Optional[Callable] = None
+
+
+IDENTITY_HOOKS = Hooks()

@@ -1,0 +1,137 @@
+"""Shared primitive layers: norms, RoPE, MLPs, embeddings, initializers."""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, dtype, in_axis: int = 0) -> jax.Array:
+    """LeCun-normal over the input dimension(s)."""
+    fan_in = shape[in_axis] if isinstance(in_axis, int) else int(
+        np.prod([shape[a] for a in in_axis]))
+    std = 1.0 / math.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype) -> jax.Array:
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """RMSNorm with f32 statistics regardless of input dtype."""
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    normed = xf * jax.lax.rsqrt(var + eps)
+    return (normed * (1.0 + weight.astype(jnp.float32))).astype(dtype)
+
+
+def head_rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """Per-head qk-norm (Qwen3/gemma3 style): normalizes the head_dim axis."""
+    return rms_norm(x, weight, eps)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_sin_cos(positions: jax.Array, dim: int, theta: float
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """sin/cos tables for given integer positions.  Returns [..., dim//2]."""
+    inv_freq = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    angles = positions.astype(jnp.float32)[..., None] * inv_freq  # [..., dim/2]
+    return jnp.sin(angles), jnp.cos(angles)
+
+
+def apply_rope(x: jax.Array, sin: jax.Array, cos: jax.Array) -> jax.Array:
+    """Rotate pairs (x_even, x_odd) of the trailing dim.
+
+    ``x``: [..., S, H, D]; ``sin``/``cos``: [..., S, D//2] broadcastable after
+    inserting the head axis.
+    """
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    x1, x2 = jnp.split(xf, 2, axis=-1)
+    s = sin[..., None, :]
+    c = cos[..., None, :]
+    out = jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+    return out.astype(dtype)
+
+
+def sinusoidal_positions(positions: jax.Array, dim: int) -> jax.Array:
+    """Whisper-style absolute sinusoidal position embeddings [..., dim]."""
+    half = dim // 2
+    log_timescale = math.log(10_000.0) / max(half - 1, 1)
+    inv = jnp.exp(-log_timescale * jnp.arange(half, dtype=jnp.float32))
+    scaled = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.concatenate([jnp.sin(scaled), jnp.cos(scaled)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d_model: int, d_ff: int, kind: str, dtype) -> dict:
+    ks = jax.random.split(key, 3)
+    if kind == "swiglu":
+        return {
+            "wg": dense_init(ks[0], (d_model, d_ff), dtype),
+            "wu": dense_init(ks[1], (d_model, d_ff), dtype),
+            "wd": dense_init(ks[2], (d_ff, d_model), dtype),
+        }
+    if kind == "gelu":
+        return {
+            "wi": dense_init(ks[0], (d_model, d_ff), dtype),
+            "wo": dense_init(ks[1], (d_ff, d_model), dtype),
+        }
+    raise ValueError(f"unknown mlp kind {kind}")
+
+
+def apply_mlp(params: dict, x: jax.Array, kind: str, hook=None) -> jax.Array:
+    """Position-wise MLP.  ``hook`` (optional) constrains the hidden layout —
+    this is where the weights-pool sharding of dense FFNs attaches."""
+    if kind == "swiglu":
+        h = jax.nn.silu(x @ params["wg"]) * (x @ params["wu"])
+        if hook is not None:
+            h = hook(h)
+        return h @ params["wd"]
+    if kind == "gelu":
+        h = jax.nn.gelu(x @ params["wi"], approximate=True)
+        if hook is not None:
+            h = hook(h)
+        return h @ params["wo"]
+    raise ValueError(f"unknown mlp kind {kind}")
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def init_embed(key, vocab: int, d_model: int, dtype, tie: bool) -> dict:
+    k1, k2 = jax.random.split(key)
+    p = {"tok": embed_init(k1, (vocab, d_model), dtype)}
+    if not tie:
+        p["head"] = dense_init(k2, (d_model, vocab), dtype)
+    return p
+
+
+def embed_tokens(params: dict, tokens: jax.Array) -> jax.Array:
+    return params["tok"][tokens]
+
+
+def unembed(params: dict, x: jax.Array) -> jax.Array:
+    if "head" in params:
+        return x @ params["head"]
+    return x @ params["tok"].T

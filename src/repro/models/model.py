@@ -1,0 +1,73 @@
+"""Model facade: config -> init / forward / prefill / decode_step.
+
+This is the public surface the serving engine, training substrate and the
+dry-run all consume.  Models are pure functions over param pytrees; sharding
+is injected via :class:`repro.models.hooks.Hooks`.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import decode as dec
+from repro.models import transformer as tfm
+from repro.models.hooks import Hooks, IDENTITY_HOOKS
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    # ---- parameters -----------------------------------------------------
+    def init(self, key) -> Dict:
+        return tfm.init_params(key, self.cfg)
+
+    def param_specs(self, key=None) -> Dict:
+        """ShapeDtypeStruct pytree of the params (no allocation)."""
+        return jax.eval_shape(lambda k: tfm.init_params(k, self.cfg),
+                              jax.random.PRNGKey(0))
+
+    # ---- full-sequence (train / prefill-no-cache) ------------------------
+    def forward(self, params: Dict, tokens: jax.Array, *,
+                embeddings: Optional[jax.Array] = None,
+                encoder_frames: Optional[jax.Array] = None,
+                hooks: Hooks = IDENTITY_HOOKS, impl: str = "xla",
+                ) -> Tuple[jax.Array, jax.Array]:
+        return tfm.forward(params, self.cfg, tokens, embeddings=embeddings,
+                           encoder_frames=encoder_frames, hooks=hooks,
+                           impl=impl)
+
+    # ---- decode ----------------------------------------------------------
+    def init_cache(self, batch: int, max_len: int,
+                   kv_dtype: Optional[str] = None) -> Dict:
+        return dec.init_cache(self.cfg, batch, max_len, kv_dtype)
+
+    def cache_specs(self, batch: int, max_len: int,
+                    kv_dtype: Optional[str] = None) -> Dict:
+        return jax.eval_shape(
+            lambda: dec.init_cache(self.cfg, batch, max_len, kv_dtype))
+
+    def prefill(self, params: Dict, tokens: jax.Array, cache: Dict, *,
+                embeddings: Optional[jax.Array] = None,
+                encoder_frames: Optional[jax.Array] = None,
+                hooks: Hooks = IDENTITY_HOOKS, impl: str = "xla",
+                logit_index=None,
+                ) -> Tuple[jax.Array, Dict]:
+        return dec.prefill(params, self.cfg, tokens, cache,
+                           embeddings=embeddings,
+                           encoder_frames=encoder_frames, hooks=hooks,
+                           impl=impl, logit_index=logit_index)
+
+    def decode_step(self, params: Dict, tokens: jax.Array, cache: Dict,
+                    lengths, *, hooks: Hooks = IDENTITY_HOOKS,
+                    impl: str = "xla") -> Tuple[jax.Array, Dict]:
+        return dec.decode_step(params, self.cfg, tokens, cache, lengths,
+                               hooks=hooks, impl=impl)
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

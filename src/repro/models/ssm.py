@@ -1,0 +1,159 @@
+"""Mamba2 (SSD) block: in_proj -> causal conv1d -> SSD scan -> gated out_proj.
+
+The recurrent state ``h [B,H,P,N]`` plus the conv tail are this family's
+entire per-request "cache" — constant size, independent of context length.
+The CrossPool planner treats it as a fixed page allocation per request
+(DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, SSMConfig
+from repro.models import layers
+from repro.models.hooks import Hooks, IDENTITY_HOOKS
+from repro.kernels import ops as kops
+from repro.kernels.ssd_chunked import ssd_decode_step
+
+
+def _dims(cfg: ModelConfig) -> Tuple[SSMConfig, int, int, int, int]:
+    s = cfg.ssm
+    d_in = s.d_inner(cfg.d_model)
+    nh = s.n_heads(cfg.d_model)
+    conv_dim = d_in + 2 * s.n_groups * s.d_state
+    return s, d_in, nh, conv_dim, s.d_state
+
+
+def init_ssm(key, cfg: ModelConfig, dtype) -> Dict:
+    s, d_in, nh, conv_dim, N = _dims(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    # in_proj emits [z (gate), x, B, C, dt] concatenated.
+    proj_out = 2 * d_in + 2 * s.n_groups * N + nh
+    return {
+        "in_proj": layers.dense_init(ks[0], (d, proj_out), dtype),
+        "conv_w": layers.dense_init(ks[1], (s.conv_width, conv_dim), dtype,
+                                    in_axis=0),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "norm": jnp.zeros((d_in,), dtype),
+        "out_proj": layers.dense_init(ks[2], (d_in, d), dtype),
+    }
+
+
+def _split_proj(proj: jax.Array, cfg: ModelConfig):
+    s, d_in, nh, _, N = _dims(cfg)
+    gN = s.n_groups * N
+    z = proj[..., :d_in]
+    xs = proj[..., d_in: 2 * d_in]
+    B_ = proj[..., 2 * d_in: 2 * d_in + gN]
+    C_ = proj[..., 2 * d_in + gN: 2 * d_in + 2 * gN]
+    dt = proj[..., 2 * d_in + 2 * gN:]
+    return z, xs, B_, C_, dt
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 tail: Optional[jax.Array] = None
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv1d.
+
+    x: [B,S,C]; w: [W,C]; tail: [B,W-1,C] previous context (decode chaining).
+    Returns (y [B,S,C], new_tail [B,W-1,C]).
+    """
+    W = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([tail, x], axis=1)                  # [B,S+W-1,C]
+    y = sum(xp[:, i: i + x.shape[1]] * w[i][None, None, :] for i in range(W))
+    new_tail = xp[:, -(W - 1):] if W > 1 else tail
+    return y + b[None, None, :], new_tail
+
+
+def ssm_full(p: Dict, cfg: ModelConfig, x: jax.Array, *,
+             hooks: Hooks = IDENTITY_HOOKS,
+             state: Optional[Dict] = None,
+             ) -> Tuple[jax.Array, Dict]:
+    """Whole-sequence SSD block.  x: [B,S,D] -> (out [B,S,D], final state).
+
+    ``state``: {"h": [B,H,P,N] f32, "conv": [B,W-1,conv_dim]} or None.
+    """
+    s, d_in, nh, conv_dim, N = _dims(cfg)
+    B, S, _ = x.shape
+    proj = x @ p["in_proj"]
+    z, xs, B_, C_, dt = _split_proj(proj, cfg)
+
+    xbc = jnp.concatenate([xs, B_, C_], axis=-1)             # [B,S,conv_dim]
+    tail_in = state["conv"] if state is not None else None
+    xbc, conv_tail = _causal_conv(xbc, p["conv_w"], p["conv_b"], tail_in)
+    xbc = jax.nn.silu(xbc)
+    xs = xbc[..., :d_in]
+    B_ = xbc[..., d_in: d_in + s.n_groups * N]
+    C_ = xbc[..., d_in + s.n_groups * N:]
+
+    xh = xs.reshape(B, S, nh, s.head_dim)
+    Bh = B_.reshape(B, S, s.n_groups, N)
+    Ch = C_.reshape(B, S, s.n_groups, N)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, None, :])
+    A = -jnp.exp(p["A_log"])                                 # [H]
+
+    h0 = state["h"] if state is not None else None
+    chunk = min(s.chunk_size, S) if S % min(s.chunk_size, S) == 0 else 1
+    # choose the largest chunk that divides S (pads are upstream's concern)
+    for cand in (s.chunk_size, 128, 64, 32, 16, 8, 4, 2, 1):
+        if cand <= S and S % cand == 0:
+            chunk = cand
+            break
+    y, h_final = kops.ssd_scan(xh, dt, A, Bh, Ch, chunk=chunk, h0=h0)
+    y = y + xh * p["D"][None, None, :, None]                 # skip connection
+    y = y.reshape(B, S, d_in).astype(x.dtype)
+
+    y = layers.rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = y @ p["out_proj"]
+    return out, {"h": hooks.kv_state(h_final), "conv": conv_tail}
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int) -> Dict:
+    s, d_in, nh, conv_dim, N = _dims(cfg)
+    return {
+        "h": jnp.zeros((batch, nh, s.head_dim, N), jnp.float32),
+        "conv": jnp.zeros((batch, s.conv_width - 1, conv_dim),
+                          jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32),
+    }
+
+
+def ssm_decode(p: Dict, cfg: ModelConfig, x: jax.Array, state: Dict, *,
+               hooks: Hooks = IDENTITY_HOOKS) -> Tuple[jax.Array, Dict]:
+    """Single-token SSD recurrence.  x: [B,1,D] -> (out [B,1,D], new state)."""
+    s, d_in, nh, conv_dim, N = _dims(cfg)
+    B = x.shape[0]
+    proj = x[:, 0] @ p["in_proj"]                            # [B,P]
+    z, xs, B_, C_, dt = _split_proj(proj, cfg)
+
+    xbc = jnp.concatenate([xs, B_, C_], axis=-1)             # [B,conv_dim]
+    # roll the conv window: tail holds the last W-1 inputs
+    window = jnp.concatenate([state["conv"], xbc[:, None, :]], axis=1)  # [B,W,C]
+    y = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32),
+                   p["conv_w"].astype(jnp.float32)) + p["conv_b"].astype(jnp.float32)
+    new_tail = window[:, 1:].astype(state["conv"].dtype)
+    xbc = jax.nn.silu(y).astype(x.dtype)
+    xs = xbc[..., :d_in]
+    B_ = xbc[..., d_in: d_in + s.n_groups * N]
+    C_ = xbc[..., d_in + s.n_groups * N:]
+
+    xh = xs.reshape(B, nh, s.head_dim)
+    Bh = B_.reshape(B, s.n_groups, N)
+    Ch = C_.reshape(B, s.n_groups, N)
+    dtv = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, :])
+    A = -jnp.exp(p["A_log"])
+
+    y_t, h_next = ssd_decode_step(state["h"], xh, dtv, A, Bh, Ch)
+    y_t = y_t + xh * p["D"][None, :, None]
+    y_t = y_t.reshape(B, d_in).astype(x.dtype)
+    y_t = layers.rms_norm(y_t * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = (y_t @ p["out_proj"])[:, None, :]
+    return out, {"h": hooks.kv_state(h_next), "conv": new_tail}

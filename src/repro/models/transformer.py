@@ -1,0 +1,365 @@
+"""Decoder stacks for every assigned family, as scan-over-layers programs.
+
+Families:
+  dense / vlm   — [attn + SwiGLU] x L (vlm prepends stub patch embeddings)
+  moe           — [attn + routed-expert FFN] x L
+  dense + SWA   — gemma3 5:1 local:global pattern, ring-buffer local caches
+  ssm           — [Mamba2 SSD] x L (attention-free)
+  hybrid        — zamba2: groups of (k SSD layers + one SHARED attn block)
+  audio         — whisper enc-dec: encoder stack + [self + cross + MLP] x L
+
+Everything is ``lax.scan`` over stacked layer params so the 94-126 layer
+full configs lower to a compact HLO (one layer body + loop), which keeps the
+multi-pod dry-run compile tractable and matches how a production framework
+would ship these models.
+
+The CrossPool pool boundary is marked by ``hooks.boundary_in/out`` around
+every FFN/MoE call: under the crosspool sharding strategy these become the
+hidden-state re-layout (attention layout -> weights-pool layout) that the
+paper transfers over NVLink/NVSHMEM and we lower to ICI collectives.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import layers, moe as moe_mod, ssm as ssm_mod
+from repro.models.hooks import Hooks, IDENTITY_HOOKS
+
+
+def _stack_init(key, n: int, init_fn):
+    """vmap an init function over n layer keys -> stacked params pytree."""
+    return jax.vmap(init_fn)(jax.random.split(key, n))
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# Per-layer param initializers
+# ---------------------------------------------------------------------------
+
+def _init_attn_params(key, cfg: ModelConfig, dtype) -> Dict:
+    if cfg.attention == "mla":
+        return attn.init_mla(key, cfg, dtype)
+    return attn.init_gqa(key, cfg, dtype)
+
+
+def _init_dense_layer(key, cfg: ModelConfig, dtype) -> Dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": jnp.zeros((cfg.d_model,), dtype),
+        "attn": _init_attn_params(k1, cfg, dtype),
+        "ln2": jnp.zeros((cfg.d_model,), dtype),
+        "mlp": layers.init_mlp(k2, cfg.d_model, cfg.d_ff, cfg.mlp_kind, dtype),
+    }
+
+
+def _init_moe_layer(key, cfg: ModelConfig, dtype) -> Dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": jnp.zeros((cfg.d_model,), dtype),
+        "attn": _init_attn_params(k1, cfg, dtype),
+        "ln2": jnp.zeros((cfg.d_model,), dtype),
+        "moe": moe_mod.init_moe(k2, cfg, dtype),
+    }
+
+
+def _init_ssm_layer(key, cfg: ModelConfig, dtype) -> Dict:
+    return {
+        "ln": jnp.zeros((cfg.d_model,), dtype),
+        "ssm": ssm_mod.init_ssm(key, cfg, dtype),
+    }
+
+
+def _init_enc_layer(key, cfg: ModelConfig, dtype) -> Dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": jnp.zeros((cfg.d_model,), dtype),
+        "attn": attn.init_gqa(k1, cfg, dtype),
+        "ln2": jnp.zeros((cfg.d_model,), dtype),
+        "mlp": layers.init_mlp(k2, cfg.d_model, cfg.d_ff, cfg.mlp_kind, dtype),
+    }
+
+
+def _init_encdec_layer(key, cfg: ModelConfig, dtype) -> Dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "ln1": jnp.zeros((cfg.d_model,), dtype),
+        "self": attn.init_gqa(k1, cfg, dtype),
+        "ln2": jnp.zeros((cfg.d_model,), dtype),
+        "cross": attn.init_gqa(k2, cfg, dtype),
+        "ln3": jnp.zeros((cfg.d_model,), dtype),
+        "mlp": layers.init_mlp(k3, cfg.d_model, cfg.d_ff, cfg.mlp_kind, dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Parameter init for the whole stack
+# ---------------------------------------------------------------------------
+
+def init_params(key, cfg: ModelConfig) -> Dict:
+    dtype = _dtype(cfg)
+    k_embed, k_layers, k_extra = jax.random.split(key, 3)
+    p: Dict = {
+        "embed": layers.init_embed(k_embed, cfg.vocab_size, cfg.d_model,
+                                   dtype, cfg.tie_embeddings),
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+    }
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        p["layers"] = _stack_init(
+            k_layers, cfg.n_layers, lambda k: _init_dense_layer(k, cfg, dtype))
+    elif fam == "moe":
+        p["layers"] = _stack_init(
+            k_layers, cfg.n_layers, lambda k: _init_moe_layer(k, cfg, dtype))
+    elif fam == "ssm":
+        p["layers"] = _stack_init(
+            k_layers, cfg.n_layers, lambda k: _init_ssm_layer(k, cfg, dtype))
+    elif fam == "hybrid":
+        n_ssm = cfg.hybrid_groups * cfg.ssm_per_group
+        p["layers"] = _stack_init(
+            k_layers, n_ssm, lambda k: _init_ssm_layer(k, cfg, dtype)
+        ) if n_ssm else {}
+        if cfg.tail_ssm_layers:
+            p["tail"] = _stack_init(
+                k_extra, cfg.tail_ssm_layers,
+                lambda k: _init_ssm_layer(k, cfg, dtype))
+        # the zamba2 hallmark: ONE shared attention+MLP block reused per group
+        p["shared_block"] = _init_dense_layer(
+            jax.random.fold_in(k_extra, 1), cfg, dtype)
+    elif fam == "audio":
+        p["enc_layers"] = _stack_init(
+            k_extra, cfg.n_encoder_layers,
+            lambda k: _init_enc_layer(k, cfg, dtype))
+        p["enc_norm"] = jnp.zeros((cfg.d_model,), dtype)
+        p["layers"] = _stack_init(
+            k_layers, cfg.n_layers, lambda k: _init_encdec_layer(k, cfg, dtype))
+    else:
+        raise ValueError(f"unknown family {fam}")
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Embedding helpers (modality frontends are stubs: precomputed embeddings)
+# ---------------------------------------------------------------------------
+
+def embed_inputs(params: Dict, cfg: ModelConfig, tokens: jax.Array,
+                 embeddings: Optional[jax.Array] = None,
+                 positions: Optional[jax.Array] = None) -> jax.Array:
+    """tokens [B,S_txt] (+ optional stub embeddings [B,S_emb,D] prefix)."""
+    x = layers.embed_tokens(params["embed"], tokens)
+    if embeddings is not None:
+        x = jnp.concatenate([embeddings.astype(x.dtype), x], axis=1)
+    if cfg.rope_theta == 0 and positions is not None:
+        # whisper-style absolute sinusoidal positions
+        x = x + layers.sinusoidal_positions(positions, cfg.d_model).astype(x.dtype)
+    return x
+
+
+def _logits(params: Dict, cfg: ModelConfig, x: jax.Array,
+            hooks: Hooks) -> jax.Array:
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return hooks.logits(layers.unembed(params["embed"], x))
+
+
+# ---------------------------------------------------------------------------
+# Attention sub-block dispatch (full-sequence)
+# ---------------------------------------------------------------------------
+
+def _attn_full(p_l: Dict, cfg: ModelConfig, x: jax.Array, positions,
+               window: int, hooks: Hooks, impl: str):
+    h = layers.rms_norm(x, p_l["ln1"], cfg.norm_eps)
+    if cfg.attention == "mla":
+        out, kv = attn.mla_full(p_l["attn"], cfg, h, positions, hooks=hooks)
+    else:
+        out, kv = attn.gqa_full(p_l["attn"], cfg, h, positions,
+                                window=window, hooks=hooks, impl=impl)
+    return x + hooks.act(out), kv
+
+
+def _ffn_full(p_l: Dict, cfg: ModelConfig, x: jax.Array, hooks: Hooks,
+              moe_path: str = "capacity"):
+    h = layers.rms_norm(x, p_l["ln2"], cfg.norm_eps)
+    h = hooks.boundary_in(h)
+    if cfg.is_moe:
+        if hooks.moe_apply is not None:       # explicit a2a dispatch
+            f, aux = hooks.moe_apply(p_l["moe"], h)
+        else:
+            fn = (moe_mod.apply_moe if moe_path == "capacity"
+                  else moe_mod.apply_moe_grouped)
+            f, aux = fn(p_l["moe"], h, cfg, hooks=hooks)
+    else:
+        f = layers.apply_mlp(p_l["mlp"], h, cfg.mlp_kind, hook=hooks.ffn_hidden)
+        aux = jnp.zeros((), jnp.float32)
+    return x + hooks.act(hooks.boundary_out(f)), aux
+
+
+# ---------------------------------------------------------------------------
+# FULL-SEQUENCE forward (train / prefill without cache seeding)
+# ---------------------------------------------------------------------------
+
+def forward(params: Dict, cfg: ModelConfig, tokens: jax.Array, *,
+            embeddings: Optional[jax.Array] = None,
+            encoder_frames: Optional[jax.Array] = None,
+            hooks: Hooks = IDENTITY_HOOKS, impl: str = "xla",
+            moe_path: str = "capacity", remat: bool = False,
+            ) -> Tuple[jax.Array, jax.Array]:
+    """Returns (logits [B,S,V], aux_loss scalar).
+
+    ``remat=True`` checkpoints each scan body (activation rematerialization):
+    only the per-layer carries are saved, everything else is recomputed in
+    the backward pass — the standard memory/compute trade for 100B+ training.
+    """
+    fam = cfg.family
+    B = tokens.shape[0]
+    S_total = tokens.shape[1] + (embeddings.shape[1] if embeddings is not None else 0)
+    positions = jnp.broadcast_to(jnp.arange(S_total)[None, :], (B, S_total))
+    x = embed_inputs(params, cfg, tokens, embeddings, positions)
+
+    aux0 = jnp.zeros((), jnp.float32)
+
+    def _maybe_remat(body):
+        return jax.checkpoint(body) if remat else body
+
+    if fam in ("dense", "vlm", "moe"):
+        is_global = _swa_global_flags(cfg)
+
+        def body(carry, layer_in):
+            xc, aux = carry
+            p_l, glob = layer_in
+            window = 0 if cfg.sliding_window == 0 else cfg.sliding_window
+            if cfg.sliding_window:
+                # traced per-layer flag: global layers use window=0 semantics
+                # encoded in the mask, local layers bound to the window.
+                xc, _ = _attn_full_swa(p_l, cfg, xc, positions, glob, hooks, impl)
+            else:
+                xc, _ = _attn_full(p_l, cfg, xc, positions, 0, hooks, impl)
+            xc, a = _ffn_full(p_l, cfg, xc, hooks, moe_path)
+            return (xc, aux + a), None
+
+        xs = (params["layers"], is_global)
+        (x, aux), _ = jax.lax.scan(_maybe_remat(body), (x, aux0), xs)
+        return _logits(params, cfg, x, hooks), aux / max(cfg.n_layers, 1)
+
+    if fam == "ssm":
+        def body(xc, p_l):
+            h = layers.rms_norm(xc, p_l["ln"], cfg.norm_eps)
+            out, _ = ssm_mod.ssm_full(p_l["ssm"], cfg, h, hooks=hooks)
+            return xc + hooks.act(out), None
+        x, _ = jax.lax.scan(_maybe_remat(body), x, params["layers"])
+        return _logits(params, cfg, x, hooks), aux0
+
+    if fam == "hybrid":
+        def ssm_body(xc, p_l):
+            h = layers.rms_norm(xc, p_l["ln"], cfg.norm_eps)
+            out, _ = ssm_mod.ssm_full(p_l["ssm"], cfg, h, hooks=hooks)
+            return xc + hooks.act(out), None
+
+        def group_body(xc, group_params):
+            xc, _ = jax.lax.scan(ssm_body, xc, group_params)
+            xc, _ = _attn_full(params["shared_block"], cfg, xc, positions,
+                               0, hooks, impl)
+            xc, _ = _ffn_full(params["shared_block"], cfg, xc, hooks)
+            return xc, None
+
+        grouped = jax.tree.map(
+            lambda a: a.reshape(cfg.hybrid_groups, cfg.ssm_per_group, *a.shape[1:]),
+            params["layers"])
+        x, _ = jax.lax.scan(_maybe_remat(group_body), x, grouped)
+        if cfg.tail_ssm_layers:
+            x, _ = jax.lax.scan(ssm_body, x, params["tail"])
+        return _logits(params, cfg, x, hooks), aux0
+
+    if fam == "audio":
+        enc_out = encode(params, cfg, encoder_frames, hooks=hooks)
+
+        def body(xc, p_l):
+            h = layers.rms_norm(xc, p_l["ln1"], cfg.norm_eps)
+            out, _ = attn.gqa_full(p_l["self"], cfg, h, positions, hooks=hooks,
+                                   impl=impl)
+            xc = xc + hooks.act(out)
+            h = layers.rms_norm(xc, p_l["ln2"], cfg.norm_eps)
+            out, _ = attn.gqa_full(p_l["cross"], cfg, h, positions,
+                                   kv_override=_cross_kv(p_l["cross"], cfg, enc_out),
+                                   causal=False, hooks=hooks)
+            xc = xc + hooks.act(out)
+            h = layers.rms_norm(xc, p_l["ln3"], cfg.norm_eps)
+            h = hooks.boundary_in(h)
+            f = layers.apply_mlp(p_l["mlp"], h, cfg.mlp_kind, hook=hooks.ffn_hidden)
+            return xc + hooks.act(hooks.boundary_out(f)), None
+
+        x, _ = jax.lax.scan(_maybe_remat(body), x, params["layers"])
+        return _logits(params, cfg, x, hooks), aux0
+
+    raise ValueError(f"unknown family {fam}")
+
+
+def _cross_kv(p_attn: Dict, cfg: ModelConfig, enc_out: jax.Array):
+    B, T, _ = enc_out.shape
+    KV, hd = cfg.n_kv_heads, cfg.head_dim
+    k = (enc_out @ p_attn["wk"]).reshape(B, T, KV, hd)
+    v = (enc_out @ p_attn["wv"]).reshape(B, T, KV, hd)
+    return k, v
+
+
+def encode(params: Dict, cfg: ModelConfig, frames: jax.Array, *,
+           hooks: Hooks = IDENTITY_HOOKS) -> jax.Array:
+    """Whisper encoder over stub frame embeddings [B,T_enc,D]."""
+    B, T, _ = frames.shape
+    pos = jnp.broadcast_to(jnp.arange(T)[None, :], (B, T))
+    x = frames + layers.sinusoidal_positions(pos, cfg.d_model).astype(frames.dtype)
+
+    def body(xc, p_l):
+        h = layers.rms_norm(xc, p_l["ln1"], cfg.norm_eps)
+        out, _ = attn.gqa_full(p_l["attn"], cfg, h, pos, causal=False,
+                               hooks=hooks)
+        xc = xc + hooks.act(out)
+        h = layers.rms_norm(xc, p_l["ln2"], cfg.norm_eps)
+        f = layers.apply_mlp(p_l["mlp"], h, cfg.mlp_kind, hook=hooks.ffn_hidden)
+        return xc + hooks.act(f), None
+
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return layers.rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# Sliding-window variants (gemma3): per-layer traced global/local flag
+# ---------------------------------------------------------------------------
+
+def _swa_global_flags(cfg: ModelConfig) -> jax.Array:
+    """[L] bool — True where the layer uses global attention."""
+    if cfg.swa_pattern == 0:
+        return jnp.ones((max(cfg.n_layers, 1),), bool)
+    idx = jnp.arange(cfg.n_layers)
+    return (idx + 1) % cfg.swa_pattern == 0
+
+
+def _attn_full_swa(p_l, cfg, x, positions, is_global, hooks, impl):
+    """Full-seq attention where locality is a *traced* per-layer flag.
+
+    mask = causal AND (is_global OR within window) — this keeps one scan body
+    for all 48 gemma3 layers instead of unrolling.
+    """
+    h = layers.rms_norm(x, p_l["ln1"], cfg.norm_eps)
+    q, k, v = attn._project_qkv(p_l["attn"], cfg, h)
+    if cfg.rope_theta > 0:
+        sin, cos = layers.rope_sin_cos(positions, cfg.head_dim, cfg.rope_theta)
+        q = layers.apply_rope(q, sin, cos)
+        k = layers.apply_rope(k, sin, cos)
+    q = hooks.attn_q(q)
+    k, v = hooks.kv(k), hooks.kv(v)
+    causal = positions[..., :, None] >= positions[..., None, :]
+    local = (positions[..., :, None] - positions[..., None, :]
+             ) < cfg.sliding_window
+    mask = (causal & (is_global | local))[:, None, None, :, :]
+    out = attn.attention_core(q, k, v, mask, cfg.head_dim ** -0.5)
+    B, S = x.shape[:2]
+    out = out.reshape(B, S, cfg.n_heads * cfg.head_dim)
+    return x + hooks.act(hooks.attn_out(out @ p_l["attn"]["wo"])), (k, v)

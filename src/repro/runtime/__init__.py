@@ -1,0 +1,1 @@
+"""Serving substrate: requests, traces, sampling, engine, simulator."""

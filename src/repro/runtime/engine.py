@@ -1,0 +1,393 @@
+"""CrossPool serving engine: colocated multi-model decode over the pools.
+
+End-to-end path (paper §3/§4, decode-side):
+
+  arrivals -> AdmissionController (planner budget, queue-or-reject)
+           -> prefill into a batch slot (bucketed, KV pages mapped)
+           -> decode loop:
+                lowering=fused : one compiled step per model per token
+                                 ("persistent kernel" analogue)
+                lowering=host  : per-layer attention/FFN dispatches across
+                                 the disaggregated pools
+                pipeline=True  : two models' batches kept in flight so
+                                 attention and FFN overlap (paper Fig. 4)
+           -> sampling, virtualizer page extension, TBT bookkeeping
+           -> release slot + pages, drain admission queue.
+
+Engine-scale model set = the paper's colocation trio at smoke scale; the
+production-mesh behaviour of the same code paths is proven by the dry-run.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.admission import AdmissionController, PendingRequest
+from repro.core.control import FusedStep, HostDrivenStep
+from repro.core.pipeline import InflightBatch, LayerPipelineScheduler
+from repro.core.pools import build_pools
+from repro.core.virtualizer import KVVirtualizer, OutOfPagesError
+from repro.models import build_model
+from repro.runtime.request import Phase, Request
+from repro.runtime.sampler import sample
+
+_BUCKETS = (16, 32, 64, 128, 256, 512)
+
+
+def _bucket(n: int, max_ctx: int) -> int:
+    for b in _BUCKETS:
+        if n <= b and b <= max_ctx:
+            return b
+    return max_ctx
+
+
+@dataclass
+class EngineMode:
+    pipeline: bool = True
+    lowering: bool = True          # fused step vs host-driven per-layer
+
+
+@dataclass
+class EngineStats:
+    tokens_out: int = 0
+    wall_s: float = 0.0
+    tbt: List[float] = field(default_factory=list)
+    ttft: List[float] = field(default_factory=list)
+    step_times: Dict[str, List[float]] = field(default_factory=dict)
+    slow_steps: int = 0            # straggler-mitigation counter
+
+    @property
+    def throughput(self) -> float:
+        return self.tokens_out / self.wall_s if self.wall_s else 0.0
+
+
+class ModelRunner:
+    """Per-model batch slots + compiled prefill/decode programs."""
+
+    def __init__(self, name: str, cfg: ModelConfig, params,
+                 kv_device, w_device, *, max_batch: int, max_ctx: int,
+                 mode: EngineMode, pooled=None):
+        self.name = name
+        self.cfg = cfg
+        self.model = build_model(cfg)
+        self.max_batch = max_batch
+        self.max_ctx = max_ctx
+        self.mode = mode
+        self.params = params
+        self.cache = self.model.init_cache(max_batch, max_ctx)
+        self.lengths = np.zeros(max_batch, np.int32)
+        self.slots: List[Optional[Request]] = [None] * max_batch
+        self.next_tokens = np.zeros(max_batch, np.int32)
+        self.pooled = pooled
+
+        mdl = self.model
+
+        def _prefill(params, tokens, cache, slot, true_len):
+            one = jax.tree.map(
+                lambda c: jax.lax.dynamic_slice_in_dim(c, slot, 1, axis=1),
+                cache)
+            logits, one = mdl.prefill(params, tokens, one,
+                                      logit_index=true_len - 1)
+            cache = jax.tree.map(
+                lambda c, o: jax.lax.dynamic_update_slice_in_dim(
+                    c, o.astype(c.dtype), slot, axis=1),
+                cache, one)
+            return logits, cache
+
+        self._prefill = jax.jit(_prefill)
+
+        def _decode(params, tokens, cache, lengths):
+            logits, cache = mdl.decode_step(params, tokens, cache, lengths)
+            return sample(logits), cache
+
+        self._decode = jax.jit(_decode, donate_argnums=(2,))
+
+    # ------------------------------------------------------------------
+    def free_slot(self) -> Optional[int]:
+        for i, s in enumerate(self.slots):
+            if s is None:
+                return i
+        return None
+
+    @property
+    def active(self) -> bool:
+        return any(s is not None for s in self.slots)
+
+    def prefill_request(self, req: Request, rng: np.random.Generator) -> int:
+        slot = self.free_slot()
+        assert slot is not None
+        b = _bucket(req.prompt_tokens, self.max_ctx)
+        ids = rng.integers(0, self.cfg.vocab_size, b).astype(np.int32)
+        logits, self.cache = self._prefill(
+            self.params, jnp.asarray(ids[None, :]), self.cache,
+            jnp.int32(slot), jnp.int32(req.prompt_tokens))
+        tok = int(jnp.argmax(logits[0]))
+        self.slots[slot] = req
+        self.lengths[slot] = req.prompt_tokens
+        self.next_tokens[slot] = tok
+        req.phase = Phase.DECODE
+        req.output_ids.append(tok)       # the prefill-sampled first token
+        return slot
+
+    def cache_keys(self) -> Tuple[str, str]:
+        return ("k", "v") if "k" in self.cache else ("latent", "rope")
+
+    def decode_once(self, host_step=None) -> Tuple[np.ndarray, List[int]]:
+        """One decode step for all active slots; returns (tokens, slots).
+
+        ``host_step``: optional HostDrivenStep — the lowering-OFF path with
+        per-layer dispatches across the disaggregated pools."""
+        if host_step is None:
+            toks, self.cache = self._decode(
+                self.params, jnp.asarray(self.next_tokens), self.cache,
+                jnp.asarray(self.lengths))
+        else:
+            ka, kb = self.cache_keys()
+            logits, ck, cv = host_step(jnp.asarray(self.next_tokens),
+                                       self.cache[ka], self.cache[kb],
+                                       jnp.asarray(self.lengths))
+            self.cache[ka], self.cache[kb] = ck, cv
+            toks = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        toks = np.asarray(jax.block_until_ready(toks))
+        act = [i for i, s in enumerate(self.slots) if s is not None]
+        for i in act:
+            self.lengths[i] += 1
+            self.next_tokens[i] = toks[i]
+        return toks, act
+
+    def apply_pipeline_result(self, batch) -> Tuple[np.ndarray, List[int]]:
+        """Write back an InflightBatch completed by the scheduler."""
+        ka, kb = self.cache_keys()
+        self.cache[ka], self.cache[kb] = batch.cache_k, batch.cache_v
+        toks = np.asarray(jnp.argmax(batch.logits, axis=-1).astype(jnp.int32))
+        act = [i for i, s in enumerate(self.slots) if s is not None]
+        for i in act:
+            self.lengths[i] += 1
+            self.next_tokens[i] = toks[i]
+        return toks, act
+
+    def release(self, slot: int) -> Request:
+        req = self.slots[slot]
+        self.slots[slot] = None
+        return req
+
+
+class CrossPoolEngine:
+    def __init__(self, models: Dict[str, ModelConfig], *,
+                 page_budget: int, page_bytes: int = 4096,
+                 max_batch: int = 4, max_ctx: int = 256,
+                 mode: Optional[EngineMode] = None, seed: int = 0,
+                 slow_step_factor: float = 4.0):
+        self.models = models
+        self.mode = mode or EngineMode()
+        self.rng = np.random.default_rng(seed)
+        devs = jax.devices()
+        self.kv_device, self.w_device = devs[0], devs[-1]
+
+        params = {n: build_model(c).init(jax.random.PRNGKey(i))
+                  for i, (n, c) in enumerate(models.items())}
+        self.kv_pool, self.w_pool, self.pooled = build_pools(
+            models, params, kv_device=self.kv_device, w_device=self.w_device,
+            page_budget=page_budget, page_bytes=page_bytes,
+            allocate_device_pool=False)
+        self.virt = self.kv_pool.virtualizer
+        self.admission = AdmissionController(self.virt)
+
+        self.runners = {
+            n: ModelRunner(n, c, params[n], self.kv_device, self.w_device,
+                           max_batch=max_batch, max_ctx=max_ctx,
+                           mode=self.mode, pooled=self.pooled[n])
+            for n, c in models.items()
+        }
+        self.host_steps = None
+        self.scheduler = None
+        if not self.mode.lowering:
+            self.host_steps = {
+                n: HostDrivenStep(self.pooled[n], self.kv_device,
+                                  self.w_device)
+                for n in models
+            }
+            self.scheduler = LayerPipelineScheduler(
+                self.pooled, self.kv_device, self.w_device,
+                steps=self.host_steps)
+        self.stats = EngineStats(step_times={n: [] for n in models})
+
+    # ------------------------------------------------------------------
+    def _admit(self, req: Request, now: float) -> str:
+        pending = PendingRequest(req.request_id, req.model,
+                                 req.prompt_tokens, req.max_new_tokens, now)
+        outcome = self.admission.offer(pending, now)
+        if outcome == "rejected":
+            req.phase = Phase.REJECTED
+        return outcome
+
+    def _finish(self, req: Request, now: float) -> None:
+        req.phase = Phase.FINISHED
+        req.finish_time = now
+        self.virt.release_request(req.request_id)
+
+    # ------------------------------------------------------------------
+    def run(self, requests: List[Request], *,
+            max_steps: int = 10_000) -> EngineStats:
+        """Serve a pre-generated trace to completion (or max_steps)."""
+        pending = sorted(requests, key=lambda r: r.arrival_time)
+        waiting: List[Request] = []       # admitted by controller, no slot yet
+        by_id = {r.request_id: r for r in requests}
+        now = 0.0
+        steps = 0
+
+        def admit_arrivals():
+            nonlocal pending
+            due = [r for r in pending if r.arrival_time <= now]
+            pending = [r for r in pending if r.arrival_time > now]
+            for r in due:
+                if self._admit(r, now) == "admitted":
+                    r.admit_time = now
+                    waiting.append(r)
+            for p in self.admission.drain(now):
+                r = by_id[p.request_id]
+                r.admit_time = now
+                waiting.append(r)
+
+        while (pending or waiting or
+               any(r.active for r in self.runners.values())):
+            if steps >= max_steps:
+                break
+            steps += 1
+            # jump virtual time to the next arrival if idle
+            if not waiting and not any(r.active for r in self.runners.values()) \
+                    and pending:
+                now = max(now, pending[0].arrival_time)
+            admit_arrivals()
+
+            # --- prefill admitted requests into free slots ----------------
+            still = []
+            for req in waiting:
+                runner = self.runners[req.model]
+                if runner.free_slot() is not None:
+                    t0 = time.perf_counter()
+                    runner.prefill_request(req, self.rng)
+                    dt = time.perf_counter() - t0
+                    now += dt
+                    req.first_token_time = now
+                    req.token_times.append(now)
+                    req.generated += 1
+                    self.stats.tokens_out += 1
+                    self.stats.ttft.append(now - req.arrival_time)
+                else:
+                    still.append(req)
+            waiting = still
+
+            # --- decode: one step per active model ------------------------
+            active = [n for n, r in self.runners.items() if r.active]
+            if self.mode.pipeline and len(active) >= 2:
+                now = self._decode_pipelined(active, now)
+            else:
+                for n in active:
+                    now = self._decode_model(n, now)
+
+            # --- completions ---------------------------------------------
+            for n, runner in self.runners.items():
+                for slot, req in enumerate(runner.slots):
+                    if req is not None and req.done:
+                        runner.release(slot)
+                        self._finish(req, now)
+        self.stats.wall_s = now
+        for r in requests:
+            self.stats.tbt.extend(r.tbt_samples())
+        return self.stats
+
+    # ------------------------------------------------------------------
+    def _record_step(self, name: str, dt: float) -> None:
+        log = self.stats.step_times[name]
+        if len(log) > 8 and dt > np.median(log) * 4.0:
+            self.stats.slow_steps += 1     # straggler flag
+        log.append(dt)
+
+    def _decode_model(self, name: str, now: float) -> float:
+        runner = self.runners[name]
+        t0 = time.perf_counter()
+        host = self.host_steps[name] if self.host_steps else None
+        toks, act = runner.decode_once(host)
+        dt = time.perf_counter() - t0
+        self._record_step(name, dt)
+        now += dt
+        for i in act:
+            req = runner.slots[i]
+            req.generated += 1
+            req.output_ids.append(int(toks[i]))
+            req.token_times.append(now)
+            self.stats.tokens_out += 1
+            self.virt.extend_request(req.request_id, 1)
+        return now
+
+    def _decode_pipelined(self, active: List[str], now: float) -> float:
+        """Two (or more) models stepped with overlapping execution.
+
+        lowering=ON : every model's fused step is ISSUED before any is
+        blocked on — async dispatch overlaps the programs.
+        lowering=OFF: the layer-wise pipeline scheduler interleaves the
+        models' attention/FFN stages across the two pools (paper Fig. 4)."""
+        if not self.mode.lowering:
+            return self._decode_pipelined_host(active, now)
+        t0 = time.perf_counter()
+        issued = []
+        for n in active:
+            runner = self.runners[n]
+            toks_dev, runner.cache = runner._decode(
+                runner.params, jnp.asarray(runner.next_tokens), runner.cache,
+                jnp.asarray(runner.lengths))
+            issued.append((n, toks_dev))
+        for n, toks_dev in issued:
+            runner = self.runners[n]
+            toks = np.asarray(jax.block_until_ready(toks_dev))
+            act = [i for i, s in enumerate(runner.slots) if s is not None]
+            dt = time.perf_counter() - t0
+            now_model = now + dt
+            for i in act:
+                runner.lengths[i] += 1
+                runner.next_tokens[i] = toks[i]
+                req = runner.slots[i]
+                req.generated += 1
+                req.output_ids.append(int(toks[i]))
+                req.token_times.append(now_model)
+                self.stats.tokens_out += 1
+                self.virt.extend_request(req.request_id, 1)
+        dt_all = time.perf_counter() - t0
+        for n in active:
+            self._record_step(n, dt_all / len(active))
+        return now + dt_all
+
+    def _decode_pipelined_host(self, active: List[str], now: float) -> float:
+        """Layer-wise two-batch pipeline over the disaggregated pools."""
+        t0 = time.perf_counter()
+        batches = []
+        for i, n in enumerate(active):
+            runner = self.runners[n]
+            ka, kb = runner.cache_keys()
+            batches.append(InflightBatch(
+                batch_id=i, model=n,
+                tokens=jnp.asarray(runner.next_tokens),
+                cache_k=runner.cache[ka], cache_v=runner.cache[kb],
+                lengths=jnp.asarray(runner.lengths)))
+        done = self.scheduler.run(batches, max_inflight=2)
+        dt_all = time.perf_counter() - t0
+        for b in done:
+            runner = self.runners[b.model]
+            toks, act = runner.apply_pipeline_result(b)
+            now_model = now + dt_all
+            for i in act:
+                req = runner.slots[i]
+                req.generated += 1
+                req.output_ids.append(int(toks[i]))
+                req.token_times.append(now_model)
+                self.stats.tokens_out += 1
+                self.virt.extend_request(req.request_id, 1)
+            self._record_step(b.model, dt_all / len(active))
+        return now + dt_all

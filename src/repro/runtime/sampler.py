@@ -1,0 +1,20 @@
+"""Token sampling: greedy / temperature / top-k, jit-friendly."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def sample(logits: jax.Array, key: Optional[jax.Array] = None, *,
+           temperature: float = 0.0, top_k: int = 0) -> jax.Array:
+    """logits [B,V] -> token ids [B]."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    scaled = logits.astype(jnp.float32) / temperature
+    if top_k > 0:
+        kth = jnp.sort(scaled, axis=-1)[:, -top_k][:, None]
+        scaled = jnp.where(scaled >= kth, scaled, -jnp.inf)
+    assert key is not None, "temperature sampling needs a PRNG key"
+    return jax.random.categorical(key, scaled, axis=-1).astype(jnp.int32)

@@ -1,0 +1,2 @@
+"""Distribution layer: logical-axis sharding rules and pooling strategies."""
+from repro.sharding.strategies import Strategy, make_strategy  # noqa: F401

@@ -1,0 +1,129 @@
+"""Sequence-sharded decode attention (flash-decoding style) via shard_map.
+
+This is the TPU-native mechanism behind the paper's Fig. 2b: instead of DP
+attention (where a request only sees one replica's KV capacity), the KV
+cache of ONE request is sharded along the *sequence* axis across the KV-pool
+devices.  Each shard computes a partial softmax (m_i, l_i, o_i) over its
+slice and the partials are combined with a log-sum-exp reduction:
+
+    m   = pmax_i m_i
+    out = sum_i exp(m_i - m) * o_i  /  sum_i exp(m_i - m) * l_i
+
+The collectives move O(B * H * D) bytes — independent of context length —
+which is exactly the communication bound the paper engineers for (hidden
+states, not KV tensors, cross the pool boundary).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import Mesh, PartitionSpec as P
+
+try:  # jax >= 0.6 moved shard_map to the top level
+    from jax import shard_map as _shard_map
+
+    def shard_map(f, mesh, in_specs, out_specs):
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_vma=False)
+except ImportError:  # pragma: no cover
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f, mesh, in_specs, out_specs):
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=False)
+
+NEG_INF = -1e30
+
+
+def _shard_offset(kv_axes: Tuple[str, ...], local_t: int) -> jax.Array:
+    """Global token offset of this shard's KV slice (row-major over axes)."""
+    idx = jnp.int32(0)
+    for ax in kv_axes:
+        idx = idx * lax.axis_size(ax) + lax.axis_index(ax)
+    return idx * local_t
+
+
+def _combine(o_i, m_i, l_i, kv_axes):
+    """LSE-combine partial attention across the kv shard axes."""
+    m = lax.pmax(m_i, kv_axes)                       # [...,1] global max
+    w = jnp.exp(m_i - m)
+    num = lax.psum(o_i * w[..., None], kv_axes)
+    den = lax.psum(l_i * w, kv_axes)
+    return num / jnp.maximum(den, 1e-20)[..., None]
+
+
+def make_seq_decode_attn(mesh: Mesh, kv_axes: Tuple[str, ...],
+                         batch_axes: Optional[Tuple[str, ...]], scale: float):
+    """GQA/MQA decode attention with KV sequence-sharded over ``kv_axes``.
+
+    Returns fn(q [B,1,H,D], cache_k [B,T,KV,D], cache_v, lengths [B])
+    -> out [B,1,H,D].  ``lengths`` counts valid tokens (incl. current).
+    """
+    bspec = batch_axes if batch_axes else None
+
+    def local(q, k, v, lengths):
+        Bl, _, H, D = q.shape
+        Tl, KV = k.shape[1], k.shape[2]
+        G = H // KV
+        offset = _shard_offset(kv_axes, Tl)
+        qg = q.reshape(Bl, KV, G, D).astype(jnp.float32)
+        s = jnp.einsum("bkgd,btkd->bkgt", qg, k.astype(jnp.float32)) * scale
+        pos = offset + jnp.arange(Tl)
+        mask = pos[None, None, None, :] < lengths[:, None, None, None]
+        s = jnp.where(mask, s, NEG_INF)
+        m_i = jnp.max(s, axis=-1)                            # [B,KV,G]
+        p = jnp.where(mask, jnp.exp(s - m_i[..., None]), 0.0)
+        l_i = jnp.sum(p, axis=-1)
+        o_i = jnp.einsum("bkgt,btkd->bkgd", p, v.astype(jnp.float32))
+        out = _combine(o_i, m_i, l_i, kv_axes)               # [B,KV,G,D]
+        return out.reshape(Bl, 1, H, D).astype(q.dtype)
+
+    return shard_map(
+        local, mesh,
+        in_specs=(P(bspec, None, None, None), P(bspec, kv_axes, None, None),
+                  P(bspec, kv_axes, None, None), P(bspec)),
+        out_specs=P(bspec, None, None, None),
+    )
+
+
+def make_seq_mla_decode_attn(mesh: Mesh, kv_axes: Tuple[str, ...],
+                             batch_axes: Optional[Tuple[str, ...]],
+                             scale: float):
+    """MLA (absorbed-form) decode attention, latent cache sequence-sharded.
+
+    fn(q_lat [B,1,H,r], q_rope [B,1,H,p], cache_latent [B,T,r],
+       cache_rope [B,T,p], lengths [B]) -> ctx_lat [B,1,H,r].
+    The context is returned in latent space (r), so the collective payload
+    is B*H*r — the Type II KV-head-limited case stays communication-light.
+    """
+    bspec = batch_axes if batch_axes else None
+
+    def local_clean(q_lat, q_rope, latent, rope, lengths):
+        Bl, _, H, R = q_lat.shape
+        Tl = latent.shape[1]
+        offset = _shard_offset(kv_axes, Tl)
+        s = (jnp.einsum("bshr,btr->bhst", q_lat.astype(jnp.float32),
+                        latent.astype(jnp.float32))
+             + jnp.einsum("bshp,btp->bhst", q_rope.astype(jnp.float32),
+                          rope.astype(jnp.float32))) * scale   # [B,H,1,T]
+        s = s[:, :, 0, :]                                      # [B,H,T]
+        pos = offset + jnp.arange(Tl)
+        mask = pos[None, None, :] < lengths[:, None, None]
+        s = jnp.where(mask, s, NEG_INF)
+        m_i = jnp.max(s, axis=-1)                              # [B,H]
+        p = jnp.where(mask, jnp.exp(s - m_i[..., None]), 0.0)
+        l_i = jnp.sum(p, axis=-1)
+        o_i = jnp.einsum("bht,btr->bhr", p, latent.astype(jnp.float32))
+        out = _combine(o_i, m_i, l_i, kv_axes)                 # [B,H,R]
+        return out[:, None].astype(q_lat.dtype)                # [B,1,H,R]
+
+    return shard_map(
+        local_clean, mesh,
+        in_specs=(P(bspec, None, None, None), P(bspec, None, None, None),
+                  P(bspec, kv_axes, None), P(bspec, kv_axes, None), P(bspec)),
+        out_specs=P(bspec, None, None, None),
+    )

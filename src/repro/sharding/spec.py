@@ -1,0 +1,110 @@
+"""Logical-axis -> NamedSharding rules.
+
+Params and caches are mapped to :class:`jax.sharding.PartitionSpec` by
+*path pattern* rules.  A rule only applies when the dimension is divisible
+by the mesh axes it names — otherwise that dim falls back to replicated,
+which keeps every (arch x mesh) cell lowerable (uneven vocab/head counts
+replicate instead of erroring).
+"""
+from __future__ import annotations
+
+import fnmatch
+import math
+from typing import Dict, Iterable, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+AxisName = Union[str, Tuple[str, ...], None]
+
+
+def axis_size(mesh: Mesh, axis: AxisName) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        return math.prod(mesh.shape[a] for a in axis)
+    return mesh.shape[axis]
+
+
+def batch_axes(mesh: Mesh) -> AxisName:
+    """The pure-DP axes: ('pod','data') on the multi-pod mesh."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def pool_axes(mesh: Mesh) -> AxisName:
+    """Axes the consolidated weights pool spans for expert placement."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def safe_spec(mesh: Mesh, shape: Sequence[int], spec: Sequence[AxisName]) -> P:
+    """Drop per-dim axes that do not divide the dim size (replicate there)."""
+    fixed = []
+    for dim, ax in zip(shape, spec):
+        if ax is None:
+            fixed.append(None)
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        size = math.prod(mesh.shape[a] for a in axes)
+        fixed.append(ax if dim % size == 0 and dim >= size else None)
+    return P(*fixed)
+
+
+def named(mesh: Mesh, shape: Sequence[int], spec: Sequence[AxisName]
+          ) -> NamedSharding:
+    return NamedSharding(mesh, safe_spec(mesh, shape, spec))
+
+
+# ---------------------------------------------------------------------------
+# Path-pattern rule tables
+# ---------------------------------------------------------------------------
+
+def path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+class RuleSet:
+    """Ordered (pattern, spec-builder) rules over param/cache path strings.
+
+    The spec is a per-dim axis tuple aligned to the *trailing* dims of the
+    array; leading unlisted dims (e.g. the stacked layer dim) replicate.
+    """
+
+    def __init__(self, rules: Iterable[Tuple[str, Sequence[AxisName]]],
+                 default: Sequence[AxisName] = ()):
+        self.rules = list(rules)
+        self.default = tuple(default)
+
+    def spec_for(self, mesh: Mesh, path: str, shape: Sequence[int]) -> P:
+        for pattern, spec in self.rules:
+            if fnmatch.fnmatch(path, pattern):
+                return self._align(mesh, shape, spec)
+        return self._align(mesh, shape, self.default)
+
+    @staticmethod
+    def _align(mesh: Mesh, shape: Sequence[int], spec: Sequence[AxisName]) -> P:
+        spec = tuple(spec)
+        if len(spec) > len(shape):
+            spec = spec[len(spec) - len(shape):]
+        full = (None,) * (len(shape) - len(spec)) + spec
+        return safe_spec(mesh, shape, full)
+
+    def tree_shardings(self, mesh: Mesh, tree):
+        """Pytree of NamedShardings matching ``tree`` (arrays or SDS)."""
+        def f(path, leaf):
+            return NamedSharding(mesh, self.spec_for(mesh, path_str(path),
+                                                     leaf.shape))
+        return jax.tree_util.tree_map_with_path(f, tree)
+
+    def tree_specs(self, mesh: Mesh, tree):
+        def f(path, leaf):
+            return self.spec_for(mesh, path_str(path), leaf.shape)
+        return jax.tree_util.tree_map_with_path(f, tree)

@@ -1,0 +1,436 @@
+"""Pooling/parallelism strategies: how (arch x shape x mesh) maps to shardings.
+
+Three strategies:
+
+* ``train``      — DP over (pod,data) + FSDP weight sharding over the same
+                   axes + TP over ``model`` (attention heads / FFN hidden /
+                   expert axis).  Used by ``train_4k`` cells.
+* ``monolithic`` — the kvcached-style serving baseline (paper §2.2): TP over
+                   ``model`` *within* a replica, weights replicated across
+                   ``data`` replicas, DP attention for KV-head-limited
+                   models.  KV + weights colocated per replica.
+* ``crosspool``  — the paper: FFN/expert weights consolidated ONCE across
+                   the whole mesh (weights pool); KV caches sequence-sharded
+                   so a single request sees the aggregate KV capacity of the
+                   pool (KV-cache pool); attention executes where KV lives;
+                   the boundary exchanges hidden states only.
+
+A Strategy emits (a) path-pattern sharding rules for params and caches,
+(b) :class:`Hooks` carrying with_sharding_constraint closures + the
+sequence-sharded attention overrides, and (c) input/output shardings.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+from jax import lax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.hooks import Hooks
+from repro.sharding import seq_attention
+from repro.sharding.spec import RuleSet, batch_axes, pool_axes, safe_spec
+
+CONSTRAIN = jax.lax.with_sharding_constraint
+
+
+def _c(mesh: Mesh, *spec):
+    """Constraint closure that degrades per-dim on non-divisibility."""
+    def apply(x):
+        return CONSTRAIN(x, NamedSharding(mesh, safe_spec(mesh, x.shape, spec)))
+    return apply
+
+
+@dataclass(frozen=True)
+class PerfOpts:
+    """Hillclimb levers for the §Perf iteration loop."""
+
+    seq_parallel: bool = False      # shard the residual stream's S over
+    #                                 'model' (Megatron-SP): cuts saved-carry
+    #                                 memory Lx and turns TP allgathers into
+    #                                 narrower ones
+    compress_grads: bool = False    # error-feedback int8 DP reduction
+    microbatches: Optional[int] = None  # override TRAIN_MICROBATCHES
+    kv_seq_override: Optional[Tuple[str, ...]] = None  # decode KV shard axes
+    moe_a2a: bool = False           # explicit all-to-all expert dispatch
+    #                                 (+ for train: experts sharded on 'data')
+    kv_dtype: Optional[str] = None  # "f8" = fp8-e4m3 KV cache (2x memory)
+    f8_dispatch: bool = False       # fp8 a2a dispatch transport (2x payload)
+
+
+@dataclass(frozen=True)
+class Strategy:
+    name: str
+    mesh: Mesh
+    cfg: ModelConfig
+    shape: ShapeConfig
+    perf: PerfOpts = PerfOpts()
+
+    # ------------------------------------------------------------------
+    # axis helpers
+    # ------------------------------------------------------------------
+    @property
+    def bax(self) -> Tuple[str, ...]:
+        return tuple(batch_axes(self.mesh))
+
+    @property
+    def pool(self) -> Tuple[str, ...]:
+        """Expert/FSDP placement axes.
+
+        Training: FSDP spans (pod, data).  Serving: the paper deploys the
+        disaggregated pools WITHIN one or two nodes (§7 Related) — the
+        ``pod`` axis is a pure replica axis, each pod holding its own
+        complete weights+KV pools; sharding experts across pods would put
+        the per-layer dispatch on the slow cross-pod fabric.
+        """
+        if self.name == "train":
+            return tuple(pool_axes(self.mesh))
+        return ("data",)
+
+    @property
+    def tp_all(self) -> Tuple[str, ...]:
+        """Pool-wide axis tuple (dense weights pool).
+
+        Excludes ``pod`` for serving strategies (pod = replica axis)."""
+        if self.name == "train":
+            return tuple(self.mesh.axis_names)
+        return tuple(a for a in self.mesh.axis_names if a != "pod")
+
+    @property
+    def model_size(self) -> int:
+        return self.mesh.shape["model"]
+
+    @property
+    def batch_sharded(self) -> bool:
+        from repro.sharding.spec import axis_size
+        return self.shape.global_batch % axis_size(self.mesh, self.bax) == 0 \
+            and self.shape.global_batch >= axis_size(self.mesh, self.bax)
+
+    @property
+    def kv_seq_axes(self) -> Tuple[str, ...]:
+        """Axes the KV sequence dim shards over under crosspool.
+
+        When the batch occupies the data axes, only ``model`` is available;
+        a batch-1 long-context request pools KV over the ENTIRE mesh — the
+        paper's headline capability.
+        """
+        if self.perf.kv_seq_override is not None:
+            return self.perf.kv_seq_override
+        if not self.batch_sharded:
+            return self.tp_all
+        return ("model",)
+
+    @property
+    def type_ii(self) -> bool:
+        """KV-head-limited (paper §2.2): fewer KV heads than TP width."""
+        if self.cfg.attention == "mla":
+            return True
+        if self.cfg.attn_free:
+            return False
+        return self.cfg.n_kv_heads < self.model_size
+
+    # ------------------------------------------------------------------
+    # parameter rules
+    # ------------------------------------------------------------------
+    def param_rules(self) -> RuleSet:
+        FSDP = self.pool          # ZeRO-style weight sharding axes
+        TP = "model"
+        POOL = self.pool
+        ALL = self.tp_all
+
+        if self.name == "train":
+            if self.perf.moe_a2a:
+                # data-EP: experts live with the batch axis, a2a dispatch
+                moe_rules = [
+                    ("*moe/router", (None, None)),
+                    ("*moe/w[gu]", ("data", None, TP)),
+                    ("*moe/wd", ("data", TP, None)),
+                ]
+            else:
+                moe_rules = [
+                    ("*moe/router", (FSDP, None)),
+                    ("*moe/w[gu]", (TP, FSDP, None)),  # [L,E,d,f]: E@model
+                    ("*moe/wd", (TP, None, FSDP)),
+                ]
+            rules = [
+                ("embed/tok", (TP, FSDP)),
+                ("embed/head", (FSDP, TP)),
+                ("*attn/wq", (FSDP, TP)),
+                ("*attn/wk", (FSDP, TP)),
+                ("*attn/wv", (FSDP, TP)),
+                ("*attn/wo", (TP, FSDP)),
+                ("*attn/wuq", (FSDP, TP)),
+                ("*attn/wdq", (FSDP, TP)),
+                ("*attn/wdkv", (FSDP, TP)),
+                ("*attn/wuk", (FSDP, TP)),
+                ("*attn/wuv", (FSDP, TP)),
+                ("*mlp/w[gui]", (FSDP, TP)),
+                ("*mlp/w[do]", (TP, FSDP)),
+                *moe_rules,
+                ("*moe/shared/w[gu]", (FSDP, TP)),
+                ("*moe/shared/wd", (TP, FSDP)),
+                ("*ssm/in_proj", (FSDP, TP)),
+                ("*ssm/out_proj", (TP, FSDP)),
+                ("*ssm/conv_w", (None, TP)),
+            ]
+        elif self.name == "monolithic":
+            # kvcached-style: TP inside a replica, replicated over data
+            rules = [
+                ("embed/tok", (TP, None)),
+                ("embed/head", (None, TP)),
+                ("*attn/wq", (None, TP)),
+                ("*attn/wk", (None, TP)),
+                ("*attn/wv", (None, TP)),
+                ("*attn/wo", (TP, None)),
+                ("*attn/wuq", (None, TP)),
+                ("*attn/wdq", (None, TP)),
+                ("*attn/wdkv", (None, TP)),
+                ("*attn/wuk", (None, TP)),
+                ("*attn/wuv", (None, TP)),
+                ("*mlp/w[gui]", (None, TP)),
+                ("*mlp/w[do]", (TP, None)),
+                ("*moe/router", (None, None)),
+                ("*moe/w[gu]", (TP, None, None)),   # E over model, replicated@data
+                ("*moe/wd", (TP, None, None)),
+                ("*moe/shared/w[gu]", (None, TP)),
+                ("*moe/shared/wd", (TP, None)),
+                ("*ssm/in_proj", (None, TP)),
+                ("*ssm/out_proj", (TP, None)),
+                ("*ssm/conv_w", (None, TP)),
+            ]
+        elif self.name == "crosspool":
+            # weights pool consolidates FFN/expert weights across the WHOLE
+            # mesh; attention (KV pool) stays TP over model.
+            rules = [
+                ("embed/tok", (TP, None)),
+                ("embed/head", (None, TP)),
+                ("*attn/wq", (None, TP)),
+                ("*attn/wk", (None, TP)),
+                ("*attn/wv", (None, TP)),
+                ("*attn/wo", (TP, None)),
+                ("*attn/wuq", (None, TP)),
+                ("*attn/wdq", (None, TP)),
+                ("*attn/wdkv", (None, TP)),
+                ("*attn/wuk", (None, TP)),
+                ("*attn/wuv", (None, TP)),
+                # consolidated MoE weights pool: E over (pod,data), f over model
+                ("*moe/router", (None, None)),
+                ("*moe/w[gu]", (POOL, None, TP)),
+                ("*moe/wd", (POOL, TP, None)),
+                ("*moe/shared/w[gu]", (None, ALL)),
+                ("*moe/shared/wd", (ALL, None)),
+                # dense FFN weights pool: hidden dim across the whole mesh
+                ("*mlp/w[gui]", (None, ALL)),
+                ("*mlp/w[do]", (ALL, None)),
+                ("*ssm/in_proj", (None, ALL)),
+                ("*ssm/out_proj", (ALL, None)),
+                ("*ssm/conv_w", (None, ALL)),
+            ]
+        else:
+            raise ValueError(f"unknown strategy {self.name}")
+        return RuleSet(rules, default=())
+
+    # ------------------------------------------------------------------
+    # cache rules
+    # ------------------------------------------------------------------
+    def cache_rules(self) -> RuleSet:
+        B = self.bax if self.batch_sharded else None
+        TP = "model"
+        if self.name == "crosspool":
+            KT = self.kv_seq_axes
+            rules = [
+                ("k", (B, KT, None, None)),         # [L,B,T,KV,hd]
+                ("v", (B, KT, None, None)),
+                ("latent", (B, KT, None)),          # MLA [L,B,T,r]
+                ("rope", (B, KT, None)),
+                ("gk", (B, KT, None, None)),        # gemma3 global [G,B,T,KV,hd]
+                ("gv", (B, KT, None, None)),
+                ("lk", (B, None, None, None)),      # ring [G,P-1,B,W,KV,hd]
+                ("lv", (B, None, None, None)),
+                ("lpos", (B, None)),
+                ("ck", (B, None, None, None)),      # whisper cross (static)
+                ("cv", (B, None, None, None)),
+                ("h", (B, TP, None, None)),         # SSM state [L,B,H,P,N]
+                ("tail_h", (B, TP, None, None)),
+                ("conv", (B, None, None)),
+                ("tail_conv", (B, None, None)),
+            ]
+        else:
+            # monolithic: Type II -> DP attention (batch over data x model),
+            # Type I -> KV heads over model, batch over data.
+            if self.type_ii:
+                dpa = self._dpa_axes()
+                rules = [
+                    ("k", (dpa, None, None, None)),
+                    ("v", (dpa, None, None, None)),
+                    ("latent", (dpa, None, None)),
+                    ("rope", (dpa, None, None)),
+                    ("gk", (dpa, None, None, None)),
+                    ("gv", (dpa, None, None, None)),
+                    ("lk", (dpa, None, None, None)),
+                    ("lv", (dpa, None, None, None)),
+                    ("lpos", (dpa, None)),
+                    ("ck", (dpa, None, None, None)),
+                    ("cv", (dpa, None, None, None)),
+                    ("h", (dpa, None, None, None)),
+                    ("tail_h", (dpa, None, None, None)),
+                    ("conv", (dpa, None, None)),
+                    ("tail_conv", (dpa, None, None)),
+                ]
+            else:
+                rules = [
+                    ("k", (B, None, TP, None)),
+                    ("v", (B, None, TP, None)),
+                    ("latent", (B, None, None)),
+                    ("rope", (B, None, None)),
+                    ("gk", (B, None, TP, None)),
+                    ("gv", (B, None, TP, None)),
+                    ("lk", (B, None, TP, None)),
+                    ("lv", (B, None, TP, None)),
+                    ("lpos", (B, None)),
+                    ("ck", (B, None, TP, None)),
+                    ("cv", (B, None, TP, None)),
+                    ("h", (B, TP, None, None)),
+                    ("tail_h", (B, TP, None, None)),
+                    ("conv", (B, None, None)),
+                    ("tail_conv", (B, None, None)),
+                ]
+        # patterns match the LAST path component
+        rules = [("*" + name, spec) for name, spec in rules]
+        return RuleSet(rules, default=())
+
+    def _dpa_axes(self) -> Optional[Tuple[str, ...]]:
+        """DP-attention batch axes for the monolithic baseline."""
+        from repro.sharding.spec import axis_size
+        cand = self.bax + ("model",)
+        if self.shape.global_batch % axis_size(self.mesh, cand) == 0:
+            return cand
+        return self.bax if self.batch_sharded else None
+
+    # ------------------------------------------------------------------
+    # hooks
+    # ------------------------------------------------------------------
+    def hooks(self) -> Hooks:
+        m = self.mesh
+        B = self.bax if self.batch_sharded else None
+        TP = "model"
+        moe_apply = None
+        if (self.perf.moe_a2a and self.cfg.is_moe and self.batch_sharded
+                and self.cfg.n_experts % m.shape["data"] == 0):
+            from repro.models import moe as moe_mod
+            moe_apply = moe_mod.make_moe_a2a(
+                m, self.cfg, expert_axis="data", tp_axis="model",
+                batch_axes=self.bax, f8_dispatch=self.perf.f8_dispatch)
+
+        if self.name == "train":
+            F = self.pool
+            # sequence parallelism: the residual stream (and thus the
+            # scan-saved carries) shard S over 'model' instead of being
+            # replicated across the TP group
+            SP = TP if self.perf.seq_parallel else None
+            return Hooks(
+                act=_c(m, B, SP, None),
+                attn_q=_c(m, B, None, TP, None),
+                kv=_c(m, B, None, TP, None),
+                ffn_hidden=_c(m, B, None, TP),
+                moe_inputs=_c(m, "data" if self.perf.moe_a2a else TP,
+                              None, None),
+                moe_hidden=_c(m, "data" if self.perf.moe_a2a else TP,
+                              None, None),
+                logits=_c(m, B, None, TP),
+                moe_apply=moe_apply,
+            )
+        if self.name == "monolithic":
+            dpa = self._dpa_axes() if self.type_ii else B
+            # under DP attention the model axis carries batch — hidden dims
+            # must not re-use it
+            hid = None if (dpa and TP in dpa) else TP
+            return Hooks(
+                act=_c(m, dpa, None, None),
+                kv=_c(m, dpa, None, None, None) if self.type_ii
+                else _c(m, B, None, TP, None),
+                ffn_hidden=_c(m, dpa, None, hid),
+                moe_inputs=_c(m, TP, None, None),
+                moe_hidden=_c(m, TP, None, None),
+                logits=_c(m, dpa, None, hid),
+            )
+        # crosspool
+        POOL = self.pool
+        KT = self.kv_seq_axes
+        if self.cfg.attention == "mla" and self.cfg.mla:
+            scale = (self.cfg.mla.qk_nope_head_dim
+                     + self.cfg.mla.qk_rope_head_dim) ** -0.5
+        elif self.cfg.head_dim:
+            scale = self.cfg.head_dim ** -0.5
+        else:
+            scale = 1.0                      # attn-free: never used
+        decode_attn = None
+        decode_attn_mla = None
+        if self.shape.is_decode and self.type_ii:
+            if self.cfg.attention == "mla":
+                decode_attn_mla = seq_attention.make_seq_mla_decode_attn(
+                    m, KT, B, scale)
+            else:
+                decode_attn = seq_attention.make_seq_decode_attn(
+                    m, KT, B, scale)
+        # The pool boundary: hidden states entering the weights pool are
+        # REPLICATED across the pool axes (the A-to-F all-gather over 'data'
+        # IS the paper's hidden-state transfer — O(batch*d_model) bytes,
+        # independent of context length); the FFN output returns to the
+        # batch-sharded attention layout via reduce-scatter (F-to-A).
+        # with explicit a2a dispatch, tokens stay batch-sharded at the
+        # boundary (each token travels once); otherwise the boundary
+        # replicates hidden states into the weights pool
+        b_in = (_c(m, B, None, None) if moe_apply is not None
+                else _c(m, None, None, None))
+        return Hooks(
+            act=_c(m, B, None, None),
+            kv=(_c(m, B, KT, None, None) if not self.cfg.attn_free
+                else _c(m, B, TP, None, None)),
+            boundary_in=b_in,
+            boundary_out=_c(m, B, None, None),
+            ffn_hidden=_c(m, None, None, self.tp_all),
+            moe_inputs=_c(m, POOL, None, None),
+            moe_hidden=_c(m, POOL, None, TP),
+            logits=_c(m, B, None, TP),
+            decode_attn=decode_attn,
+            decode_attn_mla=decode_attn_mla,
+            moe_apply=moe_apply,
+        )
+
+    # ------------------------------------------------------------------
+    # input/output shardings
+    # ------------------------------------------------------------------
+    def input_sharding(self, ndim: int, kind: str = "tokens") -> NamedSharding:
+        B = self.bax if self.batch_sharded else None
+        spec = (B,) + (None,) * (ndim - 1)
+        return NamedSharding(self.mesh, P(*spec))
+
+    def scalar_sharding(self) -> NamedSharding:
+        return NamedSharding(self.mesh, P())
+
+    def params_shardings(self, tree):
+        return self.param_rules().tree_shardings(self.mesh, tree)
+
+    def cache_shardings(self, tree):
+        return self.cache_rules().tree_shardings(self.mesh, tree)
+
+
+def make_strategy(name: str, mesh: Mesh, cfg: ModelConfig,
+                  shape: ShapeConfig,
+                  perf: Optional[PerfOpts] = None) -> Strategy:
+    if name == "auto":
+        if shape.kind == "train":
+            name = "train"
+        elif shape.kind == "prefill":
+            # paper §4: prefill runs on separate temporal-multiplexing
+            # engines (Aegaeon-style), NOT through the disaggregated pools —
+            # the hidden-state boundary cost scales with batch*tokens and
+            # only decode's tiny token counts amortize it.
+            name = "monolithic"
+        else:
+            name = "crosspool"
+    return Strategy(name, mesh, cfg, shape, perf or PerfOpts())

@@ -1,0 +1,2 @@
+"""Training substrate: optimizer, train step, checkpointing, data, and
+gradient compression."""

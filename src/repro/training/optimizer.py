@@ -1,0 +1,81 @@
+"""AdamW over param pytrees, with configurable moment dtype.
+
+Moments default to bf16 for the 100B+ configs so (params + grads + m + v)
+fits the 16 GiB/chip HBM budget after FSDP sharding (DESIGN.md §5); f32
+moments are the default at research scale.  Optimizer state inherits the
+parameters' sharding, i.e. ZeRO-style sharded states under pjit for free.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    count: jax.Array
+    m: Dict
+    v: Dict
+
+
+@dataclass(frozen=True)
+class AdamW:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    moment_dtype: str = "float32"        # "float32" | "bfloat16"
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+
+    def _mdt(self):
+        return jnp.bfloat16 if self.moment_dtype == "bfloat16" else jnp.float32
+
+    def init(self, params: Dict) -> AdamWState:
+        zeros = lambda p: jnp.zeros(p.shape, self._mdt())
+        return AdamWState(
+            count=jnp.zeros((), jnp.int32),
+            m=jax.tree.map(zeros, params),
+            v=jax.tree.map(zeros, params),
+        )
+
+    def schedule(self, step: jax.Array) -> jax.Array:
+        warm = jnp.minimum(step / max(self.warmup_steps, 1), 1.0)
+        return self.lr * warm
+
+    def update(self, grads: Dict, state: AdamWState, params: Dict
+               ) -> Tuple[Dict, AdamWState]:
+        count = state.count + 1
+        # global-norm clip in f32
+        gnorm = jnp.sqrt(sum(
+            jnp.sum(jnp.square(g.astype(jnp.float32)))
+            for g in jax.tree.leaves(grads)))
+        scale = jnp.minimum(1.0, self.grad_clip / (gnorm + 1e-12))
+        lr = self.schedule(count)
+        b1c = 1.0 - self.b1 ** count.astype(jnp.float32)
+        b2c = 1.0 - self.b2 ** count.astype(jnp.float32)
+        mdt = self._mdt()
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32) * scale
+            m32 = self.b1 * m.astype(jnp.float32) + (1 - self.b1) * g
+            v32 = self.b2 * v.astype(jnp.float32) + (1 - self.b2) * g * g
+            mhat = m32 / b1c
+            vhat = v32 / b2c
+            step = mhat / (jnp.sqrt(vhat) + self.eps)
+            if p.ndim >= 2:                       # decay matrices only
+                step = step + self.weight_decay * p.astype(jnp.float32)
+            new_p = (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+            return new_p, m32.astype(mdt), v32.astype(mdt)
+
+        flat = jax.tree.map(upd, grads, state.m, state.v, params)
+        new_params = jax.tree.map(lambda t: t[0], flat,
+                                  is_leaf=lambda t: isinstance(t, tuple))
+        new_m = jax.tree.map(lambda t: t[1], flat,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        new_v = jax.tree.map(lambda t: t[2], flat,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        return new_params, AdamWState(count, new_m, new_v)

@@ -1,0 +1,191 @@
+"""Serving runtime tests: engine end-to-end, traces, simulator behaviour."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import PAPER_COLOC_SET, get_config, get_smoke_config
+from repro.runtime import trace as trace_mod
+from repro.runtime.engine import CrossPoolEngine, EngineMode
+from repro.runtime.request import Request, percentile
+from repro.runtime.simulator import (DecodeSimulator, decode_step_time,
+                                     max_rps_for_context, paper_placements)
+
+
+def _coloc_smoke():
+    return {n: get_smoke_config(n).replace(dtype="float32")
+            for n in PAPER_COLOC_SET}
+
+
+def _coloc_full():
+    return {n: get_config(n) for n in PAPER_COLOC_SET}
+
+
+# ---------------------------------------------------------------------------
+# traces
+# ---------------------------------------------------------------------------
+
+class TestTraces:
+    def test_sharegpt_stats(self):
+        rng = np.random.default_rng(0)
+        t = trace_mod.sharegpt_like(5000, rng)
+        assert 100 < np.median(t.prompt_tokens) < 500
+        assert np.percentile(t.prompt_tokens, 99) > 1000
+
+    def test_longalign_heavy_tail(self):
+        rng = np.random.default_rng(0)
+        t = trace_mod.longalign_like(5000, rng)
+        assert np.percentile(t.prompt_tokens, 90) > 8000
+        assert t.prompt_tokens.max() <= 65536
+
+    def test_poisson_rate(self):
+        rng = np.random.default_rng(0)
+        arr = trace_mod.poisson_arrivals(0.5, 10_000, rng)
+        assert abs(len(arr) / 10_000 - 0.5) < 0.05
+
+    def test_request_stream_sorted(self):
+        reqs = trace_mod.make_requests(
+            list(PAPER_COLOC_SET), rps_per_model=0.5, horizon_s=100,
+            seed=1)
+        times = [r.arrival_time for r in reqs]
+        assert times == sorted(times)
+        assert len({r.model for r in reqs}) == 3
+
+
+# ---------------------------------------------------------------------------
+# engine (real compute, smoke models)
+# ---------------------------------------------------------------------------
+
+class TestEngine:
+    def _run(self, mode, n_req=6, seed=3):
+        models = _coloc_smoke()
+        engine = CrossPoolEngine(models, page_budget=4096, page_bytes=4096,
+                                 max_batch=2, max_ctx=64, mode=mode,
+                                 seed=seed)
+        reqs = trace_mod.make_requests(
+            list(models), rps_per_model=2.0, horizon_s=n_req / 2,
+            kind="sharegpt", seed=seed, scale_tokens=0.05, max_new_cap=6)
+        reqs = reqs[:n_req]
+        for r in reqs:
+            r.prompt_tokens = max(min(r.prompt_tokens, 24), 4)
+        stats = engine.run(reqs)
+        return engine, reqs, stats
+
+    def test_serves_all_requests(self):
+        engine, reqs, stats = self._run(EngineMode(pipeline=True,
+                                                   lowering=True))
+        finished = [r for r in reqs if r.finish_time > 0]
+        assert len(finished) >= 1
+        assert stats.tokens_out > 0
+        for r in finished:
+            assert len(r.output_ids) == r.max_new_tokens
+
+    def test_pages_released_after_completion(self):
+        engine, reqs, stats = self._run(EngineMode(pipeline=False,
+                                                   lowering=True))
+        live = set(engine.virt.requests)
+        unfinished = {r.request_id for r in reqs if r.finish_time == 0
+                      and r.phase.value != "rejected"}
+        assert live <= unfinished | set()
+        # all finished requests' pages are back
+        assert engine.virt.mapped_pages == sum(
+            sum(len(t) for t in rp.tables) + len(rp.state_pages)
+            for rp in engine.virt.requests.values())
+
+    def test_tbt_recorded(self):
+        engine, reqs, stats = self._run(EngineMode(pipeline=True,
+                                                   lowering=True))
+        assert len(stats.tbt) > 0
+        assert all(t >= 0 for t in stats.tbt)
+        p99 = percentile(stats.tbt, 99)
+        assert np.isfinite(p99)
+
+
+# ---------------------------------------------------------------------------
+# simulator (paper-scale cost model)
+# ---------------------------------------------------------------------------
+
+class TestSimulator:
+    def test_step_time_ordering(self):
+        """Persistent+pipelined crosspool steps beat host-driven ones."""
+        models = _coloc_full()
+        lowered = paper_placements(models, "crosspool", pipelined=True,
+                                   lowered=True)
+        unlowered = paper_placements(models, "crosspool", pipelined=False,
+                                     lowered=False)
+        cfg = list(models.values())[0]
+        t_fast = decode_step_time(cfg, 4, 4 * 1024, lowered)
+        t_slow = decode_step_time(cfg, 4, 4 * 1024, unlowered)
+        assert t_fast < t_slow
+
+    def test_fig6_capacity_cliffs(self):
+        """CrossPool keeps positive max-RPS into context bins where the
+        baselines' per-replica visibility cliffs have already hit."""
+        models = _coloc_full()
+        ctxs = [8192, 65536, 262144, 1_048_576]
+
+        def supported(system):
+            pl = paper_placements(models, system)
+            return [c for c in ctxs
+                    if max_rps_for_context(models, pl, c) > 0]
+
+        sup_static = supported("static")
+        sup_kvc = supported("kvcached")
+        sup_xp = supported("crosspool")
+        assert max(sup_xp) >= max(sup_kvc)
+        assert max(sup_xp) >= max(sup_static)
+        # per-model cliff for the Type II (MLA) model specifically
+        mla = {k: v for k, v in models.items() if v.attention == "mla"}
+        pl_k = paper_placements(models, "kvcached")
+        pl_x = paper_placements(models, "crosspool")
+        name = next(iter(mla))
+        assert pl_x.kv_visible[name] > 2 * pl_k.kv_visible[name]
+
+    def test_fig7_tail_tbt_ordering(self):
+        """At 0.8 RPS/model: kvcached P99 TBT >> crosspool P99 TBT (the
+        paper's headline table), static remains lowest."""
+        models = _coloc_full()
+        reqs_proto = trace_mod.make_requests(
+            list(models), rps_per_model=0.8, horizon_s=120, kind="sharegpt",
+            seed=7)
+
+        def run(system):
+            import copy
+            reqs = copy.deepcopy(reqs_proto)
+            pl = paper_placements(models, system)
+            sim = DecodeSimulator(models, pl)
+            out = sim.run(reqs)
+            return percentile(out["tbt"], 99)
+
+        p99_static = run("static")
+        p99_kvc = run("kvcached")
+        p99_xp = run("crosspool")
+        assert p99_xp < p99_kvc, (p99_xp, p99_kvc)
+        assert p99_static <= p99_xp * 2.0   # static is the lower bound-ish
+
+    def test_ablation_directionality(self):
+        """Both mechanisms individually improve simulated throughput; both
+        together improve it most (Table 3 shape)."""
+        models = _coloc_full()
+        reqs_proto = trace_mod.make_requests(
+            list(models), rps_per_model=0.5, horizon_s=60, kind="sharegpt",
+            seed=9)
+
+        def tokens_per_s(pipelined, lowered):
+            import copy
+            reqs = copy.deepcopy(reqs_proto)
+            pl = paper_placements(models, "crosspool", pipelined=pipelined,
+                                  lowered=lowered)
+            sim = DecodeSimulator(models, pl)
+            out = sim.run(reqs)
+            tok = sum(r.generated for r in reqs)
+            span = max((r.finish_time for r in reqs if r.finish_time), default=1)
+            return tok / span
+
+        base = tokens_per_s(False, False)
+        only_low = tokens_per_s(False, True)
+        only_pipe = tokens_per_s(True, False)
+        both = tokens_per_s(True, True)
+        assert only_low > base
+        assert only_pipe > base
+        assert both > max(only_low, only_pipe)

@@ -1,0 +1,201 @@
+"""Training substrate tests: learning, microbatching, checkpointing,
+compression, optimizer behaviour."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import build_model
+from repro.training import checkpoint as ckpt
+from repro.training import compression
+from repro.training.data import DataConfig, SyntheticLM
+from repro.training.optimizer import AdamW
+from repro.training.train_step import (TrainState, cross_entropy,
+                                       init_train_state, make_train_step)
+
+
+def _setup(arch="qwen3-14b", **opt_kw):
+    cfg = get_smoke_config(arch).replace(dtype="float32")
+    model = build_model(cfg)
+    optimizer = AdamW(lr=3e-3, warmup_steps=5, **opt_kw)
+    state = init_train_state(model, optimizer, jax.random.PRNGKey(0))
+    return cfg, model, optimizer, state
+
+
+class TestTrainStep:
+    def test_loss_decreases_on_structured_data(self):
+        cfg, model, optimizer, state = _setup()
+        step = jax.jit(make_train_step(model, optimizer, remat=False))
+        data = SyntheticLM(DataConfig(cfg.vocab_size, seq_len=32,
+                                      global_batch=8, seed=1))
+        losses = []
+        for i, batch in zip(range(40), data.batches()):
+            state, metrics = step(state, {"tokens": jnp.asarray(batch["tokens"])})
+            losses.append(float(metrics["ce"]))
+        assert losses[-1] < losses[0] * 0.8, losses[::8]
+
+    def test_moe_aux_loss_flows(self):
+        cfg, model, optimizer, state = _setup("qwen3-moe-235b-a22b")
+        step = jax.jit(make_train_step(model, optimizer, remat=False,
+                                       aux_weight=0.05))
+        data = SyntheticLM(DataConfig(cfg.vocab_size, 16, 8, seed=2))
+        batch = next(data.batches())
+        state, metrics = step(state, {"tokens": jnp.asarray(batch["tokens"])})
+        assert float(metrics["aux"]) > 0.0
+        assert np.isfinite(float(metrics["loss"]))
+
+    def test_microbatch_grad_equivalence(self):
+        """G microbatches must produce the same update as one big batch
+        (linearity of gradient accumulation)."""
+        cfg, model, optimizer, state = _setup()
+        step1 = jax.jit(make_train_step(model, optimizer,
+                                        num_microbatches=1, remat=False))
+        step4 = jax.jit(make_train_step(model, optimizer,
+                                        num_microbatches=4, remat=False))
+        data = SyntheticLM(DataConfig(cfg.vocab_size, 16, 8, seed=3))
+        batch = {"tokens": jnp.asarray(next(data.batches())["tokens"])}
+        s1, m1 = step1(state, batch)
+        s4, m4 = step4(state, batch)
+        np.testing.assert_allclose(float(m1["ce"]), float(m4["ce"]),
+                                   rtol=1e-5)
+        d1 = jax.tree.leaves(s1.params)
+        d4 = jax.tree.leaves(s4.params)
+        for a, b in zip(d1, d4):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=5e-4, atol=5e-5)
+
+    def test_remat_matches_no_remat(self):
+        cfg, model, optimizer, state = _setup()
+        step_r = jax.jit(make_train_step(model, optimizer, remat=True))
+        step_n = jax.jit(make_train_step(model, optimizer, remat=False))
+        data = SyntheticLM(DataConfig(cfg.vocab_size, 16, 4, seed=4))
+        batch = {"tokens": jnp.asarray(next(data.batches())["tokens"])}
+        s_r, m_r = step_r(state, batch)
+        s_n, m_n = step_n(state, batch)
+        np.testing.assert_allclose(float(m_r["loss"]), float(m_n["loss"]),
+                                   rtol=1e-6)
+
+    def test_ssm_arch_trains(self):
+        cfg, model, optimizer, state = _setup("mamba2-130m")
+        step = jax.jit(make_train_step(model, optimizer, remat=False))
+        data = SyntheticLM(DataConfig(cfg.vocab_size, 32, 8, seed=5))
+        losses = []
+        for i, batch in zip(range(25), data.batches()):
+            state, metrics = step(state, {"tokens": jnp.asarray(batch["tokens"])})
+            losses.append(float(metrics["ce"]))
+        assert losses[-1] < losses[0]
+
+
+class TestOptimizer:
+    def test_bf16_moments_halve_state_bytes(self):
+        cfg, model, _, _ = _setup()
+        params = build_model(cfg).init(jax.random.PRNGKey(0))
+        s32 = AdamW(moment_dtype="float32").init(params)
+        s16 = AdamW(moment_dtype="bfloat16").init(params)
+        b32 = sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(s32.m))
+        b16 = sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(s16.m))
+        assert b16 * 2 == b32
+
+    def test_grad_clip_caps_update(self):
+        opt = AdamW(lr=1.0, grad_clip=1e-3, warmup_steps=1)
+        params = {"w": jnp.ones((4,))}
+        state = opt.init(params)
+        huge = {"w": jnp.full((4,), 1e6)}
+        new_params, _ = opt.update(huge, state, params)
+        delta = np.abs(np.asarray(new_params["w"] - params["w"]))
+        assert delta.max() < 10.0   # clipped, not 1e6-scaled
+
+
+class TestCompression:
+    def test_quantize_roundtrip_error_bounded(self):
+        g = {"w": jnp.asarray(np.random.default_rng(0).normal(size=(64, 64)),
+                              jnp.float32)}
+        e = compression.init_error_feedback(g)
+        used, e2 = compression.compress_grads(g, e)
+        err = np.abs(np.asarray(used["w"] - g["w"]))
+        assert err.max() <= float(jnp.max(jnp.abs(g["w"]))) / 127 + 1e-6
+
+    def test_error_feedback_carries_residual(self):
+        """Sum of dequantized grads over steps converges to sum of true
+        grads (the error-feedback telescoping property)."""
+        rng = np.random.default_rng(1)
+        g_true = jnp.asarray(rng.normal(size=(32,)) * 1e-4, jnp.float32)
+        e = compression.init_error_feedback({"w": g_true})
+        total = jnp.zeros_like(g_true)
+        for _ in range(50):
+            used, e = compression.compress_grads({"w": g_true}, e)
+            total = total + used["w"]
+        np.testing.assert_allclose(np.asarray(total),
+                                   np.asarray(g_true * 50), rtol=0.05)
+
+    def test_training_with_compression_still_learns(self):
+        cfg, model, optimizer, _ = _setup()
+        state = init_train_state(model, optimizer, jax.random.PRNGKey(0),
+                                 compress=True)
+        step = jax.jit(make_train_step(model, optimizer, compress=True,
+                                       remat=False))
+        data = SyntheticLM(DataConfig(cfg.vocab_size, 32, 8, seed=6))
+        losses = []
+        for i, batch in zip(range(30), data.batches()):
+            state, metrics = step(state, {"tokens": jnp.asarray(batch["tokens"])})
+            losses.append(float(metrics["ce"]))
+        assert losses[-1] < losses[0] * 0.9
+
+
+class TestCheckpoint:
+    def test_roundtrip_exact(self):
+        cfg, model, optimizer, state = _setup()
+        with tempfile.TemporaryDirectory() as d:
+            ckpt.save(state, 7, d)
+            assert ckpt.latest_step(d) == 7
+            spec = jax.eval_shape(lambda: state)
+            restored, step = ckpt.restore(d, target_tree=spec)
+            assert step == 7
+            for a, b in zip(jax.tree.leaves(state),
+                            jax.tree.leaves(restored)):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_resume_training_continuity(self):
+        cfg, model, optimizer, state = _setup()
+        step = jax.jit(make_train_step(model, optimizer, remat=False))
+        data = SyntheticLM(DataConfig(cfg.vocab_size, 16, 4, seed=7))
+        batches = [{"tokens": jnp.asarray(b["tokens"])}
+                   for b, _ in zip(data.batches(), range(6))]
+        # path A: 6 straight steps
+        sA = state
+        for b in batches:
+            sA, _ = step(sA, b)
+        # path B: 3 steps, checkpoint, restore, 3 more
+        sB = state
+        for b in batches[:3]:
+            sB, _ = step(sB, b)
+        with tempfile.TemporaryDirectory() as d:
+            ckpt.save(sB, 3, d)
+            spec = jax.eval_shape(lambda: sB)
+            sB, _ = ckpt.restore(d, target_tree=spec)
+        for b in batches[3:]:
+            sB, _ = step(sB, b)
+        for a, b_ in zip(jax.tree.leaves(sA.params),
+                         jax.tree.leaves(sB.params)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                                       rtol=1e-6, atol=1e-7)
+
+    def test_async_save(self):
+        cfg, model, optimizer, state = _setup()
+        with tempfile.TemporaryDirectory() as d:
+            t = ckpt.save_async(state, 1, d)
+            t.join(timeout=60)
+            assert ckpt.latest_step(d) == 1
+
+    def test_gc_keeps_last_three(self):
+        with tempfile.TemporaryDirectory() as d:
+            tree = {"w": jnp.ones((2,))}
+            for s in range(5):
+                ckpt.save(tree, s, d)
+            kept = sorted(os.listdir(d))
+            assert len(kept) == 3
+            assert ckpt.latest_step(d) == 4
