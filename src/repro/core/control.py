@@ -8,15 +8,27 @@ live inside the compiled program, exactly like a persistent kernel that
 dispatches captured subgraphs.  The host keeps only admission and page
 mapping, the paper's split.
 
+Both lowering modes now serve decode from the virtualizer's SHARED paged
+KV pool: steps take ``(tokens, pool, page_tables, lengths)`` and thread
+the (donated) pool buffer through every layer's attention stage.
+
 ``HostDrivenStep`` is the ablation baseline (Table 3 row 1): every layer
 issues separate attention-stage and FFN-stage dispatches with host Python
 in between — 2L+2 dispatches/token instead of 1, plus 2L inter-pool
 device transfers driven from the host.
+
+``PagedFusedStep`` is lowering=ON over the pool: embed, every layer's
+paged attention + proxy boundary + FFN, and the final logits are ONE
+compiled ``lax.scan`` program consuming the same pooled param split
+(kv_params / w_params) as the host-driven path.
+
+``FusedStep`` (dense contiguous cache) remains as the fallback for the
+fused SSM/hybrid/enc-dec families that bypass split execution.
 """
 from __future__ import annotations
 
 import functools
-from typing import Dict, Optional, Tuple
+from typing import Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -24,6 +36,7 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.core import split_exec
 from repro.core.pools import PooledModel, transfer
+from repro.kernels.ops import donate_argnums as _donate
 from repro.models import build_model
 
 
@@ -38,35 +51,37 @@ class HostDrivenStep:
         # execution placement follows the committed pool params: attention
         # stages run where kv_params live, FFN stages where w_params live.
         self._embed = jax.jit(fns.embed)
-        self._attn = jax.jit(fns.attn_stage)
+        self._attn = jax.jit(fns.attn_stage, donate_argnums=_donate(2))
         self._ffn = jax.jit(fns.ffn_stage)
         self._combine = jax.jit(fns.combine)
         self._logits = jax.jit(fns.logits)
 
-    def __call__(self, tokens, cache_k, cache_v, lengths
-                 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    def __call__(self, tokens, pool, page_tables, lengths
+                 ) -> Tuple[jax.Array, jax.Array]:
+        """tokens [B]; pool [n_pages, page_elems]; page_tables [L,B,P];
+        lengths [B].  Returns (logits [B,V], updated pool)."""
         p_kv, p_w = self.pooled.kv_params, self.pooled.w_params
         x = self._embed(p_kv, tokens)
         for layer in range(self.pooled.stage_fns.n_layers):
-            x, ffn_in, cache_k, cache_v = self._attn(
-                p_kv, x, cache_k, cache_v, lengths, layer)
+            x, ffn_in, pool = self._attn(
+                p_kv, x, pool, page_tables, lengths, layer)
             ffn_in_w = transfer(ffn_in, self.w_device)      # A-to-F
             ffn_out = self._ffn(p_w, ffn_in_w, layer)
             ffn_out_kv = transfer(ffn_out, self.kv_device)  # F-to-A
             x = self._combine(x, ffn_out_kv)
-        return self._logits(p_kv, x), cache_k, cache_v
+        return self._logits(p_kv, x), pool
 
-    def stage_generator(self, tokens, cache_k, cache_v, lengths):
+    def stage_generator(self, tokens, pool, page_tables, lengths):
         """Yield one pipeline stage at a time (for the layer-wise scheduler).
 
         Yields ("attn"|"ffn", layer) after issuing that stage's dispatch;
-        the final return carries (logits, cache_k, cache_v).
+        the final return carries (logits, pool) in ``self.result``.
         """
         p_kv, p_w = self.pooled.kv_params, self.pooled.w_params
         x = self._embed(p_kv, tokens)
         for layer in range(self.pooled.stage_fns.n_layers):
-            x, ffn_in, cache_k, cache_v = self._attn(
-                p_kv, x, cache_k, cache_v, lengths, layer)
+            x, ffn_in, pool = self._attn(
+                p_kv, x, pool, page_tables, lengths, layer)
             yield ("attn", layer)
             ffn_in_w = transfer(ffn_in, self.w_device)
             ffn_out = self._ffn(p_w, ffn_in_w, layer)
@@ -74,14 +89,66 @@ class HostDrivenStep:
             ffn_out_kv = transfer(ffn_out, self.kv_device)
             x = self._combine(x, ffn_out_kv)
         yield ("logits", -1)
-        self.result = (self._logits(p_kv, x), cache_k, cache_v)
+        self.result = (self._logits(p_kv, x), pool)
+
+
+class PagedFusedStep:
+    """Device-resident control (lowering ON) over the shared paged pool.
+
+    One dispatch per token per batch: ``lax.scan`` over layer indices with
+    the pool threaded through the carry, consuming the same pooled param
+    split (kv_params on the KV device, w_params on the weights device)
+    as :class:`HostDrivenStep` — the persistent-kernel analogue.
+
+    ``postprocess`` (e.g. greedy sampling) is compiled into the same
+    program so the host sees exactly one dispatch per decode step.
+    """
+
+    def __init__(self, pooled: PooledModel,
+                 postprocess: Optional[Callable] = None, device=None):
+        self.pooled = pooled
+        fns = pooled.stage_fns
+        # the pooled trees live on different pool devices; commit both to
+        # ONE device (the KV pool's, where the page pool lives) so the
+        # fused program has a single placement — as with the dense
+        # FusedStep, lowering=ON trades placement freedom for one dispatch
+        if device is None:
+            leaves = jax.tree.leaves(pooled.kv_params)
+            device = (next(iter(leaves[0].devices())) if leaves
+                      else jax.devices()[0])
+        self._p_kv = jax.device_put(pooled.kv_params, device)
+        self._p_w = jax.device_put(pooled.w_params, device)
+
+        def step(p_kv, p_w, tokens, pool, page_tables, lengths):
+            x = fns.embed(p_kv, tokens)
+
+            def body(carry, layer):
+                x, pool = carry
+                x, ffn_in, pool = fns.attn_stage(
+                    p_kv, x, pool, page_tables, lengths, layer)
+                ffn_out = fns.ffn_stage(p_w, ffn_in, layer)
+                x = fns.combine(x, ffn_out)
+                return (x, pool), None
+
+            (x, pool), _ = jax.lax.scan(
+                body, (x, pool), jnp.arange(fns.n_layers))
+            logits = fns.logits(p_kv, x)
+            out = postprocess(logits) if postprocess is not None else logits
+            return out, pool
+
+        self._step = jax.jit(step, donate_argnums=_donate(3))
+
+    def __call__(self, tokens, pool, page_tables, lengths
+                 ) -> Tuple[jax.Array, jax.Array]:
+        return self._step(self._p_kv, self._p_w,
+                          tokens, pool, page_tables, lengths)
 
 
 class FusedStep:
-    """Device-resident control (lowering ON): one dispatch per token.
-
-    The whole stack — embed, every layer's attention + proxy boundary +
-    FFN, final logits — is a single compiled program (scan over layers).
+    """Dense-cache fused step over a merged param tree (ablation/test
+    baseline).  The engine's fallback families (SSM / hybrid / enc-dec /
+    SWA) decode through ``ModelRunner._decode`` — the same fused
+    ``model.decode_step`` program — rather than through this class.
     """
 
     def __init__(self, pooled: PooledModel, device=None):

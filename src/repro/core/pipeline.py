@@ -8,6 +8,12 @@ barrier: batches may come from different models with different layer
 counts; when one finishes, its tokens are published, its slot is released
 and refilled from the request queues (early exit + refill).
 
+All batches read and write KV through ONE shared paged pool (the
+virtualizer's device array): each :class:`InflightBatch` carries only its
+page tables and lengths, and the scheduler threads the pool buffer through
+every attention stage — batches touch disjoint pages, so interleaving
+order cannot corrupt KV state.
+
 Execution is asynchronous: every stage issue returns a lazy jax value, so
 stages bound to the two pool devices genuinely overlap; the scheduler's job
 is to *issue* stages in an order that keeps both pools busy.
@@ -29,14 +35,14 @@ from repro.core.pools import PooledModel, transfer
 @dataclass
 class InflightBatch:
     """One batch's layer-granular execution state (the paper's state machine:
-    model id, layer cursor, completion)."""
+    model id, layer cursor, completion).  KV lives in the shared pool; the
+    batch owns only its page-table view of it."""
 
     batch_id: int
     model: str
     tokens: jax.Array                 # [B] next-token ids
-    cache_k: jax.Array
-    cache_v: jax.Array
-    lengths: jax.Array
+    page_tables: jax.Array            # [L, B, max_pages] int32
+    lengths: jax.Array                # [B] current context lengths
     layer: int = 0                    # layer cursor
     phase: str = "embed"              # embed -> attn -> ffn -> combine -> done
     x: Optional[jax.Array] = None     # residual stream
@@ -60,12 +66,15 @@ class LayerPipelineScheduler:
         self.steps: Dict[str, HostDrivenStep] = steps or {
             name: HostDrivenStep(pm, kv_device, w_device)
             for name, pm in pooled.items()
+            if pm.stage_fns is not None
         }
         self.stage_log: List[Tuple[int, str, str, int]] = []  # (batch,model,stage,layer)
 
     # ------------------------------------------------------------------
-    def _advance(self, b: InflightBatch) -> None:
-        """Issue exactly one stage of one batch (non-blocking)."""
+    def _advance(self, b: InflightBatch, pool: jax.Array) -> jax.Array:
+        """Issue exactly one stage of one batch (non-blocking).
+
+        Returns the (possibly updated) shared pool."""
         step = self.steps[b.model]
         fns = self.pooled[b.model].stage_fns
         p_kv = self.pooled[b.model].kv_params
@@ -74,8 +83,8 @@ class LayerPipelineScheduler:
             b.x = step._embed(p_kv, b.tokens)
             b.phase = "attn"
         elif b.phase == "attn":
-            b.x, ffn_in, b.cache_k, b.cache_v = step._attn(
-                p_kv, b.x, b.cache_k, b.cache_v, b.lengths, b.layer)
+            b.x, ffn_in, pool = step._attn(
+                p_kv, b.x, pool, b.page_tables, b.lengths, b.layer)
             b.ffn_in = transfer(ffn_in, self.w_device)       # A-to-F
             self.stage_log.append((b.batch_id, b.model, "attn", b.layer))
             b.phase = "ffn"
@@ -92,16 +101,20 @@ class LayerPipelineScheduler:
                 b.phase = "done"                              # early exit
             else:
                 b.phase = "attn"
+        return pool
 
     # ------------------------------------------------------------------
-    def run(self, batches: List[InflightBatch], *,
+    def run(self, batches: List[InflightBatch], pool: jax.Array, *,
             refill: Optional[Callable[[], Optional[InflightBatch]]] = None,
-            max_inflight: int = 2) -> List[InflightBatch]:
+            max_inflight: int = 2
+            ) -> Tuple[List[InflightBatch], jax.Array]:
         """Drive batches to completion, keeping ``max_inflight`` slots busy.
 
-        ``refill`` is polled whenever a slot frees (the paper's fetch from
-        the per-model request queue).  Returns completed batches in
-        completion order.
+        ``pool`` is the shared physical KV pool; it is threaded through
+        every attention stage and the final buffer is returned alongside
+        the completed batches.  ``refill`` is polled whenever a slot frees
+        (the paper's fetch from the per-model request queue).  Returns
+        (completed batches in completion order, updated pool).
         """
         queue = list(batches)
         slots: List[Optional[InflightBatch]] = [None] * max_inflight
@@ -125,17 +138,18 @@ class LayerPipelineScheduler:
             for i, s in enumerate(slots):
                 if s is None:
                     continue
-                self._advance(s)
+                pool = self._advance(s, pool)
                 if s.done:
                     finished.append(s)
                     fill(i)
-        return finished
+        return finished, pool
 
     # ------------------------------------------------------------------
-    def run_serial(self, batches: List[InflightBatch]) -> List[InflightBatch]:
+    def run_serial(self, batches: List[InflightBatch], pool: jax.Array
+                   ) -> Tuple[List[InflightBatch], jax.Array]:
         """Pipeline OFF baseline: one batch at a time, stages still split
         across the two pools (transfers exposed)."""
-        return self.run(batches, max_inflight=1)
+        return self.run(batches, pool, max_inflight=1)
 
     def overlap_fraction(self) -> float:
         """Fraction of adjacent issued stages that alternate pools — a

@@ -25,6 +25,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.virtualizer import DEFAULT_PAGE_BYTES
 
 
 @dataclass(frozen=True)
@@ -104,7 +105,8 @@ def active_kv_timeline(spec: WorkloadSpec, rng: np.random.Generator,
     return usage
 
 
-def plan_pool(specs: Sequence[WorkloadSpec], *, page_bytes: int = 16 * 1024,
+def plan_pool(specs: Sequence[WorkloadSpec], *,
+              page_bytes: int = DEFAULT_PAGE_BYTES,
               quantile: float = 0.99, horizon_s: float = 3600.0,
               n_trials: int = 8, seed: int = 0, model_axis: int = 16,
               headroom: float = 1.05, dt: float = 2.0) -> PoolPlan:

@@ -1,10 +1,11 @@
 """Disaggregated memory pools: the engine-level objects.
 
 ``KVCachePool`` owns a device, every colocated model's *non-FFN* params,
-the shared physical KV page pool (virtualizer), and the per-model decode
-caches.  ``WeightsPool`` owns another device and the consolidated FFN/MoE
-weights of ALL colocated models.  Hidden states are the only tensors that
-cross between them (``transfer``), matching the paper's NVSHMEM boundary.
+and the shared physical KV page pool (virtualizer) — the SINGLE KV
+allocation serving every colocated model's decode.  ``WeightsPool`` owns
+another device and the consolidated FFN/MoE weights of ALL colocated
+models.  Hidden states are the only tensors that cross between them
+(``transfer``), matching the paper's NVSHMEM boundary.
 
 On a one-device host both pools may map to the same device — the data-path
 structure (split params, explicit transfers, page accounting) is identical;
@@ -22,7 +23,8 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.core import split_exec
-from repro.core.virtualizer import KVVirtualizer
+from repro.core.virtualizer import (DEFAULT_PAGE_BYTES, KVVirtualizer,
+                                    ModelView)
 
 
 @dataclass
@@ -30,7 +32,9 @@ class PooledModel:
     cfg: ModelConfig
     kv_params: Dict            # embeddings, norms, attention (KV pool device)
     w_params: Dict             # FFN/MoE weights (weights pool device)
-    stage_fns: split_exec.StageFns
+    view: ModelView            # how this model types the shared pages
+    # None for fused-fallback families (SSM/hybrid/enc-dec/SWA)
+    stage_fns: Optional[split_exec.StageFns]
 
 
 class WeightsPool:
@@ -54,13 +58,15 @@ class KVCachePool:
     """Attention-side pool: non-FFN params + the shared paged KV space."""
 
     def __init__(self, device, models: Dict[str, ModelConfig], *,
-                 page_budget: int, page_bytes: int = 16 * 1024,
+                 page_budget: int, page_bytes: int = DEFAULT_PAGE_BYTES,
+                 pool_dtype=jnp.bfloat16,
                  allocate_device_pool: bool = True):
         self.device = device
         self.attn_params: Dict[str, Dict] = {}
         self.virtualizer = KVVirtualizer(
             models, page_budget=page_budget, page_bytes=page_bytes,
-            allocate_device_pool=allocate_device_pool)
+            dtype=pool_dtype, allocate_device_pool=allocate_device_pool,
+            device=device)
 
     def add_model(self, name: str, kv_params: Dict) -> None:
         self.attn_params[name] = jax.device_put(kv_params, self.device)
@@ -79,15 +85,22 @@ def transfer(x: jax.Array, device) -> jax.Array:
 
 def build_pools(models: Dict[str, ModelConfig], params: Dict[str, Dict], *,
                 kv_device=None, w_device=None, page_budget: int,
-                page_bytes: int = 16 * 1024,
+                page_bytes: int = DEFAULT_PAGE_BYTES,
+                pool_dtype=jnp.bfloat16,
                 allocate_device_pool: bool = True,
                 ):
-    """Split every model's params across the two pools."""
+    """Split every model's params across the two pools.
+
+    Models that support split execution get paged :class:`StageFns`
+    compiled against the virtualizer's page geometry; fused-fallback
+    families get ``stage_fns=None`` and keep serving through their dense
+    per-model caches.
+    """
     devs = jax.devices()
     kv_device = kv_device or devs[0]
     w_device = w_device or devs[-1]
     kv_pool = KVCachePool(kv_device, models, page_budget=page_budget,
-                          page_bytes=page_bytes,
+                          page_bytes=page_bytes, pool_dtype=pool_dtype,
                           allocate_device_pool=allocate_device_pool)
     w_pool = WeightsPool(w_device)
     pooled: Dict[str, PooledModel] = {}
@@ -95,10 +108,14 @@ def build_pools(models: Dict[str, ModelConfig], params: Dict[str, Dict], *,
         kv_tree, w_tree = split_exec.split_params(params[name], cfg)
         kv_pool.add_model(name, kv_tree)
         w_pool.add_model(name, w_tree)
+        view = kv_pool.virtualizer.views[name]
+        stage_fns = (split_exec.make_stage_fns(cfg, view)
+                     if split_exec.supports_split(cfg) else None)
         pooled[name] = PooledModel(
             cfg=cfg,
             kv_params=kv_pool.attn_params[name],
             w_params=w_pool.ffn_params[name],
-            stage_fns=split_exec.make_stage_fns(cfg),
+            view=view,
+            stage_fns=stage_fns,
         )
     return kv_pool, w_pool, pooled

@@ -7,8 +7,16 @@ the weights pool, possibly another device) consumes them, and the combine
 step resumes the residual stream.  ``attn_stage``/``ffn_stage``/``combine``
 are the units the layer-wise pipeline scheduler interleaves.
 
+The attention stage reads and writes KV through the virtualizer's SHARED
+paged pool: it takes ``(x, pool, page_tables, lengths)`` instead of dense
+per-model caches, writes the new token's K/V at its (page, slot)
+coordinate and attends through ``repro.kernels.paged_attention``.  The
+pool is the single source of KV truth for every split-execution model;
+dense contiguous caches survive only in the fused fallback path
+(``repro.models.decode``) used by the SSM/hybrid/enc-dec/SWA families.
+
 Supported families: dense / moe / vlm with GQA or MLA attention — the
-paper's serving targets.  (SSM/hybrid/enc-dec run through the fused path.)
+paper's serving targets.
 """
 from __future__ import annotations
 
@@ -19,6 +27,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.core.virtualizer import ModelView
 from repro.models import attention as attn
 from repro.models import layers, moe as moe_mod
 from repro.models import transformer as tfm
@@ -27,8 +36,9 @@ from repro.models.hooks import IDENTITY_HOOKS
 
 class StageFns(NamedTuple):
     embed: Callable          # (params, tokens [B])            -> x [B,1,D]
-    attn_stage: Callable     # (params, x, cache_k, cache_v, lengths, layer)
-    #                           -> (x_resid, ffn_input, cache_k, cache_v)
+    attn_stage: Callable     # (params, x, pool, page_tables [L,B,P],
+    #                           lengths [B], layer)
+    #                           -> (x_resid, ffn_input, pool)
     ffn_stage: Callable      # (params, ffn_input, layer)      -> ffn_out
     combine: Callable        # (x_resid, ffn_out)              -> x
     logits: Callable         # (params, x)                     -> [B,V]
@@ -41,31 +51,52 @@ def _layer_params(params: Dict, layer) -> Dict:
         params["layers"])
 
 
-def make_stage_fns(cfg: ModelConfig) -> StageFns:
-    if cfg.family not in ("dense", "moe", "vlm"):
+def supports_split(cfg: ModelConfig) -> bool:
+    """Whether a model runs the split (paged-pool) decode path.
+
+    Everything else — SSM, hybrid, enc-dec audio, sliding-window patterns —
+    falls back to the fused dense-cache path.
+    """
+    return (cfg.family in ("dense", "moe", "vlm")
+            and not cfg.attn_free
+            and cfg.swa_pattern == 0
+            and cfg.attention in ("gqa", "mla"))
+
+
+def make_stage_fns(cfg: ModelConfig, view: ModelView) -> StageFns:
+    """Stage functions over the shared paged pool.
+
+    ``view`` is the virtualizer's :class:`ModelView` for this model — it
+    fixes the static page geometry (``tokens_per_page``) the stage programs
+    compile against.
+    """
+    if not supports_split(cfg):
         raise ValueError(
-            f"split execution supports dense/moe/vlm; {cfg.family} uses the "
-            f"fused path")
+            f"split execution supports dense/moe/vlm with gqa/mla attention; "
+            f"{cfg.name} ({cfg.family}) uses the fused path")
+    tpp = view.tokens_per_page
 
     def embed(params, tokens):
         return layers.embed_tokens(params["embed"], tokens[:, None])
 
-    def attn_stage(params, x, cache_k, cache_v, lengths, layer):
+    def attn_stage(params, x, pool, page_tables, lengths, layer):
         p_l = _layer_params(params, layer)
-        ck = jax.lax.dynamic_index_in_dim(cache_k, layer, 0, keepdims=False)
-        cv = jax.lax.dynamic_index_in_dim(cache_v, layer, 0, keepdims=False)
+        table = jax.lax.dynamic_index_in_dim(page_tables, layer, 0,
+                                             keepdims=False)
         h = layers.rms_norm(x, p_l["ln1"], cfg.norm_eps)
         if cfg.attention == "mla":
-            out, ck, cv = attn.mla_decode(p_l["attn"], cfg, h, ck, cv, lengths)
+            out, pool = attn.mla_paged_decode(p_l["attn"], cfg, h, pool,
+                                              table, lengths,
+                                              tokens_per_page=tpp)
         else:
-            out, ck, cv = attn.gqa_decode(p_l["attn"], cfg, h, ck, cv, lengths)
-        cache_k = jax.lax.dynamic_update_index_in_dim(cache_k, ck, layer, 0)
-        cache_v = jax.lax.dynamic_update_index_in_dim(cache_v, cv, layer, 0)
+            out, pool = attn.gqa_paged_decode(p_l["attn"], cfg, h, pool,
+                                              table, lengths,
+                                              tokens_per_page=tpp)
         x = x + out
         # the proxy boundary: pre-FFN norm runs in the KV pool, the
         # normalized hidden states are what crosses to the weights pool
         ffn_in = layers.rms_norm(x, p_l["ln2"], cfg.norm_eps)
-        return x, ffn_in, cache_k, cache_v
+        return x, ffn_in, pool
 
     def ffn_stage(params, ffn_in, layer):
         p_l = _layer_params(params, layer)

@@ -8,26 +8,45 @@ identical bytes, identical slow-path/fast-path split:
   * fast path (per token, on device): attention kernels read K/V through a
     page table (``repro.kernels.paged_attention``), writes go to
     (page, slot) coordinates — no allocation on the critical path;
-  * slow path (per ~page, on host): ``map_pages`` / ``unmap_pages`` update
-    the free list and per-request page tables against the planner's budget.
+  * slow path (per ~page, on host): ``register_request`` /
+    ``extend_request`` / ``release_request`` update the free list and
+    per-request page tables against the planner's budget.
 
-Heterogeneity (C1): the pool is untyped (flat bf16 elements).  Each model
-views a page as ``tokens_per_page(M)`` tokens of ONE layer's K+V (or MLA
-latent+rope, or SSM state), so models with different KV layouts share the
-same physical pages.  ``tokens_per_page`` = page_elems // per-token-elems,
-with the remainder as internal fragmentation — as in any real pager.
+Heterogeneity (C1): the pool is untyped (flat elements of one pool dtype).
+Each model views a page as ``tokens_per_page(M)`` tokens of ONE layer's K+V
+(or MLA latent+rope, or SSM state), so models with different KV layouts
+share the same physical pages.  ``tokens_per_page`` = page_elems //
+per-token-elems, with the remainder as internal fragmentation — as in any
+real pager.
+
+Device-side state is maintained incrementally:
+
+  * writes are ONE jitted scatter per call (``write_tokens`` /
+    ``write_prompt_from_cache``) with the pool buffer donated — no
+    per-token Python loop, no whole-pool rebind per token;
+  * ``batch_tables`` returns a cached ``[n_layers, B, max_pages]`` device
+    array and re-uploads only the rows whose page mapping actually changed
+    (a request that decodes within its last page does not dirty its row).
 """
 from __future__ import annotations
 
+import functools
 import math
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.kernels.ops import donate_argnums, paged_kv_write
+
+#: The single page-size constant shared by the virtualizer, the pools and
+#: the engine.  16 KiB balances internal fragmentation (half a page per
+#: request per layer on average) against page-table length for long
+#: contexts; it matches the paper's CUDA-VMM granularity choice.
+DEFAULT_PAGE_BYTES = 16 * 1024
 
 
 class OutOfPagesError(RuntimeError):
@@ -79,16 +98,37 @@ class RequestPages:
     tokens: int = 0
     tables: List[List[int]] = field(default_factory=list)   # [layer][chunk]
     state_pages: List[int] = field(default_factory=list)    # SSM constant state
+    # globally monotonic mapping revision (assigned by the virtualizer):
+    # unique per registration AND per page-mapping change, so a reused
+    # request id can never alias a stale cached batch table
+    rev: int = -1
+
+
+_POOL_SCATTER = None
+
+
+def _pool_scatter(pool, kv_flat, pages, slots):
+    """One donated-buffer scatter of ``n`` token rows into the flat pool.
+
+    Jitted lazily so importing this module does not initialize the jax
+    backend (``donate_argnums`` needs to know it)."""
+    global _POOL_SCATTER
+    if _POOL_SCATTER is None:
+        _POOL_SCATTER = jax.jit(paged_kv_write,
+                                donate_argnums=donate_argnums(0))
+    return _POOL_SCATTER(pool, kv_flat, pages, slots)
 
 
 class KVVirtualizer:
     """Host-side pager over one device-resident physical pool."""
 
     def __init__(self, models: Dict[str, ModelConfig], *,
-                 page_budget: int, page_bytes: int = 16 * 1024,
-                 dtype=jnp.bfloat16, allocate_device_pool: bool = True):
+                 page_budget: int, page_bytes: int = DEFAULT_PAGE_BYTES,
+                 dtype=jnp.bfloat16, allocate_device_pool: bool = True,
+                 device=None):
         self.page_bytes = page_bytes
-        self.page_elems = page_bytes // 2          # bf16
+        self.dtype = jnp.dtype(dtype)
+        self.page_elems = page_bytes // self.dtype.itemsize
         self.page_budget = page_budget
         self.views = {n: make_view(c, self.page_elems)
                       for n, c in models.items()}
@@ -97,7 +137,14 @@ class KVVirtualizer:
         self.requests: Dict[int, RequestPages] = {}
         self.pool: Optional[jax.Array] = None
         if allocate_device_pool:
-            self.pool = jnp.zeros((page_budget, self.page_elems), dtype)
+            pool = jnp.zeros((page_budget, self.page_elems), dtype)
+            # co-locate with the KV pool's attention params (``device`` is
+            # KVCachePool's device; None = jax default)
+            self.pool = jax.device_put(pool, device) if device is not None \
+                else pool
+        # incremental device page-table cache: key -> {buf, revs, dev}
+        self._batch_cache: Dict[tuple, dict] = {}
+        self._rev_counter = 0
         # stats
         self.peak_mapped = 0
         self.map_events = 0
@@ -126,7 +173,12 @@ class KVVirtualizer:
     # ------------------------------------------------------------------
     # slow path: map / unmap
     # ------------------------------------------------------------------
+    def _next_rev(self) -> int:
+        self._rev_counter += 1
+        return self._rev_counter
+
     def _take(self, n: int) -> List[int]:
+        """Atomically pop ``n`` pages: raises BEFORE mutating any state."""
         if n > len(self.free_list):
             raise OutOfPagesError(
                 f"need {n} pages, {len(self.free_list)} free "
@@ -138,32 +190,61 @@ class KVVirtualizer:
 
     def register_request(self, request_id: int, model: str,
                          prompt_tokens: int) -> RequestPages:
-        """Map pages for a request's prompt KV (+ SSM state)."""
+        """Map pages for a request's prompt KV (+ SSM state).
+
+        Atomic: the total page count is taken in ONE ``_take``, so an
+        ``OutOfPagesError`` leaves the free list untouched (no partially
+        mapped request to roll back).
+        """
         view = self.views[model]
         cfg = self.configs[model]
-        req = RequestPages(request_id, model)
-        if view.n_kv_layers:
-            chunks = math.ceil(max(prompt_tokens, 1) / view.tokens_per_page)
-            for _ in range(view.n_kv_layers):
-                req.tables.append(self._take(chunks))
+        chunks = math.ceil(max(prompt_tokens, 1) / view.tokens_per_page) \
+            if view.n_kv_layers else 0
         state_pages = math.ceil(cfg.state_bytes_per_request() / self.page_bytes)
+        pages = self._take(chunks * view.n_kv_layers + state_pages)
+        req = RequestPages(request_id, model)
+        for layer in range(view.n_kv_layers):
+            req.tables.append(pages[layer * chunks:(layer + 1) * chunks])
         if state_pages:
-            req.state_pages = self._take(state_pages)
+            req.state_pages = pages[view.n_kv_layers * chunks:]
         req.tokens = prompt_tokens
+        req.rev = self._next_rev()
         self.requests[request_id] = req
         return req
 
+    def pages_needed_for_extend(self, request_id: int,
+                                new_tokens: int = 1) -> int:
+        """Pages a (would-be) ``extend_request`` would map, without mutating
+        anything — lets callers make a multi-request extension atomic by
+        checking the batch total against ``free_pages`` first."""
+        req = self.requests[request_id]
+        view = self.views[req.model]
+        if not view.n_kv_layers:
+            return 0
+        have = len(req.tables[0])
+        need = math.ceil(max(req.tokens + new_tokens, 1)
+                         / view.tokens_per_page)
+        return max(need - have, 0) * view.n_kv_layers
+
     def extend_request(self, request_id: int, new_tokens: int = 1) -> None:
-        """Grow a request by ``new_tokens`` (decode); maps pages on demand."""
+        """Grow a request by ``new_tokens`` (decode); maps pages on demand.
+
+        Atomic: the pages for every layer are taken in ONE ``_take``, so an
+        ``OutOfPagesError`` leaves every layer table at its old (equal)
+        length and the token count unchanged.
+        """
         req = self.requests[request_id]
         view = self.views[req.model]
         if view.n_kv_layers:
-            have = len(req.tables[0]) * view.tokens_per_page
-            need_tokens = req.tokens + new_tokens
-            while have < need_tokens:
-                for t in req.tables:
-                    t.extend(self._take(1))
-                have += view.tokens_per_page
+            have = len(req.tables[0])
+            need = math.ceil(max(req.tokens + new_tokens, 1)
+                             / view.tokens_per_page)
+            delta = need - have
+            if delta > 0:
+                pages = self._take(delta * view.n_kv_layers)
+                for layer, tab in enumerate(req.tables):
+                    tab.extend(pages[layer * delta:(layer + 1) * delta])
+                req.rev = self._next_rev()
         req.tokens += new_tokens
 
     def release_request(self, request_id: int) -> None:
@@ -188,6 +269,52 @@ class KVVirtualizer:
             out[i, : min(len(tab), max_pages)] = tab[: max_pages]
         return jnp.asarray(out)
 
+    def batch_tables(self, model: str,
+                     request_ids: Sequence[Optional[int]],
+                     max_pages: int) -> jax.Array:
+        """[n_layers, B, max_pages] int32 table for a batch of slots.
+
+        ``None`` entries (empty batch slots) map to all ``-1`` rows.  The
+        device array is cached per (model, slot assignment, max_pages) and
+        re-uploaded only when a row's page mapping actually changed — a
+        request decoding within its current last page reuses the cached
+        array with zero host work.
+        """
+        view = self.views[model]
+        key = (model,
+               tuple(-1 if r is None else r for r in request_ids),
+               max_pages)
+        revs = tuple(
+            -1 if rid is None or rid not in self.requests
+            else self.requests[rid].rev
+            for rid in request_ids)
+        entry = self._batch_cache.get(key)
+        if entry is not None and entry["revs"] == revs:
+            return entry["dev"]
+        if entry is None:
+            buf = np.full((view.n_kv_layers, len(request_ids), max_pages),
+                          -1, np.int32)
+            old_revs: tuple = (None,) * len(request_ids)
+        else:
+            buf, old_revs = entry["buf"], entry["revs"]
+        for i, rid in enumerate(request_ids):
+            if old_revs[i] == revs[i]:
+                continue
+            buf[:, i, :] = -1
+            if rid is not None and rid in self.requests:
+                for layer, tab in enumerate(self.requests[rid].tables):
+                    m = min(len(tab), max_pages)
+                    buf[layer, i, :m] = tab[:m]
+        # jnp.array COPIES: jnp.asarray may zero-copy-alias the numpy buffer
+        # on CPU, and ``buf`` is mutated in place on later mapping changes —
+        # an aliased upload would retroactively corrupt tables already
+        # handed to in-flight steps.
+        dev = jnp.array(buf)
+        if len(self._batch_cache) > 64:     # bound stale slot assignments
+            self._batch_cache.clear()
+        self._batch_cache[key] = {"buf": buf, "revs": revs, "dev": dev}
+        return dev
+
     def typed_pages(self, model: str) -> jax.Array:
         """The pool viewed as ``[n_pages, tokens_per_page, *kv_shape]``.
 
@@ -199,22 +326,66 @@ class KVVirtualizer:
         return self.pool[:, :used].reshape(
             (self.page_budget, view.tokens_per_page) + view.kv_shape)
 
+    def _token_coords(self, req: RequestPages, view: ModelView,
+                      tokens: np.ndarray, layer: Optional[int] = None
+                      ) -> Tuple[np.ndarray, np.ndarray]:
+        """(pages, slots) int32 arrays for token indices of one request.
+
+        ``layer=None`` vectorizes over ALL layers: ``tokens`` is [n] and the
+        result is [n_layers * n] in layer-major order.
+        """
+        chunk = tokens // view.tokens_per_page
+        slots = (tokens % view.tokens_per_page).astype(np.int32)
+        if layer is not None:
+            tab = np.asarray(req.tables[layer], np.int32)
+            return tab[chunk], slots
+        tabs = np.asarray(req.tables, np.int32)        # [L, chunks]
+        pages = tabs[:, chunk].reshape(-1)             # [L * n]
+        return pages, np.tile(slots, view.n_kv_layers)
+
     def write_tokens(self, model: str, layer: int, request_id: int,
                      start_token: int, kv: jax.Array) -> None:
         """Write ``kv [n_new, *kv_shape]`` at token offset ``start_token``.
 
-        Slow-ish host-coordinated scatter (engine path; per-layer per-step).
+        One jitted, donated-buffer scatter for the whole token range — the
+        pool buffer is updated in place rather than rebound per token.
         """
         view = self.views[model]
         req = self.requests[request_id]
-        flat = kv.reshape(kv.shape[0], view.per_token_elems).astype(
-            self.pool.dtype)
-        for j in range(kv.shape[0]):
-            tok = start_token + j
-            page = req.tables[layer][tok // view.tokens_per_page]
-            off = (tok % view.tokens_per_page) * view.per_token_elems
-            self.pool = jax.lax.dynamic_update_slice(
-                self.pool, flat[j][None, :], (page, off))
+        n = kv.shape[0]
+        flat = kv.reshape(n, view.per_token_elems)
+        toks = np.arange(start_token, start_token + n)
+        pages, slots = self._token_coords(req, view, toks, layer)
+        self.pool = _pool_scatter(self.pool, flat, jnp.asarray(pages),
+                                  jnp.asarray(slots))
+
+    def write_prompt_from_cache(self, model: str, request_id: int,
+                                cache: Dict, n_tokens: int,
+                                batch_index: int = 0) -> None:
+        """Seed a request's mapped pages from a dense prefill cache.
+
+        ``cache`` is the model's contiguous decode-cache pytree (GQA
+        ``{"k","v": [L,B,T,KV,hd]}`` or MLA ``{"latent","rope"}``); tokens
+        ``[0, n_tokens)`` of row ``batch_index`` are scattered into the
+        request's pages across ALL layers in one device dispatch.
+        """
+        view = self.views[model]
+        req = self.requests[request_id]
+        if "k" in cache:
+            k = cache["k"][:, batch_index, :n_tokens]      # [L,n,KV,hd]
+            v = cache["v"][:, batch_index, :n_tokens]
+            kv = jnp.stack([k, v], axis=2)                 # [L,n,2,KV,hd]
+        else:
+            kv = jnp.concatenate(
+                [cache["latent"][:, batch_index, :n_tokens],
+                 cache["rope"][:, batch_index, :n_tokens]], axis=-1)
+        L = kv.shape[0]
+        assert L == view.n_kv_layers, (L, view.n_kv_layers)
+        flat = kv.reshape(L * n_tokens, view.per_token_elems)
+        toks = np.arange(n_tokens)
+        pages, slots = self._token_coords(req, view, toks)
+        self.pool = _pool_scatter(self.pool, flat, jnp.asarray(pages),
+                                  jnp.asarray(slots))
 
     # ------------------------------------------------------------------
     def utilization(self) -> Dict[str, float]:
@@ -230,5 +401,5 @@ class KVVirtualizer:
             "mapped_pages": self.mapped_pages,
             "free_pages": self.free_pages,
             "peak_mapped": self.peak_mapped,
-            "internal_frag_bytes": frag * 2,
+            "internal_frag_bytes": frag * self.dtype.itemsize,
         }

@@ -63,6 +63,53 @@ def paged_decode_attention(q, kv_pages, page_table, lengths, *, scale: float,
     return ref.paged_decode_attention(q, kv_pages, page_table, lengths, scale)
 
 
+def paged_mla_decode_attention(q, kv_pages, page_table, lengths, *,
+                               latent_dim: int, scale: float,
+                               impl: Optional[str] = None):
+    if _resolve(impl) == "pallas":
+        from repro.kernels import paged_attention as pk
+        return pk.paged_mla_decode_attention(
+            q, kv_pages, page_table, lengths, latent_dim=latent_dim,
+            scale=scale)
+    return ref.paged_mla_decode_attention(q, kv_pages, page_table, lengths,
+                                          latent_dim, scale)
+
+
+# --- paged KV write (pool scatter; pure-jnp, no Pallas variant) ------------
+
+def paged_kv_write(pool, kv_flat, pages, slots):
+    """Scatter per-token KV rows into the flat page pool.
+
+    pool:    [n_pages, page_elems]  the shared physical pool
+    kv_flat: [n, per_token_elems]   one row per token (one layer's K+V,
+                                    or MLA latent+rope)
+    pages:   [n] int32 physical page ids (< 0 = drop the row)
+    slots:   [n] int32 token slot within the page
+
+    Returns the updated pool.  Rows whose page id is negative (unmapped /
+    inactive batch slots) are dropped by the scatter, so callers can pass
+    a full fixed-size batch without masking on the host.  One XLA scatter;
+    jit- and donation-friendly (the pool aliases in place under jit).
+
+    Indices are 2-D (page row, element column) rather than flattened, so
+    they stay far inside int32 range even for pools past 2^31 elements.
+    """
+    n_pages, page_elems = pool.shape
+    e = kv_flat.shape[-1]
+    rows = pages.astype(jnp.int32)
+    # out-of-range sentinel for unmapped rows -> dropped by mode="drop"
+    rows = jnp.where(rows >= 0, rows, n_pages)
+    cols = ((slots.astype(jnp.int32) * e)[:, None]
+            + jnp.arange(e, dtype=jnp.int32)[None, :])
+    return pool.at[rows[:, None], cols].set(
+        kv_flat.astype(pool.dtype), mode="drop")
+
+
+def donate_argnums(*argnums):
+    """Donation argnums, disabled on CPU where XLA cannot alias buffers."""
+    return () if jax.default_backend() == "cpu" else argnums
+
+
 # --- grouped expert GEMM ---------------------------------------------------
 
 def moe_gemm(x, w, group_sizes, *, impl: Optional[str] = None):

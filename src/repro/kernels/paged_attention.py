@@ -9,6 +9,12 @@ step — indirection happens at the DMA level, not as a gather in the compute.
 
 Grid: ``(batch, page_blocks)``, page dimension sequential, online-softmax
 state in VMEM scratch across pages of one request.
+
+``repro.kernels.ops.paged_kv_write`` is the matching write-side primitive:
+one XLA scatter that lands ``n`` token rows at their (page, slot)
+coordinates in the flat pool — jit- and donation-friendly, so the serving
+engine updates the pool buffer in place once per step instead of rebinding
+it per token.
 """
 from __future__ import annotations
 
@@ -197,6 +203,107 @@ def paged_decode_attention(q: jax.Array, kv_pages: jax.Array,
     return pl.pallas_call(
         kernel, grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=interpret,
+    )(page_table.astype(jnp.int32), lengths.astype(jnp.int32),
+      qs, kv_pages)
+
+
+# ---------------------------------------------------------------------------
+# Paged MLA decode attention (absorbed form over [latent | rope] pages)
+# ---------------------------------------------------------------------------
+#
+# In the absorbed MLA decode the per-token cache row is the concatenation
+# [latent (r) | rope key (rp)], and with the absorbed query
+# q = [q_lat | q_rope] the scores are a single dot product against the full
+# row while the value is the latent prefix alone:
+#
+#   s(t)   = q_lat . latent_t + q_rope . rope_t = q . kv_t
+#   ctx    = softmax(s) @ latent
+#
+# so one untyped page layout [ps, r + rp] serves both reads.
+
+def _paged_mla_kernel(page_table_ref, lengths_ref, q_ref, pages_ref, o_ref,
+                      acc_ref, m_ref, l_ref, *, page_size: int,
+                      latent_dim: int):
+    b = pl.program_id(0)
+    p = pl.program_id(1)
+    np_ = pl.num_programs(1)
+    length = lengths_ref[b]
+
+    @pl.when(p == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    mapped = page_table_ref[b, p] >= 0
+
+    @pl.when((p * page_size < length) & mapped)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)                  # [H, r+rp]
+        kv = pages_ref[0].astype(jnp.float32)                # [ps, r+rp]
+        v = kv[:, :latent_dim]                               # [ps, r]
+        pos_t = p * page_size + jax.lax.broadcasted_iota(
+            jnp.int32, (page_size, 1), 0)
+        v = jnp.where(pos_t < length, v, 0.0)   # 0 * OOB-garbage guard
+        s = q @ kv.T                                         # [H, ps]
+        pos_s = p * page_size + jax.lax.broadcasted_iota(
+            jnp.int32, (q.shape[0], page_size), 1)
+        s = jnp.where(pos_s < length, s, NEG_INF)
+
+        m_prev = m_ref[:, 0]
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1))     # [H]
+        alpha = jnp.exp(m_prev - m_cur)
+        pmat = jnp.exp(s - m_cur[:, None])                   # [H, ps]
+        l_ref[:, 0] = l_ref[:, 0] * alpha + jnp.sum(pmat, axis=-1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + pmat @ v
+        m_ref[:, 0] = m_cur
+
+    @pl.when(p == np_ - 1)
+    def _finish():
+        l = l_ref[:, 0]
+        safe = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_ref[...] / safe[:, None]).astype(o_ref.dtype)
+
+
+def paged_mla_decode_attention(q: jax.Array, kv_pages: jax.Array,
+                               page_table: jax.Array, lengths: jax.Array, *,
+                               latent_dim: int, scale: float,
+                               interpret: bool = True) -> jax.Array:
+    """Absorbed-MLA decode attention through the virtualizer's page table.
+
+    q:          [B,1,H, r+rp]  absorbed query [q_latent | q_rope]
+    kv_pages:   [N_pages, page_size, r+rp]  (physical pool, typed view)
+    page_table: [B, max_pages] int32, -1 = unmapped
+    lengths:    [B]
+    Returns the latent context [B,1,H,r]; the caller applies W_uv / W_o.
+    """
+    B, _, H, e = q.shape
+    page_size = kv_pages.shape[1]
+    max_pages = page_table.shape[1]
+    qs = (q.astype(jnp.float32) * scale).astype(q.dtype)
+
+    kernel = functools.partial(_paged_mla_kernel, page_size=page_size,
+                               latent_dim=latent_dim)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, max_pages),
+        in_specs=[
+            pl.BlockSpec((1, 1, H, e), lambda b, p, pt, L: (b, 0, 0, 0)),
+            pl.BlockSpec((1, page_size, e),
+                         lambda b, p, pt, L: (jnp.maximum(pt[b, p], 0), 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, H, latent_dim),
+                               lambda b, p, pt, L: (b, 0, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((H, latent_dim), jnp.float32),
+            pltpu.VMEM((H, 128), jnp.float32),
+            pltpu.VMEM((H, 128), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, 1, H, latent_dim), q.dtype),
         interpret=interpret,
     )(page_table.astype(jnp.int32), lengths.astype(jnp.int32),
       qs, kv_pages)

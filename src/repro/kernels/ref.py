@@ -82,6 +82,32 @@ def paged_decode_attention(q: jax.Array, kv_pages: jax.Array,
     return decode_attention(q, k, v, lengths, scale)
 
 
+def paged_mla_decode_attention(q: jax.Array, kv_pages: jax.Array,
+                               page_table: jax.Array, lengths: jax.Array,
+                               latent_dim: int, scale: float) -> jax.Array:
+    """Absorbed-MLA decode attention through a page table.
+
+    q:          [B,1,H, r+rp]  absorbed query [q_latent | q_rope]
+    kv_pages:   [N_pages, page_size, r+rp]  (the pool's MLA-typed view)
+    page_table: [B, max_pages] int32 physical page ids (-1 = unmapped)
+    lengths:    [B] tokens valid per sequence
+    Returns the latent context [B,1,H,latent_dim].
+    """
+    B, _, H, e = q.shape
+    page_size = kv_pages.shape[1]
+    max_pages = page_table.shape[1]
+    T = max_pages * page_size
+    safe = jnp.maximum(page_table, 0)
+    rows = kv_pages[safe].reshape(B, T, e)          # [B,T, r+rp]
+    scores = jnp.einsum("bshe,bte->bhst", q, rows,
+                        preferred_element_type=jnp.float32) * scale
+    mask = (jnp.arange(T)[None, :] < lengths[:, None])[:, None, None, :]
+    scores = jnp.where(mask, scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(rows.dtype)
+    ctx = jnp.einsum("bhst,btr->bshr", w, rows[..., :latent_dim])
+    return ctx
+
+
 # ---------------------------------------------------------------------------
 # Grouped expert GEMM (token-sorted MoE)
 # ---------------------------------------------------------------------------

@@ -195,6 +195,87 @@ def gqa_decode(p: Dict, cfg: ModelConfig, x: jax.Array,
     return hooks.attn_out(out @ p["wo"]), cache_k, cache_v
 
 
+def gqa_paged_decode(p: Dict, cfg: ModelConfig, x: jax.Array,
+                     pool: jax.Array, page_table: jax.Array, lengths,
+                     *, tokens_per_page: int, hooks: Hooks = IDENTITY_HOOKS,
+                     impl: Optional[str] = None,
+                     ) -> Tuple[jax.Array, jax.Array]:
+    """One-token GQA decode against the shared paged KV pool.
+
+    x: [B,1,D]; pool: [n_pages, page_elems] (the untyped physical pool);
+    page_table: [B, max_pages] int32 for THIS layer (-1 = unmapped);
+    lengths: [B] current context length — the new token's K/V is written at
+    (page_table[b, lengths[b] // tpp], lengths[b] % tpp) and attention reads
+    lengths+1 tokens back through the page table.
+    Returns (out [B,1,D], updated pool).  Rows whose write page is unmapped
+    (inactive batch slots) are dropped by the scatter.
+    """
+    B = x.shape[0]
+    KV, hd = cfg.n_kv_heads, cfg.head_dim
+    per_tok = 2 * KV * hd
+    lengths = jnp.broadcast_to(jnp.asarray(lengths, jnp.int32), (B,))
+    pos = lengths[:, None]
+    q, k, v = _project_qkv(p, cfg, x)
+    if cfg.rope_theta > 0:
+        sin, cos = layers.rope_sin_cos(pos, cfg.head_dim, cfg.rope_theta)
+        q = layers.apply_rope(q, sin, cos)
+        k = layers.apply_rope(k, sin, cos)
+    kv_tok = jnp.stack([k[:, 0], v[:, 0]], axis=1).reshape(B, per_tok)
+    chunk = lengths // tokens_per_page
+    page = jnp.take_along_axis(page_table, chunk[:, None], axis=1)[:, 0]
+    # drop writes past the table horizon (mirrors the dense cache's clamp)
+    page = jnp.where(chunk < page_table.shape[1], page, -1)
+    pool = kops.paged_kv_write(pool, kv_tok, page, lengths % tokens_per_page)
+    n_pages = pool.shape[0]
+    typed = pool[:, : tokens_per_page * per_tok].reshape(
+        n_pages, tokens_per_page, 2, KV, hd)
+    out = kops.paged_decode_attention(q, typed, page_table, lengths + 1,
+                                      scale=cfg.head_dim ** -0.5, impl=impl)
+    out = out.reshape(B, 1, cfg.n_heads * cfg.head_dim).astype(x.dtype)
+    return hooks.attn_out(out @ p["wo"]), pool
+
+
+def mla_paged_decode(p: Dict, cfg: ModelConfig, x: jax.Array,
+                     pool: jax.Array, page_table: jax.Array, lengths,
+                     *, tokens_per_page: int, hooks: Hooks = IDENTITY_HOOKS,
+                     impl: Optional[str] = None,
+                     ) -> Tuple[jax.Array, jax.Array]:
+    """One-token absorbed-MLA decode against the shared paged KV pool.
+
+    The per-token page row is [latent (r) | rope key (rp)] — the same
+    untyped pool the GQA models page into, reinterpreted (Type II sharing).
+    """
+    m = cfg.mla
+    B = x.shape[0]
+    H = cfg.n_heads
+    per_tok = m.kv_lora_rank + m.qk_rope_head_dim
+    lengths = jnp.broadcast_to(jnp.asarray(lengths, jnp.int32), (B,))
+    pos = lengths[:, None]
+    q_nope, q_rope = _mla_queries(p, cfg, x, pos)
+    latent_new, rope_new = _mla_latent(p, cfg, x, pos)
+    kv_tok = jnp.concatenate([latent_new[:, 0], rope_new[:, 0]], axis=-1)
+    chunk = lengths // tokens_per_page
+    page = jnp.take_along_axis(page_table, chunk[:, None], axis=1)[:, 0]
+    # drop writes past the table horizon (mirrors the dense cache's clamp)
+    page = jnp.where(chunk < page_table.shape[1], page, -1)
+    pool = kops.paged_kv_write(pool, kv_tok, page, lengths % tokens_per_page)
+    n_pages = pool.shape[0]
+    typed = pool[:, : tokens_per_page * per_tok].reshape(
+        n_pages, tokens_per_page, per_tok)
+    # absorb W_uk into q; score against [latent | rope] rows directly
+    wuk = p["wuk"].reshape(m.kv_lora_rank, H, m.qk_nope_head_dim)
+    q_lat = jnp.einsum("bshn,rhn->bshr", q_nope, wuk)
+    q_cat = jnp.concatenate([q_lat, q_rope], axis=-1)      # [B,1,H,r+rp]
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    ctx = kops.paged_mla_decode_attention(
+        q_cat, typed, page_table, lengths + 1,
+        latent_dim=m.kv_lora_rank, scale=scale, impl=impl)
+    wuv = p["wuv"].reshape(m.kv_lora_rank, H, m.v_head_dim)
+    out = jnp.einsum("bshr,rhv->bshv", ctx, wuv)
+    out = out.reshape(B, 1, H * m.v_head_dim).astype(x.dtype)
+    return hooks.attn_out(out @ p["wo"]), pool
+
+
 # ---------------------------------------------------------------------------
 # Sliding-window decode (ring-buffer cache; gemma3 local layers)
 # ---------------------------------------------------------------------------

@@ -3,22 +3,32 @@
 End-to-end path (paper §3/§4, decode-side):
 
   arrivals -> AdmissionController (planner budget, queue-or-reject)
-           -> prefill into a batch slot (bucketed, KV pages mapped)
-           -> decode loop:
-                lowering=fused : one compiled step per model per token
-                                 ("persistent kernel" analogue)
+           -> prefill (bucketed); prompt KV is scattered into the SHARED
+              paged pool pages mapped by the admission-time
+              ``register_request``
+           -> decode loop, reading/writing KV through the pool:
+                lowering=fused : one compiled paged step per model per
+                                 token ("persistent kernel" analogue,
+                                 ``PagedFusedStep``)
                 lowering=host  : per-layer attention/FFN dispatches across
                                  the disaggregated pools
                 pipeline=True  : two models' batches kept in flight so
                                  attention and FFN overlap (paper Fig. 4)
-           -> sampling, virtualizer page extension, TBT bookkeeping
+           -> sampling, TBT bookkeeping
            -> release slot + pages, drain admission queue.
+
+The virtualizer's device page pool is the SINGLE source of KV truth for
+every dense/moe/vlm model: total device KV bytes are fixed by
+``page_budget`` alone, independent of how many models are colocated.
+Families outside split execution (SSM/hybrid/enc-dec/SWA) fall back to a
+fused dense-cache path; their pool pages are accounting-only.
 
 Engine-scale model set = the paper's colocation trio at smoke scale; the
 production-mesh behaviour of the same code paths is proven by the dry-run.
 """
 from __future__ import annotations
 
+import math
 import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
@@ -29,10 +39,12 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.admission import AdmissionController, PendingRequest
-from repro.core.control import FusedStep, HostDrivenStep
+from repro.core.control import HostDrivenStep, PagedFusedStep
 from repro.core.pipeline import InflightBatch, LayerPipelineScheduler
+from repro.core import split_exec
 from repro.core.pools import build_pools
-from repro.core.virtualizer import KVVirtualizer, OutOfPagesError
+from repro.core.virtualizer import (DEFAULT_PAGE_BYTES, KVVirtualizer,
+                                    OutOfPagesError)
 from repro.models import build_model
 from repro.runtime.request import Phase, Request
 from repro.runtime.sampler import sample
@@ -68,10 +80,16 @@ class EngineStats:
 
 
 class ModelRunner:
-    """Per-model batch slots + compiled prefill/decode programs."""
+    """Per-model batch slots + compiled prefill/decode programs.
+
+    ``paged=True`` (dense/moe/vlm): NO per-model KV allocation — prefill
+    writes prompt KV into the virtualizer's pool pages, decode steps read
+    and write through page tables.  ``paged=False`` (fused fallback
+    families): a contiguous per-model cache as before.
+    """
 
     def __init__(self, name: str, cfg: ModelConfig, params,
-                 kv_device, w_device, *, max_batch: int, max_ctx: int,
+                 virt: KVVirtualizer, *, max_batch: int, max_ctx: int,
                  mode: EngineMode, pooled=None):
         self.name = name
         self.cfg = cfg
@@ -80,33 +98,53 @@ class ModelRunner:
         self.max_ctx = max_ctx
         self.mode = mode
         self.params = params
-        self.cache = self.model.init_cache(max_batch, max_ctx)
+        self.virt = virt
+        self.pooled = pooled
+        self.paged = pooled is not None and pooled.stage_fns is not None
         self.lengths = np.zeros(max_batch, np.int32)
         self.slots: List[Optional[Request]] = [None] * max_batch
         self.next_tokens = np.zeros(max_batch, np.int32)
-        self.pooled = pooled
 
         mdl = self.model
+        if self.paged:
+            self.view = virt.views[name]
+            self.max_pages = max(
+                1, math.ceil(max_ctx / self.view.tokens_per_page))
+            self.fused: Optional[PagedFusedStep] = (
+                PagedFusedStep(pooled, postprocess=sample)
+                if mode.lowering else None)
 
-        def _prefill(params, tokens, cache, slot, true_len):
-            one = jax.tree.map(
-                lambda c: jax.lax.dynamic_slice_in_dim(c, slot, 1, axis=1),
-                cache)
-            logits, one = mdl.prefill(params, tokens, one,
-                                      logit_index=true_len - 1)
-            cache = jax.tree.map(
-                lambda c, o: jax.lax.dynamic_update_slice_in_dim(
-                    c, o.astype(c.dtype), slot, axis=1),
-                cache, one)
-            return logits, cache
+            # per-request prefill: seed a transient single-row dense cache
+            # (lives only inside this program) and return it so the host
+            # can scatter the prompt KV into pool pages.
+            def _prefill(params, tokens, true_len):
+                cache = mdl.init_cache(1, tokens.shape[1])
+                return mdl.prefill(params, tokens, cache,
+                                   logit_index=true_len - 1)
 
-        self._prefill = jax.jit(_prefill)
+            self._prefill = jax.jit(_prefill)
+        else:
+            self.cache = mdl.init_cache(max_batch, max_ctx)
 
-        def _decode(params, tokens, cache, lengths):
-            logits, cache = mdl.decode_step(params, tokens, cache, lengths)
-            return sample(logits), cache
+            def _prefill_dense(params, tokens, cache, slot, true_len):
+                one = jax.tree.map(
+                    lambda c: jax.lax.dynamic_slice_in_dim(c, slot, 1, axis=1),
+                    cache)
+                logits, one = mdl.prefill(params, tokens, one,
+                                          logit_index=true_len - 1)
+                cache = jax.tree.map(
+                    lambda c, o: jax.lax.dynamic_update_slice_in_dim(
+                        c, o.astype(c.dtype), slot, axis=1),
+                    cache, one)
+                return logits, cache
 
-        self._decode = jax.jit(_decode, donate_argnums=(2,))
+            self._prefill = jax.jit(_prefill_dense)
+
+            def _decode(params, tokens, cache, lengths):
+                logits, cache = mdl.decode_step(params, tokens, cache, lengths)
+                return sample(logits), cache
+
+            self._decode = jax.jit(_decode, donate_argnums=(2,))
 
     # ------------------------------------------------------------------
     def free_slot(self) -> Optional[int]:
@@ -119,14 +157,26 @@ class ModelRunner:
     def active(self) -> bool:
         return any(s is not None for s in self.slots)
 
+    def _active_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots) if s is not None]
+
     def prefill_request(self, req: Request, rng: np.random.Generator) -> int:
         slot = self.free_slot()
         assert slot is not None
         b = _bucket(req.prompt_tokens, self.max_ctx)
         ids = rng.integers(0, self.cfg.vocab_size, b).astype(np.int32)
-        logits, self.cache = self._prefill(
-            self.params, jnp.asarray(ids[None, :]), self.cache,
-            jnp.int32(slot), jnp.int32(req.prompt_tokens))
+        if self.paged:
+            logits, cache = self._prefill(
+                self.params, jnp.asarray(ids[None, :]),
+                jnp.int32(min(req.prompt_tokens, b)))
+            # prompts longer than the bucket are truncated to it, exactly
+            # as the dense prefill's fixed-width cache slice did
+            self.virt.write_prompt_from_cache(
+                self.name, req.request_id, cache, min(req.prompt_tokens, b))
+        else:
+            logits, self.cache = self._prefill(
+                self.params, jnp.asarray(ids[None, :]), self.cache,
+                jnp.int32(slot), jnp.int32(req.prompt_tokens))
         tok = int(jnp.argmax(logits[0]))
         self.slots[slot] = req
         self.lengths[slot] = req.prompt_tokens
@@ -135,38 +185,91 @@ class ModelRunner:
         req.output_ids.append(tok)       # the prefill-sampled first token
         return slot
 
-    def cache_keys(self) -> Tuple[str, str]:
-        return ("k", "v") if "k" in self.cache else ("latent", "rope")
+    # ------------------------------------------------------------------
+    # decode: issue (non-blocking dispatch) / commit (block + bookkeeping)
+    # ------------------------------------------------------------------
+    def _map_next_token(self) -> List[int]:
+        """Extend every active request's mapping to cover the token this
+        step writes (paged models map BEFORE the step).
 
-    def decode_once(self, host_step=None) -> Tuple[np.ndarray, List[int]]:
-        """One decode step for all active slots; returns (tokens, slots).
+        Atomic across the batch: the total page need is checked up front,
+        so a pool exhausted mid-serve raises with NO per-request token
+        drift (active pages are never revoked — paper §3.1; with the
+        admission controller's output reservation this is unreachable
+        unless the budget is under-planned).
+        """
+        act = self._active_slots()
+        need = sum(self.virt.pages_needed_for_extend(
+            self.slots[i].request_id, 1) for i in act)
+        if need > self.virt.free_pages:
+            raise OutOfPagesError(
+                f"{self.name}: decode step needs {need} pages, "
+                f"{self.virt.free_pages} free — raise page_budget or plan "
+                f"with a higher quantile")
+        for i in act:
+            self.virt.extend_request(self.slots[i].request_id, 1)
+        return act
 
-        ``host_step``: optional HostDrivenStep — the lowering-OFF path with
-        per-layer dispatches across the disaggregated pools."""
-        if host_step is None:
-            toks, self.cache = self._decode(
-                self.params, jnp.asarray(self.next_tokens), self.cache,
-                jnp.asarray(self.lengths))
-        else:
-            ka, kb = self.cache_keys()
-            logits, ck, cv = host_step(jnp.asarray(self.next_tokens),
-                                       self.cache[ka], self.cache[kb],
-                                       jnp.asarray(self.lengths))
-            self.cache[ka], self.cache[kb] = ck, cv
-            toks = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        toks = np.asarray(jax.block_until_ready(toks))
-        act = [i for i, s in enumerate(self.slots) if s is not None]
+    def prepare_step(self) -> Tuple[jax.Array, jax.Array, jax.Array, List[int]]:
+        """(tokens, page_tables [L,B,P], lengths, active slots)."""
+        act = self._map_next_token()
+        rids = [s.request_id if s is not None else None for s in self.slots]
+        tables = self.virt.batch_tables(self.name, rids, self.max_pages)
+        return (jnp.asarray(self.next_tokens), tables,
+                jnp.asarray(self.lengths), act)
+
+    def issue_decode(self, host_step: Optional[HostDrivenStep] = None
+                     ) -> Tuple[jax.Array, List[int]]:
+        """Dispatch one decode step for all slots; returns (tokens, act)
+        with the token array still lazy (not blocked on)."""
+        if self.paged:
+            tokens, tables, lengths, act = self.prepare_step()
+            if host_step is not None:
+                logits, pool = host_step(tokens, self.virt.pool, tables,
+                                         lengths)
+                toks = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            else:
+                toks, pool = self.fused(tokens, self.virt.pool, tables,
+                                        lengths)
+            self.virt.pool = pool
+            return toks, act
+        act = self._active_slots()
+        toks, self.cache = self._decode(
+            self.params, jnp.asarray(self.next_tokens), self.cache,
+            jnp.asarray(self.lengths))
+        return toks, act
+
+    def commit_decode(self, pending: Tuple[jax.Array, List[int]]
+                      ) -> Tuple[np.ndarray, List[int]]:
+        toks_dev, act = pending
+        toks = np.asarray(jax.block_until_ready(toks_dev))
         for i in act:
             self.lengths[i] += 1
             self.next_tokens[i] = toks[i]
+            if not self.paged:
+                # fallback families: page accounting AFTER the step (their
+                # KV lives in the dense cache; pages track budget only)
+                self.virt.extend_request(self.slots[i].request_id, 1)
         return toks, act
 
-    def apply_pipeline_result(self, batch) -> Tuple[np.ndarray, List[int]]:
-        """Write back an InflightBatch completed by the scheduler."""
-        ka, kb = self.cache_keys()
-        self.cache[ka], self.cache[kb] = batch.cache_k, batch.cache_v
+    def decode_once(self, host_step: Optional[HostDrivenStep] = None
+                    ) -> Tuple[np.ndarray, List[int]]:
+        """One decode step for all active slots; returns (tokens, slots)."""
+        return self.commit_decode(self.issue_decode(host_step))
+
+    # ------------------------------------------------------------------
+    def make_inflight_batch(self, batch_id: int) -> Tuple[InflightBatch, List[int]]:
+        """Package this model's slots for the layer-wise scheduler."""
+        tokens, tables, lengths, act = self.prepare_step()
+        return InflightBatch(
+            batch_id=batch_id, model=self.name, tokens=tokens,
+            page_tables=tables, lengths=lengths), act
+
+    def apply_pipeline_result(self, batch: InflightBatch, act: List[int]
+                              ) -> Tuple[np.ndarray, List[int]]:
+        """Write back an InflightBatch completed by the scheduler (KV is
+        already in the pool; only token/length state lives here)."""
         toks = np.asarray(jnp.argmax(batch.logits, axis=-1).astype(jnp.int32))
-        act = [i for i, s in enumerate(self.slots) if s is not None]
         for i in act:
             self.lengths[i] += 1
             self.next_tokens[i] = toks[i]
@@ -180,7 +283,7 @@ class ModelRunner:
 
 class CrossPoolEngine:
     def __init__(self, models: Dict[str, ModelConfig], *,
-                 page_budget: int, page_bytes: int = 4096,
+                 page_budget: int, page_bytes: int = DEFAULT_PAGE_BYTES,
                  max_batch: int = 4, max_ctx: int = 256,
                  mode: Optional[EngineMode] = None, seed: int = 0,
                  slow_step_factor: float = 4.0):
@@ -192,15 +295,23 @@ class CrossPoolEngine:
 
         params = {n: build_model(c).init(jax.random.PRNGKey(i))
                   for i, (n, c) in enumerate(models.items())}
+        # the pool dtype is the lowest common denominator of the colocated
+        # models (heterogeneous models reinterpret the same untyped pages)
+        pool_dtype = (jnp.float32
+                      if any(c.dtype == "float32" for c in models.values())
+                      else jnp.bfloat16)
+        # a live device pool is only needed when some model decodes through
+        # it; an all-fallback engine keeps host-side page accounting only
+        any_split = any(split_exec.supports_split(c) for c in models.values())
         self.kv_pool, self.w_pool, self.pooled = build_pools(
             models, params, kv_device=self.kv_device, w_device=self.w_device,
             page_budget=page_budget, page_bytes=page_bytes,
-            allocate_device_pool=False)
+            pool_dtype=pool_dtype, allocate_device_pool=any_split)
         self.virt = self.kv_pool.virtualizer
         self.admission = AdmissionController(self.virt)
 
         self.runners = {
-            n: ModelRunner(n, c, params[n], self.kv_device, self.w_device,
+            n: ModelRunner(n, c, params[n], self.virt,
                            max_batch=max_batch, max_ctx=max_ctx,
                            mode=self.mode, pooled=self.pooled[n])
             for n, c in models.items()
@@ -211,7 +322,7 @@ class CrossPoolEngine:
             self.host_steps = {
                 n: HostDrivenStep(self.pooled[n], self.kv_device,
                                   self.w_device)
-                for n in models
+                for n in models if self.pooled[n].stage_fns is not None
             }
             self.scheduler = LayerPipelineScheduler(
                 self.pooled, self.kv_device, self.w_device,
@@ -310,56 +421,48 @@ class CrossPoolEngine:
             self.stats.slow_steps += 1     # straggler flag
         log.append(dt)
 
-    def _decode_model(self, name: str, now: float) -> float:
-        runner = self.runners[name]
-        t0 = time.perf_counter()
-        host = self.host_steps[name] if self.host_steps else None
-        toks, act = runner.decode_once(host)
-        dt = time.perf_counter() - t0
-        self._record_step(name, dt)
-        now += dt
+    def _host_step(self, name: str) -> Optional[HostDrivenStep]:
+        if self.host_steps is None:
+            return None
+        return self.host_steps.get(name)
+
+    def _book_tokens(self, runner: ModelRunner, toks: np.ndarray,
+                     act: List[int], now: float) -> None:
         for i in act:
             req = runner.slots[i]
             req.generated += 1
             req.output_ids.append(int(toks[i]))
             req.token_times.append(now)
             self.stats.tokens_out += 1
-            self.virt.extend_request(req.request_id, 1)
+
+    def _decode_model(self, name: str, now: float) -> float:
+        runner = self.runners[name]
+        t0 = time.perf_counter()
+        toks, act = runner.decode_once(self._host_step(name))
+        dt = time.perf_counter() - t0
+        self._record_step(name, dt)
+        now += dt
+        self._book_tokens(runner, toks, act, now)
         return now
 
     def _decode_pipelined(self, active: List[str], now: float) -> float:
         """Two (or more) models stepped with overlapping execution.
 
-        lowering=ON : every model's fused step is ISSUED before any is
-        blocked on — async dispatch overlaps the programs.
+        lowering=ON : every model's fused paged step is ISSUED before any
+        is blocked on — async dispatch overlaps the programs (the shared
+        pool buffer is threaded through the dispatch chain).
         lowering=OFF: the layer-wise pipeline scheduler interleaves the
         models' attention/FFN stages across the two pools (paper Fig. 4)."""
         if not self.mode.lowering:
             return self._decode_pipelined_host(active, now)
         t0 = time.perf_counter()
-        issued = []
-        for n in active:
+        issued = [(n, self.runners[n].issue_decode(None)) for n in active]
+        dt_all = 0.0
+        for n, pending in issued:
             runner = self.runners[n]
-            toks_dev, runner.cache = runner._decode(
-                runner.params, jnp.asarray(runner.next_tokens), runner.cache,
-                jnp.asarray(runner.lengths))
-            issued.append((n, toks_dev))
-        for n, toks_dev in issued:
-            runner = self.runners[n]
-            toks = np.asarray(jax.block_until_ready(toks_dev))
-            act = [i for i, s in enumerate(runner.slots) if s is not None]
-            dt = time.perf_counter() - t0
-            now_model = now + dt
-            for i in act:
-                runner.lengths[i] += 1
-                runner.next_tokens[i] = toks[i]
-                req = runner.slots[i]
-                req.generated += 1
-                req.output_ids.append(int(toks[i]))
-                req.token_times.append(now_model)
-                self.stats.tokens_out += 1
-                self.virt.extend_request(req.request_id, 1)
-        dt_all = time.perf_counter() - t0
+            toks, act = runner.commit_decode(pending)
+            dt_all = time.perf_counter() - t0
+            self._book_tokens(runner, toks, act, now + dt_all)
         for n in active:
             self._record_step(n, dt_all / len(active))
         return now + dt_all
@@ -367,27 +470,23 @@ class CrossPoolEngine:
     def _decode_pipelined_host(self, active: List[str], now: float) -> float:
         """Layer-wise two-batch pipeline over the disaggregated pools."""
         t0 = time.perf_counter()
-        batches = []
-        for i, n in enumerate(active):
-            runner = self.runners[n]
-            ka, kb = runner.cache_keys()
-            batches.append(InflightBatch(
-                batch_id=i, model=n,
-                tokens=jnp.asarray(runner.next_tokens),
-                cache_k=runner.cache[ka], cache_v=runner.cache[kb],
-                lengths=jnp.asarray(runner.lengths)))
-        done = self.scheduler.run(batches, max_inflight=2)
+        paged = [n for n in active if self.runners[n].paged]
+        fallback = [n for n in active if not self.runners[n].paged]
+        batches, acts = [], {}
+        for i, n in enumerate(paged):
+            batch, act = self.runners[n].make_inflight_batch(i)
+            batches.append(batch)
+            acts[n] = act
+        done, pool = self.scheduler.run(batches, self.virt.pool,
+                                        max_inflight=2)
+        self.virt.pool = pool
         dt_all = time.perf_counter() - t0
         for b in done:
             runner = self.runners[b.model]
-            toks, act = runner.apply_pipeline_result(b)
-            now_model = now + dt_all
-            for i in act:
-                req = runner.slots[i]
-                req.generated += 1
-                req.output_ids.append(int(toks[i]))
-                req.token_times.append(now_model)
-                self.stats.tokens_out += 1
-                self.virt.extend_request(req.request_id, 1)
-            self._record_step(b.model, dt_all / len(active))
-        return now + dt_all
+            toks, act = runner.apply_pipeline_result(b, acts[b.model])
+            self._book_tokens(runner, toks, act, now + dt_all)
+            self._record_step(b.model, dt_all / max(len(paged), 1))
+        now += dt_all
+        for n in fallback:          # families outside split execution
+            now = self._decode_model(n, now)
+        return now

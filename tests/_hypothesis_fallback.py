@@ -1,0 +1,96 @@
+"""Minimal stand-in for ``hypothesis`` when it is not installed.
+
+CI installs the real hypothesis (see requirements-dev.txt); this fallback
+keeps the property tests COLLECTIBLE and RUNNING in hermetic environments
+where third-party installs are unavailable.  It implements just the
+strategy surface the test-suite uses (integers / floats / sampled_from /
+lists / tuples) and drives each ``@given`` test with a deterministic,
+seeded sample sweep instead of hypothesis's adaptive search + shrinking.
+
+Registered from ``conftest.py`` ONLY when ``import hypothesis`` fails.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import sys
+import types
+
+_FALLBACK_EXAMPLES = 10     # per-test cap; keeps the sweep cheap
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng: random.Random):
+        return self._draw(rng)
+
+
+def integers(min_value, max_value):
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def floats(min_value, max_value, **_kw):
+    return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+def sampled_from(elements):
+    elements = list(elements)
+    return _Strategy(lambda rng: elements[rng.randrange(len(elements))])
+
+
+def lists(elements, *, min_size=0, max_size=10, **_kw):
+    return _Strategy(
+        lambda rng: [elements.example(rng)
+                     for _ in range(rng.randint(min_size, max_size))])
+
+
+def tuples(*elements):
+    return _Strategy(lambda rng: tuple(e.example(rng) for e in elements))
+
+
+def settings(max_examples=None, deadline=None, **_kw):
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*arg_strategies, **kw_strategies):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            limit = getattr(wrapper, "_fallback_max_examples", None) \
+                or getattr(fn, "_fallback_max_examples", None) \
+                or _FALLBACK_EXAMPLES
+            rng = random.Random(0)
+            for _ in range(min(limit, _FALLBACK_EXAMPLES)):
+                pos = tuple(s.example(rng) for s in arg_strategies)
+                kw = {k: s.example(rng) for k, s in kw_strategies.items()}
+                fn(*args, *pos, **kwargs, **kw)
+        # hide the strategy-supplied params from pytest's fixture resolution
+        sig = inspect.signature(fn)
+        params = [p for name, p in sig.parameters.items()
+                  if name not in kw_strategies]
+        if arg_strategies:
+            keep = len(params) - len(arg_strategies)
+            params = params[:keep]
+        wrapper.__signature__ = sig.replace(parameters=params)
+        return wrapper
+    return deco
+
+
+def install() -> None:
+    """Register fake ``hypothesis`` / ``hypothesis.strategies`` modules."""
+    st_mod = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "floats", "sampled_from", "lists", "tuples"):
+        setattr(st_mod, name, globals()[name])
+    hyp_mod = types.ModuleType("hypothesis")
+    hyp_mod.given = given
+    hyp_mod.settings = settings
+    hyp_mod.strategies = st_mod
+    hyp_mod.__is_fallback__ = True
+    sys.modules["hypothesis"] = hyp_mod
+    sys.modules["hypothesis.strategies"] = st_mod

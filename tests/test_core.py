@@ -12,7 +12,8 @@ from repro.configs import PAPER_COLOC_SET, get_smoke_config
 from repro.core import planner as planner_mod
 from repro.core.admission import AdmissionController, PendingRequest
 from repro.core import placement
-from repro.core.control import FusedStep, HostDrivenStep, dispatch_count
+from repro.core.control import (FusedStep, HostDrivenStep, PagedFusedStep,
+                                dispatch_count)
 from repro.core.pipeline import InflightBatch, LayerPipelineScheduler
 from repro.core.pools import build_pools
 from repro.core import split_exec
@@ -138,6 +139,75 @@ class TestVirtualizer:
             v.release_request(rid)
         assert v.free_pages == 4096
 
+    def test_register_atomic_on_oom(self):
+        """A register that cannot be fully satisfied takes NOTHING."""
+        v = self._virt(budget=8)
+        name = "qwen3-moe-235b-a22b"
+        tpp = v.views[name].tokens_per_page
+        free0 = v.free_pages
+        # 5 chunks/layer x 2 layers = 10 pages needed: the FIRST layer alone
+        # (5) would fit, so a non-atomic mapper would leak it
+        with pytest.raises(OutOfPagesError):
+            v.register_request(1, name, prompt_tokens=5 * tpp)
+        assert v.free_pages == free0
+        assert 1 not in v.requests
+
+    def test_extend_atomic_on_oom(self):
+        """A failed extend leaves every layer table at its old equal length
+        and the token count unchanged."""
+        v = self._virt(budget=16)
+        v.register_request(1, "qwen3-moe-235b-a22b", prompt_tokens=8)
+        req = v.requests[1]
+        lens0 = [len(t) for t in req.tables]
+        toks0 = req.tokens
+        mapped0 = v.mapped_pages
+        with pytest.raises(OutOfPagesError):
+            v.extend_request(1, 100_000)
+        assert [len(t) for t in req.tables] == lens0
+        assert len({len(t) for t in req.tables}) == 1   # equal lengths
+        assert req.tokens == toks0
+        assert v.mapped_pages == mapped0
+        # the virtualizer stays fully usable: small extends still succeed
+        v.extend_request(1, 1)
+        v.release_request(1)
+        assert v.free_pages == 16
+
+    def test_batch_tables_incremental(self):
+        """The device batch table is re-uploaded only when a row's mapping
+        changes; in-page extends reuse the cached array."""
+        v = self._virt(budget=256)
+        name = "qwen3-moe-235b-a22b"
+        v.register_request(0, name, prompt_tokens=4)
+        t0 = v.batch_tables(name, [0, None], max_pages=4)
+        tpp = v.views[name].tokens_per_page
+        v.extend_request(0, 1)              # still inside the first page
+        t1 = v.batch_tables(name, [0, None], max_pages=4)
+        assert t1 is t0                      # cached device array reused
+        v.extend_request(0, tpp)             # crosses into a new page
+        t2 = v.batch_tables(name, [0, None], max_pages=4)
+        assert t2 is not t0
+        tab = np.asarray(t2)
+        assert tab.shape == (v.views[name].n_kv_layers, 2, 4)
+        assert (tab[:, 1, :] == -1).all()    # empty slot stays unmapped
+        assert (tab[:, 0, :2] >= 0).all()
+
+    def test_batch_tables_not_stale_after_rid_reuse(self):
+        """Releasing and re-registering the SAME request id must not serve
+        the stale cached table (the new mapping owns different pages)."""
+        v = self._virt(budget=64)
+        name = "qwen3-moe-235b-a22b"
+        v.register_request(1, name, prompt_tokens=4)
+        t0 = np.asarray(v.batch_tables(name, [1], max_pages=2))
+        v.release_request(1)
+        v.register_request(99, name, prompt_tokens=4)   # takes the freed pages
+        v.register_request(1, name, prompt_tokens=4)    # same id, new pages
+        t1 = np.asarray(v.batch_tables(name, [1], max_pages=2))
+        expect = np.full_like(t1, -1)
+        for layer, tab in enumerate(v.requests[1].tables):
+            expect[layer, 0, : len(tab)] = tab
+        np.testing.assert_array_equal(t1, expect)
+        assert not np.array_equal(t1, t0)
+
     def test_device_pool_write_read(self):
         models = {"minicpm3-4b": get_smoke_config("minicpm3-4b")}
         v = KVVirtualizer(models, page_budget=32, page_bytes=1024)
@@ -230,14 +300,38 @@ class TestPlacement:
 # split execution + pools + pipeline + control lowering
 # ---------------------------------------------------------------------------
 
-def _pooled_setup(names=("qwen3-moe-235b-a22b", "minicpm3-4b")):
+def _pooled_setup(names=("qwen3-moe-235b-a22b", "minicpm3-4b"),
+                  page_budget=256):
     models = {n: get_smoke_config(n).replace(dtype="float32") for n in names}
     params = {n: build_model(c).init(jax.random.PRNGKey(i))
               for i, (n, c) in enumerate(models.items())}
     kv_pool, w_pool, pooled = build_pools(
-        models, params, page_budget=64, page_bytes=4096,
-        allocate_device_pool=False)
+        models, params, page_budget=page_budget, page_bytes=4096,
+        pool_dtype=jnp.float32)
     return models, params, kv_pool, w_pool, pooled
+
+
+def _map_and_seed(virt, name, model, params, rids, seq, max_len, B=None):
+    """Register ``rids`` in the pool and seed their pages from a dense
+    prefill; returns (dense cache, per-request lengths vector)."""
+    B = B or len(rids)
+    tokens = jnp.zeros((B, seq), jnp.int32)
+    cache = model.init_cache(B, max_len)
+    _, cache = model.prefill(params[name], tokens, cache)
+    for row, rid in enumerate(rids):
+        virt.register_request(rid, name, seq)
+        virt.write_prompt_from_cache(name, rid, cache, seq, batch_index=row)
+    return cache, jnp.full((len(rids),), seq, jnp.int32)
+
+
+def _tables_for(virt, name, rids, max_len):
+    """Extend each request by one token (the decode write) and return the
+    [L,B,P] batch page table."""
+    view = virt.views[name]
+    max_pages = max(1, math.ceil(max_len / view.tokens_per_page))
+    for rid in rids:
+        virt.extend_request(rid, 1)
+    return virt.batch_tables(name, list(rids), max_pages)
 
 
 class TestSplitExec:
@@ -252,28 +346,48 @@ class TestSplitExec:
         kv_bytes = sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(kv_t))
         assert w_bytes > kv_bytes
 
-    def test_host_driven_matches_fused(self):
-        """The disaggregated per-layer path must equal the fused model."""
+    def test_host_driven_paged_matches_fused_dense(self):
+        """The disaggregated per-layer path, serving KV from the SHARED
+        paged pool, must equal the fused dense-cache model."""
         models, params, kv_pool, w_pool, pooled = _pooled_setup(
             ("qwen3-moe-235b-a22b",))
         name = "qwen3-moe-235b-a22b"
         cfg = models[name]
         model = build_model(cfg)
+        virt = kv_pool.virtualizer
         B, seq, max_len = 2, 8, 16
-        rng = np.random.default_rng(0)
-        tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, seq)),
-                             jnp.int32)
-        cache = model.init_cache(B, max_len)
-        _, cache = model.prefill(params[name], tokens, cache)
+        cache, lengths = _map_and_seed(virt, name, model, params,
+                                       rids=(0, 1), seq=seq, max_len=max_len)
         next_tok = jnp.zeros((B,), jnp.int32)
         want, _ = model.decode_step(params[name], next_tok, cache,
                                     jnp.int32(seq))
 
+        tables = _tables_for(virt, name, (0, 1), max_len)
         devs = jax.devices()
         step = HostDrivenStep(pooled[name], devs[0], devs[-1])
-        got, _, _ = step(next_tok, cache["k"], cache["v"], jnp.int32(seq))
+        got, virt.pool = step(next_tok, virt.pool, tables, lengths)
         np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                    rtol=1e-5, atol=1e-5)
+
+    def test_fused_step_consumes_pooled_params(self):
+        """PagedFusedStep (lowering=ON) runs the same pooled param split
+        over the pool and matches the per-layer host-driven path."""
+        models, params, kv_pool, w_pool, pooled = _pooled_setup(
+            ("minicpm3-4b",))
+        name = "minicpm3-4b"
+        model = build_model(models[name])
+        virt = kv_pool.virtualizer
+        B, seq, max_len = 2, 8, 16
+        cache, lengths = _map_and_seed(virt, name, model, params,
+                                       rids=(0, 1), seq=seq, max_len=max_len)
+        want, _ = model.decode_step(params[name], jnp.zeros((B,), jnp.int32),
+                                    cache, jnp.int32(seq))
+        tables = _tables_for(virt, name, (0, 1), max_len)
+        fused = PagedFusedStep(pooled[name])
+        got, virt.pool = fused(jnp.zeros((B,), jnp.int32), virt.pool,
+                               tables, lengths)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-4)
 
     def test_dispatch_count_accounting(self):
         assert dispatch_count(48, fused=True) == 1
@@ -283,21 +397,21 @@ class TestSplitExec:
 class TestPipeline:
     def test_two_batch_interleave_and_early_exit(self):
         models, params, kv_pool, w_pool, pooled = _pooled_setup()
+        virt = kv_pool.virtualizer
         devs = jax.devices()
         sched = LayerPipelineScheduler(pooled, devs[0], devs[-1])
         batches = []
+        B, seq, max_len = 2, 8, 16
         for i, (name, cfg) in enumerate(models.items()):
             model = build_model(cfg)
-            B, seq, max_len = 2, 8, 16
-            tokens = jnp.zeros((B, seq), jnp.int32)
-            cache = model.init_cache(B, max_len)
-            _, cache = model.prefill(params[name], tokens, cache)
-            ck, cv = (cache["k"], cache["v"]) if "k" in cache else (
-                cache["latent"], cache["rope"])
+            rids = (10 * i, 10 * i + 1)
+            _, lengths = _map_and_seed(virt, name, model, params,
+                                       rids=rids, seq=seq, max_len=max_len)
+            tables = _tables_for(virt, name, rids, max_len)
             batches.append(InflightBatch(
                 batch_id=i, model=name, tokens=jnp.zeros((B,), jnp.int32),
-                cache_k=ck, cache_v=cv, lengths=jnp.int32(seq)))
-        done = sched.run(batches, max_inflight=2)
+                page_tables=tables, lengths=lengths))
+        done, virt.pool = sched.run(batches, virt.pool, max_inflight=2)
         assert len(done) == 2
         assert all(b.logits is not None and b.logits.shape[0] == 2
                    for b in done)
@@ -309,24 +423,26 @@ class TestPipeline:
         models, params, kv_pool, w_pool, pooled = _pooled_setup(
             ("minicpm3-4b",))
         name = "minicpm3-4b"
-        cfg = models[name]
-        model = build_model(cfg)
+        model = build_model(models[name])
+        virt = kv_pool.virtualizer
         B, seq, max_len = 2, 8, 16
-        tokens = jnp.zeros((B, seq), jnp.int32)
         devs = jax.devices()
 
-        def make_batch(bid):
-            cache = model.init_cache(B, max_len)
-            _, cache = model.prefill(params[name], tokens, cache)
+        def make_batch(bid, base_rid):
+            rids = (base_rid, base_rid + 1)
+            _, lengths = _map_and_seed(virt, name, model, params,
+                                       rids=rids, seq=seq, max_len=max_len)
+            tables = _tables_for(virt, name, rids, max_len)
             return InflightBatch(
                 batch_id=bid, model=name, tokens=jnp.zeros((B,), jnp.int32),
-                cache_k=cache["latent"], cache_v=cache["rope"],
-                lengths=jnp.int32(seq))
+                page_tables=tables, lengths=lengths)
 
         s1 = LayerPipelineScheduler(pooled, devs[0], devs[-1])
-        out_pipe = s1.run([make_batch(0), make_batch(1)], max_inflight=2)
+        out_pipe, virt.pool = s1.run(
+            [make_batch(0, 0), make_batch(1, 10)], virt.pool, max_inflight=2)
         s2 = LayerPipelineScheduler(pooled, devs[0], devs[-1])
-        out_serial = s2.run_serial([make_batch(0), make_batch(1)])
+        out_serial, virt.pool = s2.run_serial(
+            [make_batch(0, 20), make_batch(1, 30)], virt.pool)
         a = sorted(out_pipe, key=lambda b: b.batch_id)
         b = sorted(out_serial, key=lambda b: b.batch_id)
         for x, y in zip(a, b):
@@ -338,18 +454,17 @@ class TestPipeline:
         models, params, kv_pool, w_pool, pooled = _pooled_setup(
             ("minicpm3-4b",))
         name = "minicpm3-4b"
-        cfg = models[name]
-        model = build_model(cfg)
+        model = build_model(models[name])
+        virt = kv_pool.virtualizer
         B, seq, max_len = 1, 4, 8
-        tokens = jnp.zeros((B, seq), jnp.int32)
         pending = []
         for i in range(4):
-            cache = model.init_cache(B, max_len)
-            _, cache = model.prefill(params[name], tokens, cache)
+            _, lengths = _map_and_seed(virt, name, model, params,
+                                       rids=(i,), seq=seq, max_len=max_len)
+            tables = _tables_for(virt, name, (i,), max_len)
             pending.append(InflightBatch(
                 batch_id=i, model=name, tokens=jnp.zeros((B,), jnp.int32),
-                cache_k=cache["latent"], cache_v=cache["rope"],
-                lengths=jnp.int32(seq)))
+                page_tables=tables, lengths=lengths))
         devs = jax.devices()
         sched = LayerPipelineScheduler(pooled, devs[0], devs[-1])
         first_two, rest = pending[:2], pending[2:]
@@ -357,5 +472,6 @@ class TestPipeline:
         def refill():
             return rest.pop(0) if rest else None
 
-        done = sched.run(first_two, refill=refill, max_inflight=2)
+        done, virt.pool = sched.run(first_two, virt.pool, refill=refill,
+                                    max_inflight=2)
         assert len(done) == 4

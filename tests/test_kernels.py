@@ -14,7 +14,8 @@ from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.moe_gemm import moe_gemm
 from repro.kernels.paged_attention import (contiguous_decode_attention,
-                                           paged_decode_attention)
+                                           paged_decode_attention,
+                                           paged_mla_decode_attention)
 from repro.kernels.ssd_chunked import ssd_scan_chunked
 from repro.kernels.ssd_scan import ssd_scan
 
@@ -112,6 +113,31 @@ def test_paged_decode_matches_ref(B, H, KV, D, ps, npages):
     table = jnp.where(needed, table, -1)
     out = paged_decode_attention(q, pages, table, lengths, scale=D ** -0.5)
     want = ref.paged_decode_attention(q, pages, table, lengths, D ** -0.5)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("B,H,r,rp,ps,npages", [
+    (2, 4, 16, 8, 8, 4),
+    (1, 8, 32, 16, 16, 6),
+    (3, 2, 8, 8, 4, 5),
+])
+def test_paged_mla_decode_matches_ref(B, H, r, rp, ps, npages):
+    """Absorbed-MLA paged kernel vs its oracle, shuffled page table."""
+    e = r + rp
+    ks = jax.random.split(jax.random.PRNGKey(B * H + r), 4)
+    n_phys = B * npages + 3
+    q = _rand(ks[0], (B, 1, H, e))
+    pages = _rand(ks[1], (n_phys, ps, e))
+    perm = jax.random.permutation(ks[2], n_phys)[: B * npages]
+    table = perm.reshape(B, npages).astype(jnp.int32)
+    lengths = jax.random.randint(ks[3], (B,), 1, npages * ps + 1)
+    needed = (lengths[:, None] > jnp.arange(npages)[None, :] * ps)
+    table = jnp.where(needed, table, -1)
+    out = paged_mla_decode_attention(q, pages, table, lengths,
+                                     latent_dim=r, scale=e ** -0.5)
+    want = ref.paged_mla_decode_attention(q, pages, table, lengths,
+                                          r, e ** -0.5)
     np.testing.assert_allclose(np.asarray(out), np.asarray(want),
                                rtol=2e-5, atol=2e-5)
 

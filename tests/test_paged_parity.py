@@ -1,0 +1,159 @@
+"""Paged-pool decode vs dense-cache fused decode: the tentpole invariants.
+
+* multi-step logits parity between the shared-pool paged path (fused AND
+  host-driven lowering) and the dense contiguous-cache path, across GQA
+  and MLA configs;
+* property test: map/extend/release sequences never leak pages and
+  ``utilization()`` stays consistent under mid-sequence OutOfPagesError;
+* engine-level acceptance: the engine allocates a live device pool, split
+  families carry NO dense per-model KV cache, and total device KV bytes
+  are set by ``page_budget`` alone — constant as the colocated model
+  count grows.
+"""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import PAPER_COLOC_SET, get_smoke_config
+from repro.core.control import HostDrivenStep, PagedFusedStep
+from repro.core.pools import build_pools
+from repro.core.virtualizer import KVVirtualizer, OutOfPagesError
+from repro.models import build_model
+
+
+def _setup(name):
+    cfg = get_smoke_config(name).replace(dtype="float32")
+    models = {name: cfg}
+    model = build_model(cfg)
+    params = {name: model.init(jax.random.PRNGKey(0))}
+    kv_pool, w_pool, pooled = build_pools(
+        models, params, page_budget=256, page_bytes=4096,
+        pool_dtype=jnp.float32)
+    return cfg, model, params, kv_pool.virtualizer, pooled
+
+
+@pytest.mark.parametrize("name", ["qwen3-moe-235b-a22b", "minicpm3-4b"])
+@pytest.mark.parametrize("lowering", [True, False])
+def test_paged_decode_matches_dense_multistep(name, lowering):
+    """Greedy-decode N steps through the paged pool and the dense cache in
+    lockstep; every step's logits must agree."""
+    cfg, model, params, virt, pooled = _setup(name)
+    B, seq, max_len, n_steps = 2, 8, 16, 4
+    rng = np.random.default_rng(0)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, seq)), jnp.int32)
+    cache = model.init_cache(B, max_len)
+    _, cache = model.prefill(params[name], tokens, cache)
+
+    for b in range(B):
+        virt.register_request(b, name, seq)
+        virt.write_prompt_from_cache(name, b, cache, seq, batch_index=b)
+
+    view = virt.views[name]
+    max_pages = max(1, math.ceil(max_len / view.tokens_per_page))
+    devs = jax.devices()
+    step = (PagedFusedStep(pooled[name]) if lowering
+            else HostDrivenStep(pooled[name], devs[0], devs[-1]))
+
+    next_tok = jnp.zeros((B,), jnp.int32)
+    for t in range(n_steps):
+        length = seq + t
+        want, cache = model.decode_step(params[name], next_tok, cache,
+                                        jnp.int32(length))
+        for b in range(B):
+            virt.extend_request(b, 1)
+        tables = virt.batch_tables(name, [0, 1], max_pages)
+        got, virt.pool = step(next_tok, virt.pool, tables,
+                              jnp.full((B,), length, jnp.int32))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-4)
+        # feed the SAME (dense-path) greedy token to both paths
+        next_tok = jnp.argmax(want, axis=-1).astype(jnp.int32)
+
+
+@settings(max_examples=15, deadline=None)
+@given(ops=st.lists(
+    st.tuples(st.sampled_from(["register", "extend", "release"]),
+              st.sampled_from(list(PAPER_COLOC_SET)),
+              st.integers(1, 2000)),
+    min_size=1, max_size=30))
+def test_property_no_leak_under_oom(ops):
+    """Random map/extend/release interleavings, including ones that hit
+    OutOfPagesError mid-sequence: no page leaks, no double mapping, layer
+    tables stay equal-length, utilization() stays consistent."""
+    budget = 64
+    virt = KVVirtualizer({n: get_smoke_config(n) for n in PAPER_COLOC_SET},
+                         page_budget=budget, page_bytes=4096,
+                         allocate_device_pool=False)
+    live = {}
+    next_id = 0
+    for op, model, toks in ops:
+        try:
+            if op == "register" or not live:
+                virt.register_request(next_id, model, toks)
+                live[next_id] = model
+                next_id += 1
+            elif op == "extend":
+                rid = next(iter(live))
+                virt.extend_request(rid, toks)
+            else:
+                rid = next(iter(live))
+                virt.release_request(rid)
+                del live[rid]
+        except OutOfPagesError:
+            pass
+        # invariants after EVERY op, failed or not
+        mapped = [p for r in virt.requests.values() for t in r.tables for p in t]
+        mapped += [p for r in virt.requests.values() for p in r.state_pages]
+        assert len(mapped) == len(set(mapped)), "double-mapped page"
+        assert len(mapped) + virt.free_pages == budget, "page leak"
+        for r in virt.requests.values():
+            assert len({len(t) for t in r.tables} | {0}) <= 2, \
+                "unequal layer tables"
+        u = virt.utilization()
+        assert u["mapped_pages"] == len(mapped)
+        assert u["internal_frag_bytes"] >= 0
+    for rid in list(live):
+        virt.release_request(rid)
+    assert virt.free_pages == budget
+
+
+class TestEngineAcceptance:
+    def _engine(self, names, budget=2048):
+        from repro.runtime.engine import CrossPoolEngine, EngineMode
+        models = {n: get_smoke_config(n).replace(dtype="float32")
+                  for n in names}
+        return CrossPoolEngine(models, page_budget=budget, page_bytes=4096,
+                               max_batch=2, max_ctx=64,
+                               mode=EngineMode(pipeline=True, lowering=True))
+
+    def test_live_pool_and_no_dense_caches(self):
+        engine = self._engine(PAPER_COLOC_SET)
+        assert engine.virt.pool is not None
+        for n, runner in engine.runners.items():
+            assert runner.paged, f"{n} should run the paged path"
+            assert not hasattr(runner, "cache"), \
+                f"{n} still allocates a dense KV cache"
+
+    def test_kv_bytes_set_by_page_budget_alone(self):
+        """Device KV bytes stay constant as colocated models grow 1 -> 3."""
+        one = self._engine(PAPER_COLOC_SET[:1])
+        three = self._engine(PAPER_COLOC_SET)
+        assert one.virt.pool.nbytes == three.virt.pool.nbytes
+
+    def test_serves_and_releases(self):
+        from repro.runtime import trace as trace_mod
+        engine = self._engine(PAPER_COLOC_SET)
+        reqs = trace_mod.make_requests(
+            list(PAPER_COLOC_SET), rps_per_model=2.0, horizon_s=2,
+            kind="sharegpt", seed=5, scale_tokens=0.05, max_new_cap=4)[:4]
+        for r in reqs:
+            r.prompt_tokens = max(min(r.prompt_tokens, 24), 4)
+        stats = engine.run(reqs)
+        assert stats.tokens_out > 0
+        assert engine.virt.mapped_pages == sum(
+            sum(len(t) for t in rp.tables) + len(rp.state_pages)
+            for rp in engine.virt.requests.values())
