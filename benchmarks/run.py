@@ -1,16 +1,21 @@
 """Benchmark harness: one module per paper table/figure.
 
-  PYTHONPATH=src python -m benchmarks.run [--only fig7]
+  PYTHONPATH=src python -m benchmarks.run [--only fig7,table1]
 
 Each benchmark prints ``name,key,value`` CSV rows and asserts its paper
-claim; a failing claim fails the harness.
+claim; a failing claim fails the harness.  Every run also writes a
+machine-readable ``BENCH_summary.json`` (name -> ok/fail, wall seconds,
+key metrics) so the perf trajectory can be tracked per PR.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 import traceback
+
+import numpy as np
 
 from benchmarks import (fig1b_kv_accumulation, fig2_kv_availability,
                         fig6_context_scalability, fig7_tbt, kernels_bench,
@@ -27,22 +32,70 @@ BENCHES = {
 }
 
 
-def main() -> None:
+def _jsonable(v):
+    """Benchmarks return ad-hoc dicts (tuple keys, numpy scalars, nested
+    tuples); flatten them into plain JSON."""
+    if isinstance(v, dict):
+        return {str(k): _jsonable(x) for k, x in v.items()}
+    if isinstance(v, (list, tuple)):
+        return [_jsonable(x) for x in v]
+    if isinstance(v, (np.floating, np.integer)):
+        return v.item()
+    if isinstance(v, np.ndarray):
+        return v.tolist()
+    if isinstance(v, (bool, int, float, str)) or v is None:
+        return v
+    return str(v)
+
+
+def _parse_only(arg: str | None) -> dict:
+    if arg is None:
+        return dict(BENCHES)
+    todo = {}
+    for name in arg.split(","):
+        name = name.strip()
+        if not name:
+            continue
+        if name not in BENCHES:
+            raise SystemExit(
+                f"unknown benchmark {name!r}; known: {sorted(BENCHES)}")
+        todo[name] = BENCHES[name]
+    if not todo:
+        raise SystemExit("--only selected no benchmarks")
+    return todo
+
+
+def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default=None, choices=list(BENCHES))
-    args = ap.parse_args()
-    todo = {args.only: BENCHES[args.only]} if args.only else BENCHES
+    ap.add_argument(
+        "--only", default=None, metavar="NAMES",
+        help="comma-separated subset, e.g. --only fig7,table1 "
+             f"(known: {','.join(BENCHES)})")
+    ap.add_argument("--summary", default="BENCH_summary.json",
+                    help="machine-readable per-benchmark results file")
+    args = ap.parse_args(argv)
+    todo = _parse_only(args.only)
+    summary = {}
     failures = 0
     for name, fn in todo.items():
         print(f"\n# === {name} ===")
         t0 = time.time()
         try:
-            fn()
-            print(f"# {name}: OK ({time.time() - t0:.1f}s)")
-        except Exception:
+            metrics = fn()
+            wall = time.time() - t0
+            summary[name] = {"ok": True, "wall_s": round(wall, 2),
+                             "metrics": _jsonable(metrics)}
+            print(f"# {name}: OK ({wall:.1f}s)")
+        except Exception as e:
             failures += 1
+            wall = time.time() - t0
+            summary[name] = {"ok": False, "wall_s": round(wall, 2),
+                             "error": f"{type(e).__name__}: {e}"}
             print(f"# {name}: FAILED\n{traceback.format_exc()}")
-    print(f"\n# benchmarks: {len(todo) - failures}/{len(todo)} passed")
+    with open(args.summary, "w") as f:
+        json.dump(summary, f, indent=2, sort_keys=True)
+    print(f"\n# benchmarks: {len(todo) - failures}/{len(todo)} passed "
+          f"(summary -> {args.summary})")
     sys.exit(1 if failures else 0)
 
 

@@ -12,7 +12,9 @@ import argparse
 import numpy as np
 
 from repro.configs import PAPER_COLOC_SET, get_smoke_config
-from repro.core.planner import WorkloadSpec, plan_pool, worst_case_pages
+from repro.core.planner import (WorkloadSpec, plan_pool, split_device_budget,
+                                worst_case_pages, worst_case_weight_bytes)
+from repro.core.weight_pool import slabs_for_config
 from repro.runtime import trace as trace_mod
 from repro.runtime.engine import CrossPoolEngine, EngineMode
 from repro.runtime.request import percentile
@@ -46,10 +48,29 @@ def main():
     print(f"static worst-case would need {worst} pages "
           f"({worst / max(plan.pool_page_budget, 1):.1f}x the pooled budget)")
 
-    # --- 2. online: serve through the planned budget ----------------------
+    # split one device-byte budget between the KV pool and the weights
+    # arena from the arrival rates (PR-2 splitter); at these smoke rates
+    # every model is expected resident, so the arena sizes to the full
+    # colocation set
+    slab_bytes = 1 << 16
+    all_resident = sum(slabs_for_config(c, slab_bytes)
+                       for c in models.values()) * slab_bytes
+    total = int(1.25 * (plan.pool_bytes + all_resident))
+    dev_plan = split_device_budget(specs, total, page_bytes=4096,
+                                   slab_bytes=slab_bytes, horizon_s=120.0,
+                                   n_trials=3)
+    print(dev_plan.summary())
+    print(f"per-model-static weights baseline: "
+          f"{worst_case_weight_bytes(specs) / 2 ** 20:.1f} MiB device FFN")
+
+    # --- 2. online: serve through the planned budgets ---------------------
+    page_budget = max(dev_plan.page_budget, 512)   # smoke-scale floor
+    print(f"engine budgets: {page_budget} pages, "
+          f"{dev_plan.slot_budget} slabs")
     engine = CrossPoolEngine(
-        models, page_budget=max(plan.pool_page_budget, 512),
-        page_bytes=4096, max_batch=4, max_ctx=64,
+        models, page_budget=page_budget,
+        page_bytes=4096, slot_budget=dev_plan.slot_budget,
+        slab_bytes=slab_bytes, max_batch=4, max_ctx=64,
         mode=EngineMode(pipeline=True, lowering=True))
     reqs = trace_mod.make_requests(
         list(models), rps_per_model=args.rps, horizon_s=args.horizon,
@@ -67,10 +88,8 @@ def main():
           f"{percentile(stats.tbt, 95) * 1e3:.1f} / "
           f"{percentile(stats.tbt, 99) * 1e3:.1f} ms")
     print(f"TTFT p95 = {percentile(stats.ttft, 95) * 1e3:.1f} ms")
-    print(f"admission: {engine.admission.stats}")
-    u = engine.virt.utilization()
-    print(f"pool: peak {u['peak_mapped']}/{engine.virt.page_budget} pages "
-          f"mapped, frag {u['internal_frag_bytes'] / 1024:.1f} KiB")
+    print("=== engine report ===")
+    print(engine.report())
     assert stats.tokens_out > 0
     print("serve_multi_model OK")
 

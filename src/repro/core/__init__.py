@@ -1,15 +1,20 @@
 """CrossPool core: the paper's contribution.
 
-* planner      — Eq. (1)-(2) Monte Carlo P95/P99 pool sizing + plans
+* planner      — Eq. (1)-(2) Monte Carlo P95/P99 pool sizing + plans,
+                 plus the page_budget vs slot_budget device-bytes splitter
 * virtualizer  — paged KV virtualization of one shared physical pool
+* weight_pool  — expert-slab weights arena: cold-model activation/eviction
 * admission    — queue-or-reject enforcement of the planned budget
 * pools        — KVCachePool / WeightsPool engine-level disaggregation
 * split_exec   — proxy-layer split of attention vs FFN execution
-* pipeline     — layer-wise two-batch pipeline scheduler
+* pipeline     — layer-wise two-batch pipeline scheduler (+ slab prefetch)
 * control      — host-driven vs fused ("persistent kernel") decode steps
 * placement    — StaticPartition / kvcached / CrossPool capacity models
 """
 from repro.core.admission import AdmissionController, PendingRequest  # noqa: F401
-from repro.core.planner import (PoolPlan, WorkloadSpec, plan_pool,  # noqa: F401
-                                worst_case_pages)
+from repro.core.planner import (DeviceBytesPlan, PoolPlan,  # noqa: F401
+                                WorkloadSpec, plan_pool,
+                                split_device_budget, worst_case_pages)
 from repro.core.virtualizer import KVVirtualizer, OutOfPagesError  # noqa: F401
+from repro.core.weight_pool import (OutOfSlabsError, WeightArena,  # noqa: F401
+                                    slabs_for_config)

@@ -24,11 +24,27 @@ class PendingRequest:
 
 
 @dataclass
+class ModelAdmissionStats:
+    """Per-model admitted/queued/rejected counters."""
+
+    admitted: int = 0
+    queued: int = 0
+    rejected: int = 0
+
+
+@dataclass
 class AdmissionStats:
     admitted: int = 0
     queued: int = 0
     rejected: int = 0
     queue_wait_total: float = 0.0
+    per_model: Dict[str, ModelAdmissionStats] = field(default_factory=dict)
+
+    def bump(self, model: str, outcome: str) -> None:
+        """Count one admission outcome globally AND for ``model``."""
+        setattr(self, outcome, getattr(self, outcome) + 1)
+        m = self.per_model.setdefault(model, ModelAdmissionStats())
+        setattr(m, outcome, getattr(m, outcome) + 1)
 
 
 class AdmissionController:
@@ -47,14 +63,14 @@ class AdmissionController:
     def offer(self, req: PendingRequest, now: float) -> str:
         """Returns 'admitted' | 'queued' | 'rejected'."""
         if self._try_admit(req):
-            self.stats.admitted += 1
+            self.stats.bump(req.model, "admitted")
             return "admitted"
         if len(self.queues[req.model]) < self.max_queue:
             req.enqueue_time = now
             self.queues[req.model].append(req)
-            self.stats.queued += 1
+            self.stats.bump(req.model, "queued")
             return "queued"
-        self.stats.rejected += 1
+        self.stats.bump(req.model, "rejected")
         return "rejected"
 
     def _try_admit(self, req: PendingRequest) -> bool:
@@ -80,7 +96,7 @@ class AdmissionController:
                 if self._try_admit(head):
                     q.popleft()
                     self.stats.queue_wait_total += now - head.enqueue_time
-                    self.stats.admitted += 1
+                    self.stats.bump(model, "admitted")
                     admitted.append(head)
                     progress = True
         return admitted

@@ -10,7 +10,12 @@ mapping, the paper's split.
 
 Both lowering modes now serve decode from the virtualizer's SHARED paged
 KV pool: steps take ``(tokens, pool, page_tables, lengths)`` and thread
-the (donated) pool buffer through every layer's attention stage.
+the (donated) pool buffer through every layer's attention stage.  FFN
+weights are symmetric: both modes gather each layer's expert / dense-MLP
+slabs from the SHARED weights arena (``repro.core.weight_pool``) through
+the model's slot table — there is no per-model device ``w_params`` tree;
+the arena buffer and slot table are fetched from the pooled model's arena
+at call time, so activating/evicting cold models never recompiles a step.
 
 ``HostDrivenStep`` is the ablation baseline (Table 3 row 1): every layer
 issues separate attention-stage and FFN-stage dispatches with host Python
@@ -22,8 +27,9 @@ paged attention + proxy boundary + FFN, and the final logits are ONE
 compiled ``lax.scan`` program consuming the same pooled param split
 (kv_params / w_params) as the host-driven path.
 
-``FusedStep`` (dense contiguous cache) remains as the fallback for the
-fused SSM/hybrid/enc-dec families that bypass split execution.
+Families that bypass split execution (SSM/hybrid/enc-dec/SWA) decode
+through the fused dense-cache ``model.decode_step`` program compiled by
+``runtime.engine.ModelRunner`` — there is no separate step class for them.
 """
 from __future__ import annotations
 
@@ -34,10 +40,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.core import split_exec
 from repro.core.pools import PooledModel, transfer
 from repro.kernels.ops import donate_argnums as _donate
-from repro.models import build_model
 
 
 class HostDrivenStep:
@@ -48,8 +52,8 @@ class HostDrivenStep:
         self.kv_device = kv_device
         self.w_device = w_device
         fns = pooled.stage_fns
-        # execution placement follows the committed pool params: attention
-        # stages run where kv_params live, FFN stages where w_params live.
+        # execution placement follows the committed pool buffers: attention
+        # stages run where kv_params live, FFN stages where the arena lives.
         self._embed = jax.jit(fns.embed)
         self._attn = jax.jit(fns.attn_stage, donate_argnums=_donate(2))
         self._ffn = jax.jit(fns.ffn_stage)
@@ -60,13 +64,14 @@ class HostDrivenStep:
                  ) -> Tuple[jax.Array, jax.Array]:
         """tokens [B]; pool [n_pages, page_elems]; page_tables [L,B,P];
         lengths [B].  Returns (logits [B,V], updated pool)."""
-        p_kv, p_w = self.pooled.kv_params, self.pooled.w_params
+        p_kv = self.pooled.kv_params
+        abuf, slot_table = self.pooled.arena.acquire(self.pooled.cfg.name)
         x = self._embed(p_kv, tokens)
         for layer in range(self.pooled.stage_fns.n_layers):
             x, ffn_in, pool = self._attn(
                 p_kv, x, pool, page_tables, lengths, layer)
             ffn_in_w = transfer(ffn_in, self.w_device)      # A-to-F
-            ffn_out = self._ffn(p_w, ffn_in_w, layer)
+            ffn_out = self._ffn(abuf, slot_table, ffn_in_w, layer)
             ffn_out_kv = transfer(ffn_out, self.kv_device)  # F-to-A
             x = self._combine(x, ffn_out_kv)
         return self._logits(p_kv, x), pool
@@ -77,14 +82,15 @@ class HostDrivenStep:
         Yields ("attn"|"ffn", layer) after issuing that stage's dispatch;
         the final return carries (logits, pool) in ``self.result``.
         """
-        p_kv, p_w = self.pooled.kv_params, self.pooled.w_params
+        p_kv = self.pooled.kv_params
+        abuf, slot_table = self.pooled.arena.acquire(self.pooled.cfg.name)
         x = self._embed(p_kv, tokens)
         for layer in range(self.pooled.stage_fns.n_layers):
             x, ffn_in, pool = self._attn(
                 p_kv, x, pool, page_tables, lengths, layer)
             yield ("attn", layer)
             ffn_in_w = transfer(ffn_in, self.w_device)
-            ffn_out = self._ffn(p_w, ffn_in_w, layer)
+            ffn_out = self._ffn(abuf, slot_table, ffn_in_w, layer)
             yield ("ffn", layer)
             ffn_out_kv = transfer(ffn_out, self.kv_device)
             x = self._combine(x, ffn_out_kv)
@@ -108,25 +114,27 @@ class PagedFusedStep:
                  postprocess: Optional[Callable] = None, device=None):
         self.pooled = pooled
         fns = pooled.stage_fns
-        # the pooled trees live on different pool devices; commit both to
-        # ONE device (the KV pool's, where the page pool lives) so the
-        # fused program has a single placement — as with the dense
-        # FusedStep, lowering=ON trades placement freedom for one dispatch
+        # the attention-side params are committed to ONE device (the KV
+        # pool's, where the page pool lives) so the fused program has a
+        # single placement; FFN weights arrive per call as the shared
+        # arena buffer + slot table (the engine colocates the arena with
+        # the KV pool when lowering is on) — lowering=ON trades placement
+        # freedom for one dispatch
         if device is None:
             leaves = jax.tree.leaves(pooled.kv_params)
             device = (next(iter(leaves[0].devices())) if leaves
                       else jax.devices()[0])
         self._p_kv = jax.device_put(pooled.kv_params, device)
-        self._p_w = jax.device_put(pooled.w_params, device)
 
-        def step(p_kv, p_w, tokens, pool, page_tables, lengths):
+        def step(p_kv, arena, slot_table, tokens, pool, page_tables,
+                 lengths):
             x = fns.embed(p_kv, tokens)
 
             def body(carry, layer):
                 x, pool = carry
                 x, ffn_in, pool = fns.attn_stage(
                     p_kv, x, pool, page_tables, lengths, layer)
-                ffn_out = fns.ffn_stage(p_w, ffn_in, layer)
+                ffn_out = fns.ffn_stage(arena, slot_table, ffn_in, layer)
                 x = fns.combine(x, ffn_out)
                 return (x, pool), None
 
@@ -136,39 +144,13 @@ class PagedFusedStep:
             out = postprocess(logits) if postprocess is not None else logits
             return out, pool
 
-        self._step = jax.jit(step, donate_argnums=_donate(3))
+        self._step = jax.jit(step, donate_argnums=_donate(4))
 
     def __call__(self, tokens, pool, page_tables, lengths
                  ) -> Tuple[jax.Array, jax.Array]:
-        return self._step(self._p_kv, self._p_w,
+        abuf, slot_table = self.pooled.arena.acquire(self.pooled.cfg.name)
+        return self._step(self._p_kv, abuf, slot_table,
                           tokens, pool, page_tables, lengths)
-
-
-class FusedStep:
-    """Dense-cache fused step over a merged param tree (ablation/test
-    baseline).  The engine's fallback families (SSM / hybrid / enc-dec /
-    SWA) decode through ``ModelRunner._decode`` — the same fused
-    ``model.decode_step`` program — rather than through this class.
-    """
-
-    def __init__(self, pooled: PooledModel, device=None):
-        self.pooled = pooled
-        cfg = pooled.cfg
-        model = build_model(cfg)
-        params = split_exec.merge_params(pooled.kv_params, pooled.w_params)
-        # the merged tree mixes pool devices; commit it to ONE device so the
-        # fused program has a single placement
-        device = device or jax.devices()[0]
-        self.params = jax.device_put(params, device)
-
-        def step(params, tokens, cache, lengths):
-            return model.decode_step(params, tokens, cache, lengths)
-
-        self._step = jax.jit(step)
-
-    def __call__(self, tokens, cache: Dict, lengths
-                 ) -> Tuple[jax.Array, Dict]:
-        return self._step(self.params, tokens, cache, lengths)
 
 
 def dispatch_count(n_layers: int, fused: bool) -> int:

@@ -12,7 +12,12 @@ All batches read and write KV through ONE shared paged pool (the
 virtualizer's device array): each :class:`InflightBatch` carries only its
 page tables and lengths, and the scheduler threads the pool buffer through
 every attention stage — batches touch disjoint pages, so interleaving
-order cannot corrupt KV state.
+order cannot corrupt KV state.  FFN weights come from the ONE shared
+weights arena the same way (models own disjoint slabs), and the scheduler
+extends the paper's transfer hiding from hidden states to weights: while
+batch B's layer-L attention is in flight in the KV pool, layer L+1's
+weight slabs are prefetched into the arena (``WeightArena
+.prefetch_layer``), so cold-model upload traffic hides behind compute.
 
 Execution is asynchronous: every stage issue returns a lazy jax value, so
 stages bound to the two pool devices genuinely overlap; the scheduler's job
@@ -68,6 +73,11 @@ class LayerPipelineScheduler:
             for name, pm in pooled.items()
             if pm.stage_fns is not None
         }
+        # the ONE shared weights arena (every pooled model carries the
+        # same object); None only for accounting-only pool builds
+        self.arena = next(
+            (pm.arena for pm in pooled.values() if pm.arena is not None),
+            None)
         self.stage_log: List[Tuple[int, str, str, int]] = []  # (batch,model,stage,layer)
 
     # ------------------------------------------------------------------
@@ -78,18 +88,27 @@ class LayerPipelineScheduler:
         step = self.steps[b.model]
         fns = self.pooled[b.model].stage_fns
         p_kv = self.pooled[b.model].kv_params
-        p_w = self.pooled[b.model].w_params
+        arena = self.arena
         if b.phase == "embed":
+            # map the model's slabs (upload streams in layer by layer);
+            # layer 0 is pulled eagerly so the first FFN never stalls
+            arena.activate(b.model, upload=False)
+            arena.prefetch_layer(b.model, 0)
             b.x = step._embed(p_kv, b.tokens)
             b.phase = "attn"
         elif b.phase == "attn":
             b.x, ffn_in, pool = step._attn(
                 p_kv, b.x, pool, b.page_tables, b.lengths, b.layer)
+            # transfer hiding, weights edition: issue layer L+1's slab
+            # upload while layer L's attention is in flight
+            arena.prefetch_layer(b.model, b.layer + 1)
             b.ffn_in = transfer(ffn_in, self.w_device)       # A-to-F
             self.stage_log.append((b.batch_id, b.model, "attn", b.layer))
             b.phase = "ffn"
         elif b.phase == "ffn":
-            out = step._ffn(p_w, b.ffn_in, b.layer)
+            arena.prefetch_layer(b.model, b.layer)   # no-op once prefetched
+            out = step._ffn(arena.arena, arena.slot_table(b.model),
+                            b.ffn_in, b.layer)
             b.ffn_out = transfer(out, self.kv_device)        # F-to-A
             self.stage_log.append((b.batch_id, b.model, "ffn", b.layer))
             b.phase = "combine"

@@ -26,6 +26,8 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.virtualizer import DEFAULT_PAGE_BYTES
+from repro.core.weight_pool import (DEFAULT_SLAB_BYTES, slabs_for_config,
+                                    static_ffn_bytes)
 
 
 @dataclass(frozen=True)
@@ -165,6 +167,101 @@ def plan_pool(specs: Sequence[WorkloadSpec], *,
         per_model=per_model,
         horizon_s=horizon_s,
     )
+
+
+@dataclass(frozen=True)
+class DeviceBytesPlan:
+    """How one device-byte budget splits between the two pools.
+
+    ``page_budget`` bounds the shared KV pool and ``slot_budget`` bounds
+    the weights arena — together they are the ONLY knobs that set device
+    bytes for the paged families, so this split IS the device memory plan.
+    """
+
+    total_bytes: int
+    page_bytes: int
+    slab_bytes: int
+    page_budget: int                       # KV pool pages
+    slot_budget: int                       # weights arena slabs
+    kv_target_bytes: float                 # planner's P-quantile KV demand
+    weight_target_bytes: float             # expected-resident arena demand
+    resident_probability: Dict[str, float]  # P(model active at random t)
+
+    def summary(self) -> str:
+        kv_b = self.page_budget * self.page_bytes
+        w_b = self.slot_budget * self.slab_bytes
+        lines = [f"device split: {kv_b / 2 ** 30:.2f} GiB KV "
+                 f"({self.page_budget} pages) + {w_b / 2 ** 30:.2f} GiB "
+                 f"weights arena ({self.slot_budget} slabs) "
+                 f"of {self.total_bytes / 2 ** 30:.2f} GiB"]
+        for name, p in self.resident_probability.items():
+            lines.append(f"  {name}: P(resident)={p:.3f}")
+        return "\n".join(lines)
+
+
+def split_device_budget(specs: Sequence[WorkloadSpec], total_bytes: int, *,
+                        page_bytes: int = DEFAULT_PAGE_BYTES,
+                        slab_bytes: int = DEFAULT_SLAB_BYTES,
+                        quantile: float = 0.99, horizon_s: float = 3600.0,
+                        residency_s: float = 300.0, n_trials: int = 4,
+                        seed: int = 0) -> DeviceBytesPlan:
+    """Split one device-byte budget into ``page_budget`` vs ``slot_budget``.
+
+    KV demand is the Eq. (2) Monte Carlo P-quantile (:func:`plan_pool`).
+    Weights demand uses the arrival rates: a cold model is resident
+    whenever it served a request within the last ``residency_s`` seconds
+    (the engine keeps weights mapped while requests are in flight and
+    evicts LRU), so under Poisson arrivals
+    ``P(resident) = 1 - exp(-lambda_M * residency_s)`` and the expected
+    arena working set is ``sum_M P(resident) * slabs(M)``.  The weights
+    floor is the largest single model (it must fit to serve at all); both
+    targets are scaled proportionally when they exceed ``total_bytes``.
+    """
+    kv_plan = plan_pool(specs, page_bytes=page_bytes, quantile=quantile,
+                        horizon_s=horizon_s, n_trials=n_trials, seed=seed)
+    kv_target = float(kv_plan.pool_bytes)
+
+    p_res: Dict[str, float] = {}
+    w_target = 0.0
+    w_floor = 0
+    for spec in specs:
+        cfg = spec.model
+        p = 1.0 - math.exp(-spec.arrival_rate * residency_s)
+        p_res[cfg.name] = p
+        slabs = slabs_for_config(cfg, slab_bytes)
+        w_target += p * slabs * slab_bytes
+        w_floor = max(w_floor, slabs * slab_bytes)
+    w_target = max(w_target, float(w_floor))
+    if total_bytes < w_floor + page_bytes:
+        raise ValueError(
+            f"total_bytes={total_bytes} cannot hold the largest model's "
+            f"weights ({w_floor} B) plus one KV page — no plan from this "
+            f"budget can serve; raise total_bytes or shrink the model set")
+
+    want = kv_target + w_target
+    if want > total_bytes:
+        scale = total_bytes / want
+        kv_target *= scale
+        w_target = max(w_target * scale, float(w_floor))
+        kv_target = min(kv_target, total_bytes - w_target)
+    else:
+        kv_target += total_bytes - want     # spare bytes buy KV headroom
+
+    return DeviceBytesPlan(
+        total_bytes=total_bytes,
+        page_bytes=page_bytes,
+        slab_bytes=slab_bytes,
+        page_budget=max(int(kv_target // page_bytes), 1),
+        slot_budget=max(int(math.ceil(w_target / slab_bytes)), 1),
+        kv_target_bytes=kv_target,
+        weight_target_bytes=w_target,
+        resident_probability=p_res,
+    )
+
+
+def worst_case_weight_bytes(specs: Sequence[WorkloadSpec]) -> int:
+    """Static baseline: every colocated model's FFN device-resident."""
+    return sum(static_ffn_bytes(s.model) for s in specs)
 
 
 def worst_case_pages(specs: Sequence[WorkloadSpec], page_bytes: int,

@@ -15,6 +15,13 @@ pool is the single source of KV truth for every split-execution model;
 dense contiguous caches survive only in the fused fallback path
 (``repro.models.decode``) used by the SSM/hybrid/enc-dec/SWA families.
 
+The FFN stage is symmetric on the weights side: it does NOT close over a
+per-model ``w_params`` tree.  It takes ``(arena, slot_table, ffn_in,
+layer)`` and gathers the layer's expert / dense-MLP slabs out of the
+SHARED weights arena (``repro.core.weight_pool.WeightArena``) through the
+model's slot table, so FFN weights are read exactly like KV pages and
+cold models can be activated/evicted without recompiling the stages.
+
 Supported families: dense / moe / vlm with GQA or MLA attention — the
 paper's serving targets.
 """
@@ -27,6 +34,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.core import weight_pool
 from repro.core.virtualizer import ModelView
 from repro.models import attention as attn
 from repro.models import layers, moe as moe_mod
@@ -39,7 +47,8 @@ class StageFns(NamedTuple):
     attn_stage: Callable     # (params, x, pool, page_tables [L,B,P],
     #                           lengths [B], layer)
     #                           -> (x_resid, ffn_input, pool)
-    ffn_stage: Callable      # (params, ffn_input, layer)      -> ffn_out
+    ffn_stage: Callable      # (arena [S,slab], slot_table [L,spl],
+    #                           ffn_input, layer)              -> ffn_out
     combine: Callable        # (x_resid, ffn_out)              -> x
     logits: Callable         # (params, x)                     -> [B,V]
     n_layers: int
@@ -63,12 +72,15 @@ def supports_split(cfg: ModelConfig) -> bool:
             and cfg.attention in ("gqa", "mla"))
 
 
-def make_stage_fns(cfg: ModelConfig, view: ModelView) -> StageFns:
-    """Stage functions over the shared paged pool.
+def make_stage_fns(cfg: ModelConfig, view: ModelView,
+                   w_view: "weight_pool.ModelArenaView") -> StageFns:
+    """Stage functions over the shared paged pool + the weights arena.
 
     ``view`` is the virtualizer's :class:`ModelView` for this model — it
     fixes the static page geometry (``tokens_per_page``) the stage programs
-    compile against.
+    compile against.  ``w_view`` is the weights arena's
+    :class:`~repro.core.weight_pool.ModelArenaView` — it fixes the static
+    slab geometry the FFN stage's gather/bitcast unpacker compiles against.
     """
     if not supports_split(cfg):
         raise ValueError(
@@ -98,8 +110,10 @@ def make_stage_fns(cfg: ModelConfig, view: ModelView) -> StageFns:
         ffn_in = layers.rms_norm(x, p_l["ln2"], cfg.norm_eps)
         return x, ffn_in, pool
 
-    def ffn_stage(params, ffn_in, layer):
-        p_l = _layer_params(params, layer)
+    def ffn_stage(arena, slot_table, ffn_in, layer):
+        row = jax.lax.dynamic_index_in_dim(slot_table, layer, 0,
+                                           keepdims=False)
+        p_l = w_view.unpack_layer(arena, row)
         if cfg.is_moe:
             out, _ = moe_mod.apply_moe(p_l["moe"], ffn_in, cfg)
         else:

@@ -1,0 +1,526 @@
+"""Weights-pool virtualizer: an expert-slab arena for cold models' FFN.
+
+The KV side of the paper virtualizes cache memory behind ONE shared page
+pool (``repro.core.virtualizer``).  This module is its weights-side twin
+(DESIGN.md §5): device FFN/MoE bytes for every colocated cold model come
+out of ONE pre-allocated **arena** of fixed-size slabs, and "loading a
+model" is slot-table bookkeeping plus an async host->device upload — not a
+per-model ``device_put`` that scales with the colocation count.
+
+  * the arena is an untyped byte array ``[slot_budget, slab_bytes]``
+    (uint8): heterogeneous models — bf16 experts, f32 routers — share the
+    same physical slabs and are reconstructed bit-exactly by in-program
+    bitcasts, the weights analogue of the KV pool's untyped pages;
+  * every model's FFN tree is decomposed into per-layer **slab units**:
+    one unit per expert (``wg``/``wu``/``wd`` of one expert of one layer)
+    plus one "rest" unit per layer (router, shared experts, or the whole
+    dense MLP).  A unit occupies ``ceil(unit_bytes / slab_bytes)`` slabs;
+  * **slow path** (host, per activation): ``activate`` / ``evict`` move
+    slab ids between the free list and per-model slot tables.  Mapping is
+    ATOMIC — eviction candidates are planned first and the slab count is
+    taken in one step, so ``OutOfSlabsError`` leaves the arena untouched
+    (same rule as ``KVVirtualizer.register_request``);
+  * **fast path** (device, per layer): ``ffn_stage`` gathers one layer's
+    slab rows through the model's slot table (``ModelArenaView
+    .unpack_layer``) and bitcasts them back into expert/MLP weight
+    tensors — weights are read through a table exactly like KV pages;
+  * master copies stay HOST-resident (packed slab form), so eviction is
+    free (weights are read-only) and re-activation re-uploads the same
+    bytes: an evict/re-activate round trip is bit-for-bit invisible;
+  * uploads are per-layer scatters, so the layer-wise pipeline can
+    prefetch layer L+1's slabs while layer L's attention runs
+    (``prefetch_layer``) — the paper's transfer-hiding scheduler extended
+    from hidden states to weights.
+
+Idle models are evicted clock/LRU under pressure; models with in-flight
+requests are pinned and never evicted (the weights analogue of "active
+pages are never revoked", paper §3.1).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.kernels.ops import donate_argnums
+from repro.models.moe import EXPERT_STACKED_LEAVES
+
+#: Slab granularity of the weights arena.  Weights move in whole-expert
+#: units (tens of MB at paper scale), so the slab is far coarser than the
+#: 16 KiB KV page: 1 MiB keeps per-expert internal fragmentation under a
+#: slab per unit while the slot table stays short.
+DEFAULT_SLAB_BYTES = 1 << 20
+
+
+class OutOfSlabsError(RuntimeError):
+    pass
+
+
+# ---------------------------------------------------------------------------
+# Static layout: how one model's FFN tree maps onto slabs
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class LeafSpec:
+    """One weight tensor inside a slab unit."""
+
+    path: Tuple[str, ...]          # e.g. ("moe", "wg") / ("mlp", "wd")
+    dtype: jnp.dtype
+    shape: Tuple[int, ...]         # per-unit shape (no layer/expert axes)
+    offset: int                    # byte offset inside the unit
+    nbytes: int
+
+
+@dataclass(frozen=True)
+class UnitSpec:
+    """A fixed-size allocation unit: one expert, or one layer's rest."""
+
+    kind: str                      # "expert" | "rest"
+    count: int                     # units of this kind per layer (E or 1)
+    leaves: Tuple[LeafSpec, ...]
+    unit_bytes: int
+    slabs_per_unit: int
+    slab_offset: int               # first slab of this kind in a layer row
+
+
+def _leaf_paths(tree: Dict, prefix: Tuple[str, ...] = ()) -> List[Tuple[Tuple[str, ...], np.ndarray]]:
+    out = []
+    for k in sorted(tree):
+        v = tree[k]
+        if isinstance(v, dict):
+            out.extend(_leaf_paths(v, prefix + (k,)))
+        else:
+            out.append((prefix + (k,), v))
+    return out
+
+
+def _is_expert_leaf(path: Tuple[str, ...], cfg: ModelConfig) -> bool:
+    """Leaves stacked over the expert axis: moe/{wg,wu,wd} [L,E,...]."""
+    return (cfg.is_moe and len(path) == 2 and path[0] == "moe"
+            and path[1] in EXPERT_STACKED_LEAVES)
+
+
+def _build_specs(kind: str, leaves: Sequence[Tuple[Tuple[str, ...], np.ndarray]],
+                 count: int, per_unit_axes: int, slab_bytes: int,
+                 slab_offset: int) -> Optional[UnitSpec]:
+    """Lay ``leaves`` out back-to-back inside one unit.
+
+    ``per_unit_axes`` is how many leading axes (layer, expert) to strip
+    from the stacked array shape to get the per-unit tensor shape.
+    """
+    if not leaves:
+        return None
+    specs, off = [], 0
+    for path, arr in leaves:
+        shape = tuple(arr.shape[per_unit_axes:])
+        dt = jnp.dtype(arr.dtype)
+        nbytes = int(np.prod(shape, dtype=np.int64)) * dt.itemsize if shape \
+            else dt.itemsize
+        specs.append(LeafSpec(path, dt, shape, off, nbytes))
+        off += nbytes
+    return UnitSpec(kind, count, tuple(specs), off,
+                    max(1, math.ceil(off / slab_bytes)), slab_offset)
+
+
+def _bitcast_from_bytes(raw: jax.Array, dtype: jnp.dtype) -> jax.Array:
+    """uint8 [..., n*itemsize] -> dtype [..., n] (value-exact)."""
+    itemsize = jnp.dtype(dtype).itemsize
+    n = raw.shape[-1] // itemsize
+    arr = raw.reshape(raw.shape[:-1] + (n, itemsize))
+    return jax.lax.bitcast_convert_type(arr, dtype)
+
+
+@dataclass
+class ModelArenaView:
+    """Static slab geometry of one model + the in-program unpacker.
+
+    The layout is identical for every layer, so a model's residency is a
+    ``[n_layers, slabs_per_layer]`` slot table and ``unpack_layer`` is one
+    gather + static slicing/bitcasting compiled into the FFN stage.
+    """
+
+    name: str
+    n_layers: int
+    units: Tuple[UnitSpec, ...]
+    slabs_per_layer: int
+    slab_bytes: int
+
+    @property
+    def total_slabs(self) -> int:
+        return self.n_layers * self.slabs_per_layer
+
+    def unpack_layer(self, arena: jax.Array, row: jax.Array) -> Dict:
+        """Rebuild one layer's FFN param tree from the arena.
+
+        ``arena``: [slot_budget, slab_bytes] uint8; ``row``:
+        [slabs_per_layer] int32 slab ids.  ONE gather for the whole layer,
+        then static slices + bitcasts per leaf — bit-for-bit the packed
+        host bytes.
+        """
+        rows = arena[row]                       # [slabs_per_layer, slab_bytes]
+        out: Dict = {}
+        for u in self.units:
+            chunk = jax.lax.slice_in_dim(
+                rows, u.slab_offset,
+                u.slab_offset + u.count * u.slabs_per_unit, axis=0)
+            chunk = chunk.reshape(u.count, u.slabs_per_unit * self.slab_bytes)
+            for leaf in u.leaves:
+                raw = jax.lax.slice_in_dim(
+                    chunk, leaf.offset, leaf.offset + leaf.nbytes, axis=1)
+                val = _bitcast_from_bytes(raw, leaf.dtype)
+                # expert units keep their stacked [E, ...] axis even when
+                # E == 1 (apply_moe expects the init_moe layout); rest
+                # units are per-layer tensors with no unit axis
+                val = val.reshape(((u.count,) if u.kind == "expert" else ())
+                                  + leaf.shape)
+                dst = out
+                for k in leaf.path[:-1]:
+                    dst = dst.setdefault(k, {})
+                dst[leaf.path[-1]] = val
+        return out
+
+
+def build_view_and_slabs(name: str, cfg: ModelConfig, w_tree: Dict, *,
+                         slab_bytes: int
+                         ) -> Tuple[ModelArenaView, np.ndarray]:
+    """Decompose a split FFN tree into (static view, packed host slabs).
+
+    ``w_tree`` is ``split_exec.split_params``' weights-pool half with
+    layer-stacked leaves (host numpy).  Returns the view plus the packed
+    master copy ``[n_layers, slabs_per_layer, slab_bytes]`` uint8 — the
+    HOST-resident source every (re-)upload scatters from.
+    """
+    layer_leaves = _leaf_paths(w_tree["layers"])
+    n_layers = layer_leaves[0][1].shape[0]
+    expert = [(p, a) for p, a in layer_leaves if _is_expert_leaf(p, cfg)]
+    rest = [(p, a) for p, a in layer_leaves if not _is_expert_leaf(p, cfg)]
+
+    units: List[UnitSpec] = []
+    off = 0
+    eu = _build_specs("expert", expert, cfg.n_experts, 2, slab_bytes, off)
+    if eu is not None:
+        units.append(eu)
+        off += eu.count * eu.slabs_per_unit
+    ru = _build_specs("rest", rest, 1, 1, slab_bytes, off)
+    if ru is not None:
+        units.append(ru)
+        off += ru.slabs_per_unit
+    view = ModelArenaView(name, n_layers, tuple(units), off, slab_bytes)
+
+    slabs = np.zeros((n_layers, view.slabs_per_layer, slab_bytes), np.uint8)
+    by_path = {p: a for p, a in layer_leaves}
+    for u in view.units:
+        for leaf in u.leaves:
+            arr = np.ascontiguousarray(by_path[leaf.path])
+            # [L, count, unit_elems*itemsize] raw bytes of this leaf
+            raw = arr.reshape(n_layers, u.count, -1).view(np.uint8)
+            span = slabs[:, u.slab_offset:
+                         u.slab_offset + u.count * u.slabs_per_unit]
+            span = span.reshape(n_layers, u.count,
+                                u.slabs_per_unit * slab_bytes)
+            span[:, :, leaf.offset:leaf.offset + leaf.nbytes] = raw
+    return view, slabs
+
+
+# ---------------------------------------------------------------------------
+# Analytic accounting (planner / Table 1 — no weights needed)
+# ---------------------------------------------------------------------------
+
+def _cfg_itemsize(cfg: ModelConfig) -> int:
+    return 4 if cfg.dtype == "float32" else 2
+
+
+def slabs_for_config(cfg: ModelConfig, slab_bytes: int = DEFAULT_SLAB_BYTES
+                     ) -> int:
+    """Arena slabs a fully resident model needs, from the config alone.
+
+    Mirrors :func:`build_view_and_slabs` geometry: per layer, E expert
+    units (3 matrices each) + one rest unit (router [+ shared experts], or
+    the whole dense MLP).
+    """
+    d, isz = cfg.d_model, _cfg_itemsize(cfg)
+    n_mats = 3 if cfg.mlp_kind == "swiglu" else 2
+    if cfg.is_moe:
+        expert_bytes = 3 * d * cfg.d_ff * isz
+        rest_bytes = d * cfg.n_experts * 4                 # f32 router
+        if cfg.n_shared_experts:
+            rest_bytes += 3 * d * cfg.n_shared_experts * cfg.d_ff * isz
+        per_layer = (cfg.n_experts * math.ceil(expert_bytes / slab_bytes)
+                     + math.ceil(rest_bytes / slab_bytes))
+    else:
+        per_layer = math.ceil(n_mats * d * cfg.d_ff * isz / slab_bytes)
+    return cfg.n_layers * per_layer
+
+
+def static_ffn_bytes(cfg: ModelConfig) -> int:
+    """Per-model-static baseline: the model's full FFN bytes device-resident."""
+    return cfg.param_counts()["ffn"] * _cfg_itemsize(cfg)
+
+
+# ---------------------------------------------------------------------------
+# The arena
+# ---------------------------------------------------------------------------
+
+@dataclass
+class Residency:
+    """One resident model's mapping into the arena."""
+
+    slots: np.ndarray              # [n_layers, slabs_per_layer] int32
+    uploaded: np.ndarray           # [n_layers] bool (per-layer streaming)
+    last_used: int = 0             # LRU clock tick
+    rev: int = -1                  # bumped per activation (table cache key)
+
+
+_ARENA_SCATTER = None
+
+
+def _arena_scatter(arena, ids, rows):
+    """One donated-buffer scatter of packed slab rows into the arena."""
+    global _ARENA_SCATTER
+    if _ARENA_SCATTER is None:
+        _ARENA_SCATTER = jax.jit(
+            lambda a, i, r: a.at[i].set(r),
+            donate_argnums=donate_argnums(0))
+    return _ARENA_SCATTER(arena, ids, rows)
+
+
+class WeightArena:
+    """Host-side slab allocator over one device-resident weights arena."""
+
+    def __init__(self, *, slab_bytes: int = DEFAULT_SLAB_BYTES, device=None):
+        self.slab_bytes = slab_bytes
+        self.device = device
+        self.slot_budget = 0
+        self.arena: Optional[jax.Array] = None
+        self.free_list: List[int] = []
+        self.views: Dict[str, ModelArenaView] = {}
+        self.host_slabs: Dict[str, np.ndarray] = {}
+        self.residency: Dict[str, Residency] = {}
+        self.pins: Dict[str, int] = {}
+        self._clock = 0
+        self._rev_counter = 0
+        self._table_cache: Dict[str, dict] = {}
+        # stats
+        self.activations = 0
+        self.evictions = 0
+        self.layer_uploads = 0
+
+    # ------------------------------------------------------------------
+    # registration / allocation
+    # ------------------------------------------------------------------
+    def add_model(self, name: str, cfg: ModelConfig, w_tree: Dict) -> None:
+        """Register a cold model: pack its host master slabs + build the
+        static view.  No device memory is touched."""
+        view, slabs = build_view_and_slabs(name, cfg, w_tree,
+                                           slab_bytes=self.slab_bytes)
+        self.views[name] = view
+        self.host_slabs[name] = slabs
+
+    def finalize(self, slot_budget: Optional[int] = None, *,
+                 allocate: bool = True) -> None:
+        """Fix the budget and (optionally) allocate the device arena.
+
+        Default budget = every registered model fully resident — callers
+        shrink it to force demand paging of cold models.
+        """
+        if slot_budget is None:
+            slot_budget = max(
+                sum(v.total_slabs for v in self.views.values()), 1)
+        self.slot_budget = slot_budget
+        self.free_list = list(range(slot_budget - 1, -1, -1))
+        if allocate:
+            arena = jnp.zeros((slot_budget, self.slab_bytes), jnp.uint8)
+            self.arena = jax.device_put(arena, self.device) \
+                if self.device is not None else arena
+
+    # ------------------------------------------------------------------
+    # accounting
+    # ------------------------------------------------------------------
+    @property
+    def free_slabs(self) -> int:
+        return len(self.free_list)
+
+    @property
+    def resident_slabs(self) -> int:
+        return self.slot_budget - len(self.free_list)
+
+    def device_bytes(self) -> int:
+        """Device FFN bytes: fixed by ``slot_budget`` alone."""
+        return self.slot_budget * self.slab_bytes
+
+    def host_master_bytes(self) -> int:
+        return sum(s.nbytes for s in self.host_slabs.values())
+
+    def is_resident(self, name: str) -> bool:
+        return name in self.residency
+
+    def utilization(self) -> Dict[str, float]:
+        return {
+            "slot_budget": self.slot_budget,
+            "resident_slabs": self.resident_slabs,
+            "free_slabs": self.free_slabs,
+            "resident_models": len(self.residency),
+            "activations": self.activations,
+            "evictions": self.evictions,
+            "layer_uploads": self.layer_uploads,
+            "device_bytes": self.device_bytes(),
+        }
+
+    # ------------------------------------------------------------------
+    # slow path: activate / evict (atomic)
+    # ------------------------------------------------------------------
+    def _next_rev(self) -> int:
+        self._rev_counter += 1
+        return self._rev_counter
+
+    def touch(self, name: str) -> None:
+        if name in self.residency:
+            self._clock += 1
+            self.residency[name].last_used = self._clock
+
+    def pin(self, name: str) -> None:
+        self.pins[name] = self.pins.get(name, 0) + 1
+
+    def unpin(self, name: str) -> None:
+        n = self.pins.get(name, 0) - 1
+        if n <= 0:
+            self.pins.pop(name, None)
+        else:
+            self.pins[name] = n
+        self.touch(name)
+
+    def _take(self, n: int) -> List[int]:
+        """Atomically pop ``n`` slabs: raises BEFORE mutating any state."""
+        if n > len(self.free_list):
+            raise OutOfSlabsError(
+                f"need {n} slabs, {len(self.free_list)} free "
+                f"(budget {self.slot_budget})")
+        return [self.free_list.pop() for _ in range(n)]
+
+    def _plan_evictions(self, need: int) -> List[str]:
+        """LRU victims whose slabs make ``need`` fit — WITHOUT evicting.
+
+        Raises ``OutOfSlabsError`` (no state change) when even evicting
+        every unpinned idle model cannot free enough.
+        """
+        if need <= self.free_slabs:
+            return []
+        victims: List[str] = []
+        would_free = self.free_slabs
+        idle = sorted((r.last_used, n) for n, r in self.residency.items()
+                      if n not in self.pins)
+        for _, n in idle:
+            victims.append(n)
+            would_free += self.views[n].total_slabs
+            if would_free >= need:
+                return victims
+        raise OutOfSlabsError(
+            f"activation needs {need} slabs; only {would_free} reachable "
+            f"after evicting all idle models (budget {self.slot_budget}, "
+            f"pinned: {sorted(self.pins)})")
+
+    def activate(self, name: str, *, upload: bool = True) -> Residency:
+        """Make a cold model resident: map its slabs (evicting idle LRU
+        models under pressure) and optionally upload every layer.
+
+        Atomic: eviction victims are planned BEFORE any state changes and
+        the slab count is taken in one ``_take``, so ``OutOfSlabsError``
+        leaves the free list, every residency and all pins untouched.
+        ``upload=False`` maps slots only — the pipeline's per-layer
+        prefetch (or ``ensure_model_uploaded``) streams the bytes in.
+        """
+        if name in self.residency:
+            self.touch(name)
+            return self.residency[name]
+        view = self.views[name]
+        for victim in self._plan_evictions(view.total_slabs):
+            self.evict(victim)
+        slabs = self._take(view.total_slabs)
+        res = Residency(
+            slots=np.asarray(slabs, np.int32).reshape(
+                view.n_layers, view.slabs_per_layer),
+            uploaded=np.zeros(view.n_layers, bool),
+            rev=self._next_rev())
+        self.residency[name] = res
+        self.activations += 1
+        self.touch(name)
+        if upload:
+            self.ensure_model_uploaded(name)
+        return res
+
+    def evict(self, name: str) -> None:
+        """Return an idle model's slabs to the free list.
+
+        Master bytes live on the host, so eviction copies nothing back;
+        re-activation reproduces the identical weights.
+        """
+        if name in self.pins:
+            raise ValueError(f"cannot evict pinned model {name!r}")
+        res = self.residency.pop(name)
+        self.free_list.extend(int(s) for s in res.slots.ravel())
+        self._table_cache.pop(name, None)
+        self.evictions += 1
+
+    # ------------------------------------------------------------------
+    # uploads (slow path, but overlappable with compute)
+    # ------------------------------------------------------------------
+    def _upload_layers(self, name: str, layers: np.ndarray) -> None:
+        res = self.residency[name]
+        if self.arena is not None:
+            ids = res.slots[layers].reshape(-1)
+            rows = self.host_slabs[name][layers].reshape(-1, self.slab_bytes)
+            self.arena = _arena_scatter(self.arena, jnp.asarray(ids),
+                                        jnp.asarray(rows))
+        res.uploaded[layers] = True
+        self.layer_uploads += len(layers)
+
+    def prefetch_layer(self, name: str, layer: int) -> None:
+        """Issue (async) the upload of one layer's slabs; no-op if already
+        uploaded or out of range — the pipeline calls this for layer L+1
+        while layer L's attention is in flight."""
+        res = self.residency.get(name)
+        if res is None or layer < 0 or layer >= len(res.uploaded) \
+                or res.uploaded[layer]:
+            return
+        self._upload_layers(name, np.asarray([layer]))
+
+    def ensure_model_uploaded(self, name: str) -> None:
+        """Upload every not-yet-streamed layer (one scatter)."""
+        res = self.residency[name]
+        missing = np.flatnonzero(~res.uploaded)
+        if len(missing):
+            self._upload_layers(name, missing)
+
+    def acquire(self, name: str) -> Tuple[jax.Array, jax.Array]:
+        """(arena buffer, slot table) with ``name`` resident and uploaded —
+        the one residency protocol every decode step goes through.
+
+        ``activate`` is a host-side no-op (LRU touch) when the model is
+        already resident; a cold call activates it on first use.
+        """
+        self.activate(name)
+        self.ensure_model_uploaded(name)
+        return self.arena, self.slot_table(name)
+
+    # ------------------------------------------------------------------
+    # fast path: device slot tables
+    # ------------------------------------------------------------------
+    def slot_table(self, name: str) -> jax.Array:
+        """[n_layers, slabs_per_layer] int32 device table, cached per
+        activation rev (re-activation remaps -> re-upload)."""
+        res = self.residency.get(name)
+        if res is None:
+            raise KeyError(f"model {name!r} is not resident in the arena")
+        entry = self._table_cache.get(name)
+        if entry is not None and entry["rev"] == res.rev:
+            return entry["dev"]
+        dev = jnp.asarray(res.slots)
+        if self.device is not None:
+            dev = jax.device_put(dev, self.device)
+        self._table_cache[name] = {"rev": res.rev, "dev": dev}
+        return dev

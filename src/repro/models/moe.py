@@ -26,6 +26,12 @@ from repro.models import layers
 from repro.models.hooks import Hooks, IDENTITY_HOOKS
 from repro.kernels import ops as kops
 
+#: Leaves of ``init_moe`` stacked over the leading expert axis ``[E, ...]``.
+#: The weights-pool virtualizer slices these per expert into arena slab
+#: units (``repro.core.weight_pool``); everything else in the tree (router,
+#: shared experts) is per-layer.  Keep in sync with :func:`init_moe`.
+EXPERT_STACKED_LEAVES = ("wg", "wu", "wd")
+
 
 def init_moe(key, cfg: ModelConfig, dtype) -> Dict:
     d, f, E = cfg.d_model, cfg.d_ff, cfg.n_experts

@@ -23,6 +23,15 @@ every dense/moe/vlm model: total device KV bytes are fixed by
 Families outside split execution (SSM/hybrid/enc-dec/SWA) fall back to a
 fused dense-cache path; their pool pages are accounting-only.
 
+Since PR 2 the weights side is symmetric: decode-path FFN/MoE weights
+live in ONE shared slab arena (``repro.core.weight_pool.WeightArena``)
+whose device bytes are fixed by ``slot_budget`` alone.  A cold model is
+ACTIVATED into the arena when its first request reaches a batch slot
+(evicting idle models LRU under pressure), pinned while it has in-flight
+requests, and unpinned as they finish; in host-driven pipeline mode the
+activation maps slots only and the layer-wise scheduler prefetches each
+layer's slabs behind the previous layer's attention.
+
 Engine-scale model set = the paper's colocation trio at smoke scale; the
 production-mesh behaviour of the same code paths is proven by the dry-run.
 """
@@ -38,13 +47,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core.admission import AdmissionController, PendingRequest
+from repro.core.admission import (AdmissionController, AdmissionStats,
+                                  PendingRequest)
 from repro.core.control import HostDrivenStep, PagedFusedStep
 from repro.core.pipeline import InflightBatch, LayerPipelineScheduler
 from repro.core import split_exec
 from repro.core.pools import build_pools
 from repro.core.virtualizer import (DEFAULT_PAGE_BYTES, KVVirtualizer,
                                     OutOfPagesError)
+from repro.core.weight_pool import DEFAULT_SLAB_BYTES, OutOfSlabsError
 from repro.models import build_model
 from repro.runtime.request import Phase, Request
 from repro.runtime.sampler import sample
@@ -73,6 +84,10 @@ class EngineStats:
     ttft: List[float] = field(default_factory=list)
     step_times: Dict[str, List[float]] = field(default_factory=dict)
     slow_steps: int = 0            # straggler-mitigation counter
+    # live view of the admission controller's counters (global + per model)
+    admission: Optional[AdmissionStats] = None
+    # weights-arena counters (activations/evictions/uploads), set by run()
+    weights_pool: Dict[str, float] = field(default_factory=dict)
 
     @property
     def throughput(self) -> float:
@@ -284,6 +299,8 @@ class ModelRunner:
 class CrossPoolEngine:
     def __init__(self, models: Dict[str, ModelConfig], *,
                  page_budget: int, page_bytes: int = DEFAULT_PAGE_BYTES,
+                 slot_budget: Optional[int] = None,
+                 slab_bytes: int = DEFAULT_SLAB_BYTES,
                  max_batch: int = 4, max_ctx: int = 256,
                  mode: Optional[EngineMode] = None, seed: int = 0,
                  slow_step_factor: float = 4.0):
@@ -306,8 +323,18 @@ class CrossPoolEngine:
         self.kv_pool, self.w_pool, self.pooled = build_pools(
             models, params, kv_device=self.kv_device, w_device=self.w_device,
             page_budget=page_budget, page_bytes=page_bytes,
-            pool_dtype=pool_dtype, allocate_device_pool=any_split)
+            pool_dtype=pool_dtype, allocate_device_pool=any_split,
+            slot_budget=slot_budget, slab_bytes=slab_bytes,
+            # the fused step is ONE program with a single placement, so the
+            # arena must be colocated with the KV pool when lowering is on;
+            # host-driven mode keeps it in the weights pool, where FFN runs
+            arena_device=(self.kv_device if self.mode.lowering
+                          else self.w_device),
+            # engine-managed activation: models become resident when their
+            # first request reaches a batch slot (cold-model activation)
+            activate_resident=False)
         self.virt = self.kv_pool.virtualizer
+        self.arena = self.w_pool.arena if any_split else None
         self.admission = AdmissionController(self.virt)
 
         self.runners = {
@@ -327,7 +354,25 @@ class CrossPoolEngine:
             self.scheduler = LayerPipelineScheduler(
                 self.pooled, self.kv_device, self.w_device,
                 steps=self.host_steps)
-        self.stats = EngineStats(step_times={n: [] for n in models})
+        self.stats = EngineStats(step_times={n: [] for n in models},
+                                 admission=self.admission.stats)
+
+    # ------------------------------------------------------------------
+    def _activate_model(self, name: str) -> None:
+        """Make a cold model's weights resident before its first prefill.
+
+        In host-driven pipeline mode, activation maps slabs only and the
+        layer-wise scheduler streams the uploads behind attention stages;
+        otherwise the whole resident set is uploaded here.  The model is
+        pinned per in-flight request so LRU eviction (triggered by some
+        OTHER model's activation under slab pressure) can never revoke
+        weights that are being decoded with.
+        """
+        if self.arena is None or not self.runners[name].paged:
+            return
+        stream = self.mode.pipeline and not self.mode.lowering
+        self.arena.activate(name, upload=not stream)
+        self.arena.pin(name)
 
     # ------------------------------------------------------------------
     def _admit(self, req: Request, now: float) -> str:
@@ -342,6 +387,8 @@ class CrossPoolEngine:
         req.phase = Phase.FINISHED
         req.finish_time = now
         self.virt.release_request(req.request_id)
+        if self.arena is not None and self.runners[req.model].paged:
+            self.arena.unpin(req.model)      # idle models become evictable
 
     # ------------------------------------------------------------------
     def run(self, requests: List[Request], *,
@@ -383,6 +430,18 @@ class CrossPoolEngine:
                 runner = self.runners[req.model]
                 if runner.free_slot() is not None:
                     t0 = time.perf_counter()
+                    try:
+                        self._activate_model(req.model)
+                    except OutOfSlabsError:
+                        # every resident model is pinned by in-flight
+                        # requests; those pins drop as they finish, so the
+                        # request stays waiting — UNLESS the model can
+                        # never fit even an empty arena (budget error)
+                        if self.arena.views[req.model].total_slabs \
+                                > self.arena.slot_budget:
+                            raise
+                        still.append(req)
+                        continue
                     runner.prefill_request(req, self.rng)
                     dt = time.perf_counter() - t0
                     now += dt
@@ -412,7 +471,38 @@ class CrossPoolEngine:
         self.stats.wall_s = now
         for r in requests:
             self.stats.tbt.extend(r.tbt_samples())
+        if self.arena is not None:
+            self.stats.weights_pool = self.arena.utilization()
         return self.stats
+
+    # ------------------------------------------------------------------
+    def report(self) -> str:
+        """Human-readable serving report: throughput, per-model admission
+        outcomes, KV-pool and weights-arena utilization."""
+        s = self.stats
+        lines = [f"tokens={s.tokens_out} wall={s.wall_s:.2f}s "
+                 f"throughput={s.throughput:.1f} tok/s "
+                 f"slow_steps={s.slow_steps}"]
+        adm = self.admission.stats
+        lines.append(f"admission: admitted={adm.admitted} "
+                     f"queued={adm.queued} rejected={adm.rejected}")
+        for name in self.models:
+            m = adm.per_model.get(name)
+            if m is not None:
+                lines.append(f"  {name}: admitted={m.admitted} "
+                             f"queued={m.queued} rejected={m.rejected}")
+        u = self.virt.utilization()
+        lines.append(f"kv pool: peak {u['peak_mapped']}/"
+                     f"{self.virt.page_budget} pages, "
+                     f"frag {u['internal_frag_bytes'] / 1024:.1f} KiB")
+        if self.arena is not None:
+            w = self.arena.utilization()
+            lines.append(
+                f"weights arena: {w['resident_slabs']}/{w['slot_budget']} "
+                f"slabs resident ({w['resident_models']} models), "
+                f"{w['activations']} activations, {w['evictions']} "
+                f"evictions, {w['layer_uploads']} layer uploads")
+        return "\n".join(lines)
 
     # ------------------------------------------------------------------
     def _record_step(self, name: str, dt: float) -> None:

@@ -51,6 +51,19 @@ def tuples(*elements):
     return _Strategy(lambda rng: tuple(e.example(rng) for e in elements))
 
 
+def booleans():
+    return _Strategy(lambda rng: rng.random() < 0.5)
+
+
+def composite(fn):
+    """hypothesis-style ``@st.composite``: ``fn(draw, ...)`` becomes a
+    strategy factory; ``draw`` resolves nested strategies recursively."""
+    def builder(*args, **kwargs):
+        return _Strategy(
+            lambda rng: fn(lambda s: s.example(rng), *args, **kwargs))
+    return builder
+
+
 def settings(max_examples=None, deadline=None, **_kw):
     def deco(fn):
         fn._fallback_max_examples = max_examples
@@ -85,7 +98,8 @@ def given(*arg_strategies, **kw_strategies):
 def install() -> None:
     """Register fake ``hypothesis`` / ``hypothesis.strategies`` modules."""
     st_mod = types.ModuleType("hypothesis.strategies")
-    for name in ("integers", "floats", "sampled_from", "lists", "tuples"):
+    for name in ("integers", "floats", "sampled_from", "lists", "tuples",
+                 "booleans", "composite"):
         setattr(st_mod, name, globals()[name])
     hyp_mod = types.ModuleType("hypothesis")
     hyp_mod.given = given

@@ -12,7 +12,7 @@ from repro.configs import PAPER_COLOC_SET, get_smoke_config
 from repro.core import planner as planner_mod
 from repro.core.admission import AdmissionController, PendingRequest
 from repro.core import placement
-from repro.core.control import (FusedStep, HostDrivenStep, PagedFusedStep,
+from repro.core.control import (HostDrivenStep, PagedFusedStep,
                                 dispatch_count)
 from repro.core.pipeline import InflightBatch, LayerPipelineScheduler
 from repro.core.pools import build_pools
@@ -69,6 +69,36 @@ class TestPlanner:
         mla = plan.per_model["minicpm3-4b"]
         assert mla.attention_type == "type2"
         assert mla.attention_strategy == "seq_sharded"
+
+    def test_split_device_budget(self):
+        """The device-bytes splitter: budgets track arrival rates, the
+        largest model always fits, and both budgets respect the total."""
+        models = list(_coloc_models().values())
+        slab = 1 << 16
+        specs_hot = [_workload(c, rate=1.0, seed=i)
+                     for i, c in enumerate(models)]
+        specs_cold = [_workload(c, rate=1e-6, seed=i)
+                      for i, c in enumerate(models)]
+        kw = dict(slab_bytes=slab, horizon_s=120.0, n_trials=2)
+        total = 1 << 26
+        hot = planner_mod.split_device_budget(specs_hot, total, **kw)
+        cold = planner_mod.split_device_budget(specs_cold, total, **kw)
+        from repro.core.weight_pool import slabs_for_config
+        floor = max(slabs_for_config(c, slab) for c in models)
+        for plan in (hot, cold):
+            assert plan.slot_budget >= floor      # hot model must fit
+            assert (plan.page_budget * plan.page_bytes
+                    + plan.slot_budget * slab) <= total * 1.01
+        # hot arrivals expect every model resident; cold ones only the floor
+        assert hot.slot_budget > cold.slot_budget == floor
+        assert all(p > 0.99 for p in hot.resident_probability.values())
+        assert all(p < 0.01 for p in cold.resident_probability.values())
+        assert planner_mod.worst_case_weight_bytes(specs_cold) > 0
+        # a budget that cannot hold the largest model is a planning error,
+        # not a silently unserveable plan
+        with pytest.raises(ValueError):
+            planner_mod.split_device_budget(specs_cold, floor * slab // 2,
+                                            **kw)
 
     def test_eq1_linear_growth(self):
         """A single request's active KV grows linearly to O_p + O_d."""
