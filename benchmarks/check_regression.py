@@ -1,0 +1,103 @@
+"""Bench regression guard: diff BENCH_summary.json against a committed
+baseline and fail CI on >20% regressions in the headline paper claims.
+
+  PYTHONPATH=src python -m benchmarks.check_regression \
+      [--baseline BENCH_baseline.json] [--summary BENCH_summary.json] \
+      [--tolerance 0.20]
+
+Guarded metrics (lower is better for all of them):
+
+  * table1: consolidated-arena device FFN bytes — the phase-invariant
+    (prefill AND decode) device-bytes claim; a >20% growth means the
+    slab layout or slot accounting regressed;
+  * fig7: crosspool P99 TBT at 0.8 and 1.0 RPS — the tail-latency
+    headline (the simulation is seeded, so drift is a code change, not
+    noise).
+
+Metrics present in the baseline but missing from the new summary (or
+produced by a failed benchmark) are hard failures: a silently skipped
+benchmark must not read as green.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _get(tree, path):
+    for k in path:
+        if not isinstance(tree, dict) or k not in tree:
+            return None
+        tree = tree[k]
+    return tree
+
+
+#: (label, path into the summary JSON, index into the value or None)
+GUARDED = [
+    ("table1 device FFN bytes (arena, prefill+decode GiB)",
+     ("table1", "metrics", "arena", "consolidated_arena_GiB"), None),
+    ("fig7 crosspool P99 TBT @ 0.8 RPS (s)",
+     ("fig7", "metrics", "('crosspool', 0.8)"), 1),
+    ("fig7 crosspool P99 TBT @ 1.0 RPS (s)",
+     ("fig7", "metrics", "('crosspool', 1.0)"), 1),
+]
+
+
+def extract(summary: dict, path, index):
+    bench = path[0]
+    entry = summary.get(bench)
+    if entry is None:
+        return None, f"benchmark {bench!r} missing from summary"
+    if not entry.get("ok", False):
+        return None, f"benchmark {bench!r} FAILED: {entry.get('error')}"
+    v = _get(summary, path)
+    if v is None:
+        return None, f"metric path {'/'.join(path)} missing"
+    if index is not None:
+        v = v[index]
+    return float(v), None
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default="BENCH_baseline.json")
+    ap.add_argument("--summary", default="BENCH_summary.json")
+    ap.add_argument("--tolerance", type=float, default=0.20,
+                    help="max allowed fractional regression (default 20%%)")
+    args = ap.parse_args(argv)
+    with open(args.baseline) as f:
+        base = json.load(f)
+    with open(args.summary) as f:
+        new = json.load(f)
+
+    failures = []
+    for label, path, index in GUARDED:
+        b, err = extract(base, path, index)
+        if err is not None:
+            print(f"SKIP (not in baseline) {label}: {err}")
+            continue
+        n, err = extract(new, path, index)
+        if err is not None:
+            failures.append(f"{label}: {err}")
+            continue
+        ratio = n / b if b else float("inf")
+        verdict = "OK"
+        if n > b * (1.0 + args.tolerance):
+            verdict = "REGRESSED"
+            failures.append(
+                f"{label}: {b:.6g} -> {n:.6g} "
+                f"(+{(ratio - 1) * 100:.1f}% > {args.tolerance * 100:.0f}%)")
+        print(f"{verdict:9s} {label}: baseline={b:.6g} new={n:.6g} "
+              f"({(ratio - 1) * 100:+.1f}%)")
+
+    if failures:
+        print("\nbench regression guard FAILED:")
+        for f_ in failures:
+            print(f"  - {f_}")
+        sys.exit(1)
+    print("\nbench regression guard: all guarded metrics within tolerance")
+
+
+if __name__ == "__main__":
+    main()

@@ -6,7 +6,6 @@ system's placement + KV budget; vertical drops mark capacity cliffs
 """
 from __future__ import annotations
 
-import numpy as np
 
 from repro.configs import PAPER_COLOC_SET, get_config
 from repro.runtime.simulator import max_rps_for_context, paper_placements

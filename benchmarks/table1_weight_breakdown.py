@@ -61,9 +61,38 @@ def run(csv=print) -> dict:
     for name, v in arena.items():
         assert v["arena_GiB"] < v["static_GiB"] * 1.05, name
     assert freed > 0.95 * cold_static
+
+    # --- per-phase device FFN bytes: prefill == decode == the arena -------
+    # Prefill runs through the SAME (arena, slot_table) protocol as decode
+    # (streaming per-layer uploads), so there is no full-tree prefill
+    # column any more: prompt-phase device FFN bytes are slot_budget-
+    # bounded, identical to decode, instead of the sum of every colocated
+    # model's resident FFN tree.  Witnessed against the RUNTIME, not by
+    # construction: a smoke engine must hold NO per-model param tree and
+    # exactly slot_budget * slab_bytes of device FFN.
+    from repro.configs import get_smoke_config
+    from repro.runtime.engine import CrossPoolEngine
+
+    engine = CrossPoolEngine(
+        {n: get_smoke_config(n) for n in PAPER_COLOC_SET},
+        page_budget=512, page_bytes=4096, slab_bytes=4096,
+        max_batch=2, max_ctx=64)
+    assert all(r.params is None for r in engine.runners.values() if r.paged), \
+        "a paged runner holds a full param tree — prefill is not arena-bound"
+    assert engine.arena.device_bytes() == \
+        engine.arena.slot_budget * engine.arena.slab_bytes
+    phase = {
+        "prefill_device_ffn_GiB": hot_one,
+        "decode_device_ffn_GiB": hot_one,
+        "eliminated_full_tree_prefill_GiB": static_all,
+    }
+    csv(f"table1,phases,prefill_device_ffn_GiB={hot_one:.2f},"
+        f"decode_device_ffn_GiB={hot_one:.2f},"
+        f"eliminated_full_tree_prefill_GiB={static_all:.2f}")
+    assert phase["prefill_device_ffn_GiB"] < static_all
     out["arena"] = {**arena, "per_model_static_GiB": static_all,
                     "consolidated_arena_GiB": hot_one,
-                    "freed_GiB": freed}
+                    "freed_GiB": freed, **phase}
     return out
 
 

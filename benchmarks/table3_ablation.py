@@ -14,7 +14,6 @@ from __future__ import annotations
 
 import copy
 import os
-import re
 import subprocess
 import sys
 

@@ -8,7 +8,6 @@ under the CrossPool shared pool the planner's budget absorbs it.  Also
 demonstrates the paged virtualizer's device pool + the Pallas paged
 decode-attention kernel reading through the page table.
 """
-import jax
 import jax.numpy as jnp
 import numpy as np
 

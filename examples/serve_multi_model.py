@@ -49,16 +49,18 @@ def main():
           f"({worst / max(plan.pool_page_budget, 1):.1f}x the pooled budget)")
 
     # split one device-byte budget between the KV pool and the weights
-    # arena from the arrival rates (PR-2 splitter); at these smoke rates
-    # every model is expected resident, so the arena sizes to the full
-    # colocation set
+    # arena from the arrival rates; at these smoke rates every model is
+    # expected resident, so the arena sizes to the full colocation set.
+    # coresident=2 floors the arena at the two largest models together:
+    # with prefill ALSO through the arena, a cold model's prompt phase can
+    # then always map alongside the model currently decoding.
     slab_bytes = 1 << 16
     all_resident = sum(slabs_for_config(c, slab_bytes)
                        for c in models.values()) * slab_bytes
     total = int(1.25 * (plan.pool_bytes + all_resident))
     dev_plan = split_device_budget(specs, total, page_bytes=4096,
                                    slab_bytes=slab_bytes, horizon_s=120.0,
-                                   n_trials=3)
+                                   n_trials=3, coresident=2)
     print(dev_plan.summary())
     print(f"per-model-static weights baseline: "
           f"{worst_case_weight_bytes(specs) / 2 ** 20:.1f} MiB device FFN")
@@ -90,6 +92,15 @@ def main():
     print(f"TTFT p95 = {percentile(stats.ttft, 95) * 1e3:.1f} ms")
     print("=== engine report ===")
     print(engine.report())
+    # prefill-phase device FFN bytes come from the ARENA (no full-tree
+    # column left): every paged runner serves prompt AND decode through
+    # (arena, slot_table), so device FFN bytes are phase-invariant
+    w = engine.arena.utilization()
+    print(f"device FFN bytes, prefill phase = decode phase = "
+          f"{w['device_bytes'] / 2 ** 20:.1f} MiB "
+          f"(slot_budget {w['slot_budget']} x {slab_bytes} B slabs)")
+    assert all(r.params is None for r in engine.runners.values() if r.paged), \
+        "a paged runner still holds a full param tree"
     assert stats.tokens_out > 0
     print("serve_multi_model OK")
 

@@ -10,8 +10,7 @@ Configs are *data*: the model zoo in ``repro.models`` interprets them.
 from __future__ import annotations
 
 import dataclasses
-import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional, Tuple
 
 # ---------------------------------------------------------------------------

@@ -1,16 +1,26 @@
-"""Admission control: per-model queues enforcing the planner's page budget.
+"""Admission control: per-model queues enforcing the planner's budgets.
 
 Paper §3.1: "if the pool page budget is exhausted, admission control queues
 or rejects new requests instead of interrupting active decode requests."
 Active pages are never revoked; shedding happens only at admission.
+
+Since prefill runs through the weights arena too, admission is
+ARENA-AWARE: a request for a cold model implies ``total_slabs`` of upload
+traffic (``weight_pool.slabs_for_config`` of it, computed from the packed
+view), and admitting it would evict resident models LRU.  ``try_admit``
+therefore also checks that the cold model's slabs are reachable WITHOUT
+revoking a model that is pinned or has controller-tracked in-flight
+requests — a burst of cold-model arrivals queues at the front door instead
+of thrashing the arena's LRU between models that both still have work.
 """
 from __future__ import annotations
 
 import collections
 from dataclasses import dataclass, field
-from typing import Deque, Dict, List, Optional
+from typing import Deque, Dict, List
 
 from repro.core.virtualizer import KVVirtualizer
+from repro.core.weight_pool import OutOfSlabsError
 
 
 @dataclass
@@ -38,6 +48,8 @@ class AdmissionStats:
     queued: int = 0
     rejected: int = 0
     queue_wait_total: float = 0.0
+    # admissions deferred purely by weights-arena pressure (cold-model burst)
+    weight_pressure_queued: int = 0
     per_model: Dict[str, ModelAdmissionStats] = field(default_factory=dict)
 
     def bump(self, model: str, outcome: str) -> None:
@@ -48,38 +60,115 @@ class AdmissionStats:
 
 
 class AdmissionController:
-    """Queue-or-reject front door for the shared KV pool."""
+    """Queue-or-reject front door for the shared KV pool + weights arena."""
 
-    def __init__(self, virtualizer: KVVirtualizer, *,
+    def __init__(self, virtualizer: KVVirtualizer, *, arena=None,
                  max_queue_per_model: int = 64,
                  reserve_output_tokens: bool = True):
         self.virt = virtualizer
+        self.arena = arena              # WeightArena or None (KV-only mode)
         self.max_queue = max_queue_per_model
         self.reserve_output = reserve_output_tokens
         self.queues: Dict[str, Deque[PendingRequest]] = collections.defaultdict(
             collections.deque)
+        # admitted-but-unfinished request count per model: the controller's
+        # view of which models still have work in flight (the engine calls
+        # ``finish`` as requests complete).  Admission also takes the
+        # arena PIN for the request (released by ``finish``), so the LRU
+        # eviction planner can never pick a model whose weights an
+        # admitted request still needs — the capacity check below and the
+        # victim selection in ``WeightArena._plan_evictions`` enforce the
+        # same protected set.
+        self.inflight: Dict[str, int] = collections.defaultdict(int)
+        self._last_block: str = ""      # "pages" | "weights" | "" (admitted)
         self.stats = AdmissionStats()
 
     def offer(self, req: PendingRequest, now: float) -> str:
         """Returns 'admitted' | 'queued' | 'rejected'."""
-        if self._try_admit(req):
+        if self.try_admit(req):
             self.stats.bump(req.model, "admitted")
             return "admitted"
         if len(self.queues[req.model]) < self.max_queue:
             req.enqueue_time = now
             self.queues[req.model].append(req)
             self.stats.bump(req.model, "queued")
+            if self._last_block == "weights":
+                # counted ONCE per deferred request, here — not on drain
+                # retries and not for rejections
+                self.stats.weight_pressure_queued += 1
             return "queued"
         self.stats.bump(req.model, "rejected")
         return "rejected"
 
-    def _try_admit(self, req: PendingRequest) -> bool:
+    # ------------------------------------------------------------------
+    def _weights_pressure_ok(self, model: str) -> bool:
+        """Whether admitting a request for ``model`` fits the arena without
+        revoking weights another admitted request still needs.
+
+        Reachable slabs = free + resident models that are neither pinned
+        nor tracked in flight by this controller.  A resident or
+        arena-less (fused fallback) model always passes.
+        """
+        arena = self.arena
+        if arena is None or model not in arena.views:
+            return True
+        if arena.is_resident(model):
+            return True
+        need = arena.views[model].total_slabs
+        if need > arena.slot_budget:
+            # a budget error, not pressure: NO admission can ever serve
+            # this model — fail loudly instead of queueing forever
+            raise OutOfSlabsError(
+                f"model {model!r} needs {need} slabs but the arena budget "
+                f"is {arena.slot_budget}; raise slot_budget or drop the "
+                f"model from the colocation set")
+        reachable = arena.free_slabs + sum(
+            arena.views[name].total_slabs
+            for name in arena.residency
+            if name not in arena.pins and not self.inflight.get(name))
+        # slabs already promised to OTHER admitted cold models that have
+        # not activated yet (their upload lands between now and prefill)
+        promised = sum(
+            arena.views[name].total_slabs
+            for name, count in self.inflight.items()
+            if count and name != model and name in arena.views
+            and not arena.is_resident(name))
+        return need <= reachable - promised
+
+    def try_admit(self, req: PendingRequest) -> bool:
+        """Admit iff BOTH budgets hold: KV pages for prompt (+ reserved
+        output) AND weights-arena reachability for a cold model.
+
+        Admission takes the request's arena PIN (released by ``finish``),
+        so from this moment the model's weights can never be picked as an
+        LRU eviction victim — including the window between admission and
+        the prefill that makes the model resident."""
         expect = req.expected_output if self.reserve_output else 0
         if not self.virt.can_admit(req.model, req.prompt_tokens, expect):
+            self._last_block = "pages"
             return False
+        if not self._weights_pressure_ok(req.model):
+            self._last_block = "weights"
+            return False
+        self._last_block = ""
         self.virt.register_request(req.request_id, req.model,
                                    req.prompt_tokens)
+        self.inflight[req.model] += 1
+        if self.arena is not None and req.model in self.arena.views:
+            self.arena.pin(req.model)
         return True
+
+    def finish(self, model: str) -> None:
+        """One of ``model``'s admitted requests completed (or was aborted):
+        its pin drops and its weights become reachable for cold
+        activations again once the in-flight count reaches zero."""
+        n = self.inflight.get(model, 0) - 1
+        if n <= 0:
+            self.inflight.pop(model, None)
+        else:
+            self.inflight[model] = n
+        if self.arena is not None and model in self.arena.views:
+            self.arena.unpin(model)
 
     def drain(self, now: float) -> List[PendingRequest]:
         """Admit queued requests that now fit (FIFO per model, round-robin
@@ -93,7 +182,7 @@ class AdmissionController:
                 if not q:
                     continue
                 head = q[0]
-                if self._try_admit(head):
+                if self.try_admit(head):
                     q.popleft()
                     self.stats.queue_wait_total += now - head.enqueue_time
                     self.stats.bump(model, "admitted")

@@ -27,19 +27,22 @@ paged attention + proxy boundary + FFN, and the final logits are ONE
 compiled ``lax.scan`` program consuming the same pooled param split
 (kv_params / w_params) as the host-driven path.
 
+``StreamingPrefill`` is the prompt-phase twin: per-layer full-sequence
+attention + arena FFN with layer L+1's weight slabs uploading behind layer
+L's attention, so a cold model's first token overlaps its own weight
+upload instead of waiting for it (DESIGN.md §6).
+
 Families that bypass split execution (SSM/hybrid/enc-dec/SWA) decode
 through the fused dense-cache ``model.decode_step`` program compiled by
 ``runtime.engine.ModelRunner`` — there is no separate step class for them.
 """
 from __future__ import annotations
 
-import functools
-from typing import Callable, Dict, Optional, Tuple
+from typing import Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ModelConfig
 from repro.core.pools import PooledModel, transfer
 from repro.kernels.ops import donate_argnums as _donate
 
@@ -59,6 +62,11 @@ class HostDrivenStep:
         self._ffn = jax.jit(fns.ffn_stage)
         self._combine = jax.jit(fns.combine)
         self._logits = jax.jit(fns.logits)
+        # prompt-phase stage programs (the pipeline scheduler interleaves
+        # prefill batches through the same per-layer machinery)
+        self._pembed = jax.jit(fns.prefill_embed)
+        self._pattn = jax.jit(fns.prefill_attn)
+        self._plogits = jax.jit(fns.prefill_logits)
 
     def __call__(self, tokens, pool, page_tables, lengths
                  ) -> Tuple[jax.Array, jax.Array]:
@@ -96,6 +104,82 @@ class HostDrivenStep:
             x = self._combine(x, ffn_out_kv)
         yield ("logits", -1)
         self.result = (self._logits(p_kv, x), pool)
+
+
+class StreamingPrefill:
+    """Arena-bounded prompt-phase execution with streamed weight uploads.
+
+    The prompt phase used to be the one place a model's FULL param tree had
+    to be device-resident; this runs it through the same ``(arena,
+    slot_table)`` protocol as decode (DESIGN.md §6).  Per layer, the host
+    issues:
+
+      1. full-sequence attention for layer L (KV-pool side),
+      2. the async upload of layer L+1's weight slabs
+         (``WeightArena.prefetch_layer``) — hidden behind 1.,
+      3. the layer's prompt KV scatter into the shared paged pool
+         (``writer``), and
+      4. the FFN gather out of the arena (``ffn_stage``) for layer L.
+
+    Because uploads stream layer-by-layer behind attention, a COLD model's
+    first token no longer waits for a monolithic weight upload: activation
+    maps slots only (``upload=False``) and by the time prefill finishes
+    every layer is resident, so the fused decode step (``PagedFusedStep``)
+    dispatches with zero remaining upload work.  Used by BOTH lowering
+    modes — prefill is per-request, off the per-token critical path, so
+    per-layer dispatches cost nothing while buying the overlap.
+    """
+
+    def __init__(self, pooled: PooledModel, kv_device=None, w_device=None,
+                 share: Optional[HostDrivenStep] = None):
+        self.pooled = pooled
+        self.kv_device = kv_device
+        self.w_device = w_device
+        if share is not None:
+            # host-driven mode already jitted the same stage programs in
+            # its HostDrivenStep — reuse them (one trace/compile cache per
+            # model, whether a prompt runs here or via the scheduler)
+            self._embed = share._pembed
+            self._attn = share._pattn
+            self._ffn = share._ffn
+            self._combine = share._combine
+            self._logits = share._plogits
+        else:
+            fns = pooled.stage_fns
+            self._embed = jax.jit(fns.prefill_embed)
+            self._attn = jax.jit(fns.prefill_attn)
+            self._ffn = jax.jit(fns.ffn_stage)
+            self._combine = jax.jit(fns.combine)
+            self._logits = jax.jit(fns.prefill_logits)
+
+    def __call__(self, tokens, true_len, pool, writer=None
+                 ) -> Tuple[jax.Array, jax.Array]:
+        """tokens [B,S] prompt ids; ``true_len`` the unpadded length whose
+        last position's logits are returned; ``writer(layer, layer_kv,
+        pool) -> pool`` scatters one layer's prompt KV into the shared
+        pool (None skips KV capture).  Returns (logits [B,V], pool)."""
+        name = self.pooled.cfg.name
+        arena = self.pooled.arena
+        fns = self.pooled.stage_fns
+        p_kv = self.pooled.kv_params
+        arena.activate(name, upload=False)
+        arena.prefetch_layer(name, 0)        # first FFN never stalls
+        x = self._embed(p_kv, tokens)
+        for layer in range(fns.n_layers):
+            x, ffn_in, layer_kv = self._attn(p_kv, x, layer)
+            # transfer hiding, weights edition: layer L+1's slabs upload
+            # while layer L's attention is in flight
+            arena.prefetch_layer(name, layer + 1)
+            if writer is not None:
+                pool = writer(layer, layer_kv, pool)
+            if self.w_device is not None:
+                ffn_in = transfer(ffn_in, self.w_device)     # A-to-F
+            ffn_out = self._ffn(arena.arena, arena.slot_table(name),
+                                ffn_in, layer)
+            if self.kv_device is not None:
+                ffn_out = transfer(ffn_out, self.kv_device)  # F-to-A
+            x = self._combine(x, ffn_out)
+        return self._logits(p_kv, x, jnp.int32(true_len - 1)), pool
 
 
 class PagedFusedStep:

@@ -19,15 +19,20 @@ batch B's layer-L attention is in flight in the KV pool, layer L+1's
 weight slabs are prefetched into the arena (``WeightArena
 .prefetch_layer``), so cold-model upload traffic hides behind compute.
 
+Since the prefill-through-arena change the scheduler also takes PREFILL
+batches (``InflightBatch(prefill=True)``): full-sequence attention per
+layer, each layer's prompt KV scattered into the shared pool via the
+batch's ``kv_writer``, FFN through the same arena gather — so a cold
+model's prompt phase interleaves with other models' decode stages and its
+own streaming weight uploads (DESIGN.md §6).
+
 Execution is asynchronous: every stage issue returns a lazy jax value, so
 stages bound to the two pool devices genuinely overlap; the scheduler's job
 is to *issue* stages in an order that keeps both pools busy.
 """
 from __future__ import annotations
 
-import itertools
-import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
@@ -41,19 +46,32 @@ from repro.core.pools import PooledModel, transfer
 class InflightBatch:
     """One batch's layer-granular execution state (the paper's state machine:
     model id, layer cursor, completion).  KV lives in the shared pool; the
-    batch owns only its page-table view of it."""
+    batch owns only its page-table view of it.
+
+    ``prefill=True`` runs the batch through the prompt-phase stage programs
+    instead: ``tokens`` is ``[B, S]`` prompt ids, ``page_tables``/``lengths``
+    are unused (full-sequence attention attends over the prompt itself),
+    each layer's KV is handed to ``kv_writer(layer, layer_kv, pool) ->
+    pool`` for scattering into the shared pool, and ``logits`` is the
+    unpadded last position (``true_len - 1``).  Prefill and decode batches
+    interleave freely: a cold model's prefill attention overlaps another
+    model's FFN AND its own next layer's slab upload."""
 
     batch_id: int
     model: str
-    tokens: jax.Array                 # [B] next-token ids
-    page_tables: jax.Array            # [L, B, max_pages] int32
-    lengths: jax.Array                # [B] current context lengths
+    tokens: jax.Array                 # [B] next-token ids ([B,S] prefill)
+    page_tables: Optional[jax.Array] = None   # [L, B, max_pages] int32
+    lengths: Optional[jax.Array] = None       # [B] current context lengths
     layer: int = 0                    # layer cursor
     phase: str = "embed"              # embed -> attn -> ffn -> combine -> done
     x: Optional[jax.Array] = None     # residual stream
     ffn_in: Optional[jax.Array] = None
     ffn_out: Optional[jax.Array] = None
     logits: Optional[jax.Array] = None
+    # prompt-phase extras
+    prefill: bool = False
+    true_len: int = 0                 # unpadded prompt length (host int)
+    kv_writer: Optional[Callable] = None
 
     @property
     def done(self) -> bool:
@@ -94,11 +112,16 @@ class LayerPipelineScheduler:
             # layer 0 is pulled eagerly so the first FFN never stalls
             arena.activate(b.model, upload=False)
             arena.prefetch_layer(b.model, 0)
-            b.x = step._embed(p_kv, b.tokens)
+            b.x = (step._pembed if b.prefill else step._embed)(p_kv, b.tokens)
             b.phase = "attn"
         elif b.phase == "attn":
-            b.x, ffn_in, pool = step._attn(
-                p_kv, b.x, pool, b.page_tables, b.lengths, b.layer)
+            if b.prefill:
+                b.x, ffn_in, layer_kv = step._pattn(p_kv, b.x, b.layer)
+                if b.kv_writer is not None:     # prompt KV -> shared pool
+                    pool = b.kv_writer(b.layer, layer_kv, pool)
+            else:
+                b.x, ffn_in, pool = step._attn(
+                    p_kv, b.x, pool, b.page_tables, b.lengths, b.layer)
             # transfer hiding, weights edition: issue layer L+1's slab
             # upload while layer L's attention is in flight
             arena.prefetch_layer(b.model, b.layer + 1)
@@ -116,7 +139,9 @@ class LayerPipelineScheduler:
             b.x = step._combine(b.x, b.ffn_out)
             b.layer += 1
             if b.layer >= fns.n_layers:
-                b.logits = step._logits(p_kv, b.x)
+                b.logits = (step._plogits(p_kv, b.x,
+                                          jnp.int32(b.true_len - 1))
+                            if b.prefill else step._logits(p_kv, b.x))
                 b.phase = "done"                              # early exit
             else:
                 b.phase = "attn"

@@ -10,9 +10,8 @@ which fraction of the remaining KV memory one request can reach.
 """
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, Sequence, Tuple
 
 from repro.configs.base import ModelConfig
 

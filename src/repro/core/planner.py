@@ -17,10 +17,9 @@ paper's stated reason for Monte Carlo over closed forms).
 """
 from __future__ import annotations
 
-import dataclasses
 import math
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
@@ -204,7 +203,7 @@ def split_device_budget(specs: Sequence[WorkloadSpec], total_bytes: int, *,
                         slab_bytes: int = DEFAULT_SLAB_BYTES,
                         quantile: float = 0.99, horizon_s: float = 3600.0,
                         residency_s: float = 300.0, n_trials: int = 4,
-                        seed: int = 0) -> DeviceBytesPlan:
+                        coresident: int = 1, seed: int = 0) -> DeviceBytesPlan:
     """Split one device-byte budget into ``page_budget`` vs ``slot_budget``.
 
     KV demand is the Eq. (2) Monte Carlo P-quantile (:func:`plan_pool`).
@@ -213,9 +212,16 @@ def split_device_budget(specs: Sequence[WorkloadSpec], total_bytes: int, *,
     (the engine keeps weights mapped while requests are in flight and
     evicts LRU), so under Poisson arrivals
     ``P(resident) = 1 - exp(-lambda_M * residency_s)`` and the expected
-    arena working set is ``sum_M P(resident) * slabs(M)``.  The weights
-    floor is the largest single model (it must fit to serve at all); both
-    targets are scaled proportionally when they exceed ``total_bytes``.
+    arena working set is ``sum_M P(resident) * slabs(M)``.
+
+    The weights floor is the ``coresident`` largest models together.  With
+    prefill ALSO running through the arena, an activated model stays
+    pinned from prompt phase to completion, so a deployment that should
+    never queue a cold model's prefill behind a decoding one wants
+    ``coresident=2`` (the arena-aware admission controller queues the
+    burst at the front door when the floor is 1).  Both targets are scaled
+    proportionally when they exceed ``total_bytes``; the floor never
+    shrinks below the single largest model.
     """
     kv_plan = plan_pool(specs, page_bytes=page_bytes, quantile=quantile,
                         horizon_s=horizon_s, n_trials=n_trials, seed=seed)
@@ -223,14 +229,16 @@ def split_device_budget(specs: Sequence[WorkloadSpec], total_bytes: int, *,
 
     p_res: Dict[str, float] = {}
     w_target = 0.0
-    w_floor = 0
+    sizes: List[int] = []
     for spec in specs:
         cfg = spec.model
         p = 1.0 - math.exp(-spec.arrival_rate * residency_s)
         p_res[cfg.name] = p
         slabs = slabs_for_config(cfg, slab_bytes)
         w_target += p * slabs * slab_bytes
-        w_floor = max(w_floor, slabs * slab_bytes)
+        sizes.append(slabs * slab_bytes)
+    sizes.sort(reverse=True)
+    w_floor = sum(sizes[:max(coresident, 1)])
     w_target = max(w_target, float(w_floor))
     if total_bytes < w_floor + page_bytes:
         raise ValueError(

@@ -19,9 +19,8 @@ sharding strategy inside one SPMD program.
 """
 from __future__ import annotations
 
-import math
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from dataclasses import dataclass
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp

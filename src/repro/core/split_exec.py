@@ -27,7 +27,6 @@ paper's serving targets.
 """
 from __future__ import annotations
 
-import functools
 from typing import Callable, Dict, NamedTuple, Tuple
 
 import jax
@@ -51,6 +50,14 @@ class StageFns(NamedTuple):
     #                           ffn_input, layer)              -> ffn_out
     combine: Callable        # (x_resid, ffn_out)              -> x
     logits: Callable         # (params, x)                     -> [B,V]
+    # prompt-phase (prefill) variants over the SAME arena: full-sequence
+    # attention per layer, the identical ffn_stage consuming [B,S,D]
+    prefill_embed: Callable  # (params, tokens [B,S])          -> x [B,S,D]
+    prefill_attn: Callable   # (params, x [B,S,D], layer)
+    #                           -> (x_resid, ffn_input, layer_kv)
+    #                        layer_kv: (k, v) [B,S,KV,hd] for GQA or
+    #                                  (latent, rope) [B,S,·] for MLA
+    prefill_logits: Callable  # (params, x [B,S,D], logit_index) -> [B,V]
     n_layers: int
 
 
@@ -127,7 +134,33 @@ def make_stage_fns(cfg: ModelConfig, view: ModelView,
         x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
         return layers.unembed(params["embed"], x)[:, 0]
 
+    # ---- prompt phase (prefill) over the same arena ----------------------
+    # The attention stage runs the FULL-sequence attention of
+    # ``models.transformer`` (bit-identical math to the fused dense
+    # prefill), but the FFN boundary is the same proxy as decode: the
+    # normalized hidden states cross to the weights side and ``ffn_stage``
+    # gathers the layer's slabs from the shared arena — no per-model
+    # ``w_params`` tree exists at prompt time either.
+
+    def prefill_embed(params, tokens):
+        return layers.embed_tokens(params["embed"], tokens)
+
+    def prefill_attn(params, x, layer):
+        p_l = _layer_params(params, layer)
+        B, S = x.shape[0], x.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+        x, layer_kv = tfm._attn_full(p_l, cfg, x, positions, 0,
+                                     IDENTITY_HOOKS, "xla")
+        ffn_in = layers.rms_norm(x, p_l["ln2"], cfg.norm_eps)
+        return x, ffn_in, layer_kv
+
+    def prefill_logits(params, x, logit_index):
+        x_last = jax.lax.dynamic_slice_in_dim(x, logit_index, 1, axis=1)
+        x_last = layers.rms_norm(x_last, params["final_norm"], cfg.norm_eps)
+        return layers.unembed(params["embed"], x_last)[:, 0]
+
     return StageFns(embed, attn_stage, ffn_stage, combine, logits,
+                    prefill_embed, prefill_attn, prefill_logits,
                     cfg.n_layers)
 
 

@@ -30,7 +30,6 @@ Device-side state is maintained incrementally:
 """
 from __future__ import annotations
 
-import functools
 import math
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
@@ -358,6 +357,36 @@ class KVVirtualizer:
         pages, slots = self._token_coords(req, view, toks, layer)
         self.pool = _pool_scatter(self.pool, flat, jnp.asarray(pages),
                                   jnp.asarray(slots))
+
+    def write_prompt_layer(self, pool: jax.Array, model: str,
+                           request_id: int, layer: int, layer_kv,
+                           n_tokens: int, batch_index: int = 0) -> jax.Array:
+        """Seed ONE layer's prompt KV from full-sequence attention outputs.
+
+        ``layer_kv`` is the per-layer pair a streaming (layer-at-a-time)
+        prefill produces: ``(k, v)`` each ``[B,S,KV,hd]`` for GQA or
+        ``(latent, rope)`` ``[B,S,·]`` for MLA — the same bytes
+        ``write_prompt_from_cache`` scatters, one layer at a time so KV
+        lands in the pool while later layers are still executing.
+
+        Pure with respect to the pool: takes and returns the (donated)
+        buffer instead of touching ``self.pool``, so a pipeline scheduler
+        can thread it through interleaved prefill/decode stages.
+        """
+        view = self.views[model]
+        req = self.requests[request_id]
+        a, b = layer_kv
+        if len(view.kv_shape) == 1:     # MLA: latent ++ rope on the last axis
+            kv = jnp.concatenate([a[batch_index, :n_tokens],
+                                  b[batch_index, :n_tokens]], axis=-1)
+        else:                           # GQA: [n, 2, KV, hd]
+            kv = jnp.stack([a[batch_index, :n_tokens],
+                            b[batch_index, :n_tokens]], axis=1)
+        flat = kv.reshape(n_tokens, view.per_token_elems)
+        toks = np.arange(n_tokens)
+        pages, slots = self._token_coords(req, view, toks, layer)
+        return _pool_scatter(pool, flat, jnp.asarray(pages),
+                             jnp.asarray(slots))
 
     def write_prompt_from_cache(self, model: str, request_id: int,
                                 cache: Dict, n_tokens: int,

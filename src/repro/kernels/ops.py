@@ -9,7 +9,6 @@ Select globally via :func:`set_default_impl` or per-call via ``impl=``.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax

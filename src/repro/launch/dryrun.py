@@ -21,12 +21,10 @@ Usage:
   python -m repro.launch.dryrun --all --multi-pod --out reports/dryrun.json
 """
 import argparse
-import functools
 import json
-import math
 import time
 import traceback
-from typing import Dict, Optional, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

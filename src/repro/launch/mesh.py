@@ -14,7 +14,7 @@ or replica scale-out (serving).
 from __future__ import annotations
 
 import math
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 from jax.sharding import Mesh

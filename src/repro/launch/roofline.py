@@ -15,10 +15,9 @@ this, so the term is a slight over-estimate — consistent across cells).
 """
 from __future__ import annotations
 
-import math
 import re
-from dataclasses import dataclass, field
-from typing import Dict, Optional, Tuple
+from dataclasses import dataclass
+from typing import Dict
 
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16

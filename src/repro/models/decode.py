@@ -23,7 +23,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import attention as attn
-from repro.models import layers, moe as moe_mod, ssm as ssm_mod
+from repro.models import layers, ssm as ssm_mod
 from repro.models import transformer as tfm
 from repro.models.hooks import Hooks, IDENTITY_HOOKS
 

@@ -16,7 +16,7 @@ Everything defaults to identity so models run standalone on one device.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Callable, Optional
 
 Array = object

@@ -10,7 +10,6 @@ from dataclasses import dataclass
 from typing import Dict, Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models import decode as dec

@@ -20,7 +20,6 @@ paper transfers over NVLink/NVSHMEM and we lower to ICI collectives.
 """
 from __future__ import annotations
 
-import math
 from typing import Dict, Optional, Tuple
 
 import jax

@@ -23,14 +23,24 @@ every dense/moe/vlm model: total device KV bytes are fixed by
 Families outside split execution (SSM/hybrid/enc-dec/SWA) fall back to a
 fused dense-cache path; their pool pages are accounting-only.
 
-Since PR 2 the weights side is symmetric: decode-path FFN/MoE weights
-live in ONE shared slab arena (``repro.core.weight_pool.WeightArena``)
-whose device bytes are fixed by ``slot_budget`` alone.  A cold model is
-ACTIVATED into the arena when its first request reaches a batch slot
-(evicting idle models LRU under pressure), pinned while it has in-flight
-requests, and unpinned as they finish; in host-driven pipeline mode the
-activation maps slots only and the layer-wise scheduler prefetches each
-layer's slabs behind the previous layer's attention.
+Since PR 2 the weights side is symmetric: FFN/MoE weights live in ONE
+shared slab arena (``repro.core.weight_pool.WeightArena``) whose device
+bytes are fixed by ``slot_budget`` alone.  A cold model is ACTIVATED into
+the arena when its first request reaches a batch slot (evicting idle
+models LRU under pressure), pinned while it has in-flight requests, and
+unpinned as they finish.
+
+PREFILL runs through the arena too (PR 3): there is no per-model
+device-resident param tree at all — ``ModelRunner`` keeps only batch-slot
+state, prompt-phase FFN gathers the same ``(arena, slot_table)`` slabs as
+decode (``control.StreamingPrefill``), and activation maps slots WITHOUT
+uploading: each layer's slabs stream in behind the previous layer's
+prefill attention, so a cold model's first token overlaps its own weight
+upload in BOTH lowering modes.  In host-driven pipeline mode, concurrent
+cold prefills additionally interleave through the layer-wise scheduler.
+Admission is arena-aware: a cold-model request whose slabs are not
+reachable without revoking another admitted model's weights queues at the
+front door instead of thrashing the LRU.
 
 Engine-scale model set = the paper's colocation trio at smoke scale; the
 production-mesh behaviour of the same code paths is proven by the dry-run.
@@ -49,7 +59,8 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core.admission import (AdmissionController, AdmissionStats,
                                   PendingRequest)
-from repro.core.control import HostDrivenStep, PagedFusedStep
+from repro.core.control import (HostDrivenStep, PagedFusedStep,
+                                StreamingPrefill)
 from repro.core.pipeline import InflightBatch, LayerPipelineScheduler
 from repro.core import split_exec
 from repro.core.pools import build_pools
@@ -97,22 +108,25 @@ class EngineStats:
 class ModelRunner:
     """Per-model batch slots + compiled prefill/decode programs.
 
-    ``paged=True`` (dense/moe/vlm): NO per-model KV allocation — prefill
-    writes prompt KV into the virtualizer's pool pages, decode steps read
-    and write through page tables.  ``paged=False`` (fused fallback
-    families): a contiguous per-model cache as before.
+    ``paged=True`` (dense/moe/vlm): NO per-model KV allocation AND no
+    per-model param tree — prefill streams prompt KV into the
+    virtualizer's pool pages layer by layer while FFN weights are gathered
+    from the shared arena (``prefill_step``); decode steps read and write
+    through page tables.  ``params`` must be ``None``: the only full
+    copies are the pooled kv_params (non-FFN) and the arena's packed host
+    masters.  ``paged=False`` (fused fallback families): a contiguous
+    per-model cache and a device-resident ``params`` tree as before.
     """
 
     def __init__(self, name: str, cfg: ModelConfig, params,
                  virt: KVVirtualizer, *, max_batch: int, max_ctx: int,
-                 mode: EngineMode, pooled=None):
+                 mode: EngineMode, pooled=None,
+                 prefill_step: Optional[StreamingPrefill] = None):
         self.name = name
         self.cfg = cfg
-        self.model = build_model(cfg)
         self.max_batch = max_batch
         self.max_ctx = max_ctx
         self.mode = mode
-        self.params = params
         self.virt = virt
         self.pooled = pooled
         self.paged = pooled is not None and pooled.stage_fns is not None
@@ -120,25 +134,21 @@ class ModelRunner:
         self.slots: List[Optional[Request]] = [None] * max_batch
         self.next_tokens = np.zeros(max_batch, np.int32)
 
-        mdl = self.model
         if self.paged:
+            assert params is None, \
+                f"{name}: paged models must not hold a full param tree"
+            assert prefill_step is not None
+            self.params = None
+            self.prefill_step = prefill_step
             self.view = virt.views[name]
             self.max_pages = max(
                 1, math.ceil(max_ctx / self.view.tokens_per_page))
             self.fused: Optional[PagedFusedStep] = (
                 PagedFusedStep(pooled, postprocess=sample)
                 if mode.lowering else None)
-
-            # per-request prefill: seed a transient single-row dense cache
-            # (lives only inside this program) and return it so the host
-            # can scatter the prompt KV into pool pages.
-            def _prefill(params, tokens, true_len):
-                cache = mdl.init_cache(1, tokens.shape[1])
-                return mdl.prefill(params, tokens, cache,
-                                   logit_index=true_len - 1)
-
-            self._prefill = jax.jit(_prefill)
         else:
+            self.params = params
+            mdl = build_model(cfg)
             self.cache = mdl.init_cache(max_batch, max_ctx)
 
             def _prefill_dense(params, tokens, cache, slot, true_len):
@@ -175,23 +185,24 @@ class ModelRunner:
     def _active_slots(self) -> List[int]:
         return [i for i, s in enumerate(self.slots) if s is not None]
 
-    def prefill_request(self, req: Request, rng: np.random.Generator) -> int:
-        slot = self.free_slot()
-        assert slot is not None
+    def _prompt_ids_and_writer(self, req: Request, rng: np.random.Generator):
+        """(prompt ids [bucket], write length, per-layer pool writer).
+
+        Prompts longer than the bucket are truncated to it, exactly as the
+        dense prefill's fixed-width cache slice did."""
         b = _bucket(req.prompt_tokens, self.max_ctx)
         ids = rng.integers(0, self.cfg.vocab_size, b).astype(np.int32)
-        if self.paged:
-            logits, cache = self._prefill(
-                self.params, jnp.asarray(ids[None, :]),
-                jnp.int32(min(req.prompt_tokens, b)))
-            # prompts longer than the bucket are truncated to it, exactly
-            # as the dense prefill's fixed-width cache slice did
-            self.virt.write_prompt_from_cache(
-                self.name, req.request_id, cache, min(req.prompt_tokens, b))
-        else:
-            logits, self.cache = self._prefill(
-                self.params, jnp.asarray(ids[None, :]), self.cache,
-                jnp.int32(slot), jnp.int32(req.prompt_tokens))
+        n_write = min(req.prompt_tokens, b)
+
+        def writer(layer, layer_kv, pool):
+            return self.virt.write_prompt_layer(
+                pool, self.name, req.request_id, layer, layer_kv, n_write)
+
+        return ids, n_write, writer
+
+    def _commit_prefill(self, req: Request, logits: jax.Array) -> int:
+        slot = self.free_slot()
+        assert slot is not None
         tok = int(jnp.argmax(logits[0]))
         self.slots[slot] = req
         self.lengths[slot] = req.prompt_tokens
@@ -199,6 +210,40 @@ class ModelRunner:
         req.phase = Phase.DECODE
         req.output_ids.append(tok)       # the prefill-sampled first token
         return slot
+
+    def prefill_request(self, req: Request, rng: np.random.Generator) -> int:
+        # check BEFORE any device work: a full batch must fail here, not
+        # after the prompt KV has already been scattered into the pool
+        assert self.free_slot() is not None
+        if self.paged:
+            ids, n_write, writer = self._prompt_ids_and_writer(req, rng)
+            # streaming prompt phase: per-layer attention with the next
+            # layer's arena slabs uploading behind it; prompt KV is
+            # scattered into pool pages as each layer completes
+            logits, self.virt.pool = self.prefill_step(
+                jnp.asarray(ids[None, :]), n_write, self.virt.pool, writer)
+        else:
+            slot = self.free_slot()
+            assert slot is not None
+            b = _bucket(req.prompt_tokens, self.max_ctx)
+            ids = rng.integers(0, self.cfg.vocab_size, b).astype(np.int32)
+            logits, self.cache = self._prefill(
+                self.params, jnp.asarray(ids[None, :]), self.cache,
+                jnp.int32(slot), jnp.int32(req.prompt_tokens))
+        return self._commit_prefill(req, logits)
+
+    def make_prefill_batch(self, req: Request, rng: np.random.Generator,
+                           batch_id: int) -> InflightBatch:
+        """Package one request's prompt phase for the layer-wise scheduler
+        (interleaves with other models' prefill/decode stages)."""
+        ids, n_write, writer = self._prompt_ids_and_writer(req, rng)
+        return InflightBatch(
+            batch_id=batch_id, model=self.name,
+            tokens=jnp.asarray(ids[None, :]), prefill=True,
+            true_len=n_write, kv_writer=writer)
+
+    def apply_prefill_result(self, batch: InflightBatch, req: Request) -> int:
+        return self._commit_prefill(req, batch.logits)
 
     # ------------------------------------------------------------------
     # decode: issue (non-blocking dispatch) / commit (block + bookkeeping)
@@ -335,14 +380,10 @@ class CrossPoolEngine:
             activate_resident=False)
         self.virt = self.kv_pool.virtualizer
         self.arena = self.w_pool.arena if any_split else None
-        self.admission = AdmissionController(self.virt)
+        # arena-aware admission: cold-model bursts queue at the front door
+        # instead of thrashing the arena LRU between admitted models
+        self.admission = AdmissionController(self.virt, arena=self.arena)
 
-        self.runners = {
-            n: ModelRunner(n, c, params[n], self.virt,
-                           max_batch=max_batch, max_ctx=max_ctx,
-                           mode=self.mode, pooled=self.pooled[n])
-            for n, c in models.items()
-        }
         self.host_steps = None
         self.scheduler = None
         if not self.mode.lowering:
@@ -354,25 +395,49 @@ class CrossPoolEngine:
             self.scheduler = LayerPipelineScheduler(
                 self.pooled, self.kv_device, self.w_device,
                 steps=self.host_steps)
+        # streaming prompt-phase executors (per-layer transfers follow the
+        # arena's placement: colocated with the KV pool under lowering=ON);
+        # in host mode they SHARE the HostDrivenStep's jitted stage
+        # programs — one trace/compile cache per model
+        prefill_steps = {
+            n: StreamingPrefill(
+                self.pooled[n], kv_device=self.kv_device,
+                w_device=self.w_pool.arena.device,
+                share=None if self.host_steps is None
+                else self.host_steps.get(n))
+            for n in models if self.pooled[n].stage_fns is not None
+        }
+        # paged models hold NO full param tree: the init-time tree is split
+        # into pooled kv_params + the arena's packed host masters, and the
+        # full copy is dropped here (fallback families keep theirs)
+        self.runners = {
+            n: ModelRunner(
+                n, c,
+                None if n in prefill_steps else params[n], self.virt,
+                max_batch=max_batch, max_ctx=max_ctx,
+                mode=self.mode, pooled=self.pooled[n],
+                prefill_step=prefill_steps.get(n))
+            for n, c in models.items()
+        }
         self.stats = EngineStats(step_times={n: [] for n in models},
                                  admission=self.admission.stats)
 
     # ------------------------------------------------------------------
     def _activate_model(self, name: str) -> None:
-        """Make a cold model's weights resident before its first prefill.
-
-        In host-driven pipeline mode, activation maps slabs only and the
-        layer-wise scheduler streams the uploads behind attention stages;
-        otherwise the whole resident set is uploaded here.  The model is
-        pinned per in-flight request so LRU eviction (triggered by some
-        OTHER model's activation under slab pressure) can never revoke
-        weights that are being decoded with.
+        """Map a cold model's slabs before its first prefill — WITHOUT
+        uploading: the streaming prompt phase prefetches layer L+1's slabs
+        behind layer L's attention in BOTH lowering modes, so by the first
+        decode step every layer is resident and the fused step's
+        ``acquire`` has zero upload work left.  The per-request PIN was
+        already taken at ADMISSION (``AdmissionController.try_admit``) and
+        is released by ``admission.finish`` — so LRU eviction (triggered
+        by some OTHER model's activation under slab pressure) can never
+        revoke weights an admitted request still needs, even in the
+        window before this activation makes the model resident.
         """
         if self.arena is None or not self.runners[name].paged:
             return
-        stream = self.mode.pipeline and not self.mode.lowering
-        self.arena.activate(name, upload=not stream)
-        self.arena.pin(name)
+        self.arena.activate(name, upload=False)
 
     # ------------------------------------------------------------------
     def _admit(self, req: Request, now: float) -> str:
@@ -387,8 +452,8 @@ class CrossPoolEngine:
         req.phase = Phase.FINISHED
         req.finish_time = now
         self.virt.release_request(req.request_id)
-        if self.arena is not None and self.runners[req.model].paged:
-            self.arena.unpin(req.model)      # idle models become evictable
+        # drops the admission-time pin too: idle models become evictable
+        self.admission.finish(req.model)
 
     # ------------------------------------------------------------------
     def run(self, requests: List[Request], *,
@@ -413,7 +478,7 @@ class CrossPoolEngine:
                 r.admit_time = now
                 waiting.append(r)
 
-        while (pending or waiting or
+        while (pending or waiting or self.admission.queued_count() or
                any(r.active for r in self.runners.values())):
             if steps >= max_steps:
                 break
@@ -423,36 +488,39 @@ class CrossPoolEngine:
                     and pending:
                 now = max(now, pending[0].arrival_time)
             admit_arrivals()
+            if (not waiting and not pending and
+                    not any(r.active for r in self.runners.values())):
+                # only queued requests remain and the pools are at rest:
+                # nothing in flight can free pages/slabs, so drain() can
+                # never make progress — exit instead of spinning to
+                # max_steps (the queued requests stay unserved)
+                break
 
             # --- prefill admitted requests into free slots ----------------
-            still = []
+            still, ready = [], []
             for req in waiting:
                 runner = self.runners[req.model]
-                if runner.free_slot() is not None:
-                    t0 = time.perf_counter()
-                    try:
-                        self._activate_model(req.model)
-                    except OutOfSlabsError:
-                        # every resident model is pinned by in-flight
-                        # requests; those pins drop as they finish, so the
-                        # request stays waiting — UNLESS the model can
-                        # never fit even an empty arena (budget error)
-                        if self.arena.views[req.model].total_slabs \
-                                > self.arena.slot_budget:
-                            raise
-                        still.append(req)
-                        continue
-                    runner.prefill_request(req, self.rng)
-                    dt = time.perf_counter() - t0
-                    now += dt
-                    req.first_token_time = now
-                    req.token_times.append(now)
-                    req.generated += 1
-                    self.stats.tokens_out += 1
-                    self.stats.ttft.append(now - req.arrival_time)
-                else:
+                if runner.free_slot() is None or \
+                        sum(1 for r in ready if r.model == req.model) >= \
+                        sum(1 for s in runner.slots if s is None):
                     still.append(req)
+                    continue
+                try:
+                    self._activate_model(req.model)
+                except OutOfSlabsError:
+                    # every resident model is pinned by in-flight
+                    # requests; those pins drop as they finish, so the
+                    # request stays waiting — UNLESS the model can
+                    # never fit even an empty arena (budget error)
+                    if self.arena.views[req.model].total_slabs \
+                            > self.arena.slot_budget:
+                        raise
+                    still.append(req)
+                    continue
+                ready.append(req)
             waiting = still
+            if ready:
+                now = self._prefill_ready(ready, now)
 
             # --- decode: one step per active model ------------------------
             active = [n for n, r in self.runners.items() if r.active]
@@ -502,6 +570,10 @@ class CrossPoolEngine:
                 f"slabs resident ({w['resident_models']} models), "
                 f"{w['activations']} activations, {w['evictions']} "
                 f"evictions, {w['layer_uploads']} layer uploads")
+            lines.append(
+                f"  device FFN bytes (prefill AND decode): "
+                f"{w['device_bytes'] / 2 ** 20:.1f} MiB — slot_budget x "
+                f"slab_bytes, no full-tree phase remains")
         return "\n".join(lines)
 
     # ------------------------------------------------------------------
@@ -524,6 +596,54 @@ class CrossPoolEngine:
             req.output_ids.append(int(toks[i]))
             req.token_times.append(now)
             self.stats.tokens_out += 1
+
+    def _book_first_token(self, req: Request, now: float) -> None:
+        req.first_token_time = now
+        req.token_times.append(now)
+        req.generated += 1
+        self.stats.tokens_out += 1
+        self.stats.ttft.append(now - req.arrival_time)
+
+    def _prefill_ready(self, ready: List[Request], now: float) -> float:
+        """Prefill activated requests.  In host-driven pipeline mode,
+        distinct models' prompt phases interleave through the layer-wise
+        scheduler (model A's layer-L attention overlaps model B's FFN and
+        each model's own layer-L+1 slab upload); everything else runs the
+        sequential streaming path."""
+        if self.scheduler is not None and self.mode.pipeline:
+            group: Dict[str, Request] = {}
+            rest: List[Request] = []
+            for req in ready:
+                if self.runners[req.model].paged and req.model not in group:
+                    group[req.model] = req
+                else:
+                    rest.append(req)
+            if len(group) >= 2:
+                now = self._prefill_pipelined(list(group.values()), now)
+                ready = rest
+        for req in ready:
+            runner = self.runners[req.model]
+            t0 = time.perf_counter()
+            runner.prefill_request(req, self.rng)
+            now += time.perf_counter() - t0
+            self._book_first_token(req, now)
+        return now
+
+    def _prefill_pipelined(self, reqs: List[Request], now: float) -> float:
+        """Concurrent cold-model prompt phases through the scheduler."""
+        t0 = time.perf_counter()
+        batches = [self.runners[r.model].make_prefill_batch(r, self.rng, i)
+                   for i, r in enumerate(reqs)]
+        done, pool = self.scheduler.run(batches, self.virt.pool,
+                                        max_inflight=2)
+        self.virt.pool = pool
+        now += time.perf_counter() - t0
+        by_model = {r.model: r for r in reqs}
+        for b in done:
+            req = by_model[b.model]
+            self.runners[b.model].apply_prefill_result(b, req)
+            self._book_first_token(req, now)
+        return now
 
     def _decode_model(self, name: str, now: float) -> float:
         runner = self.runners[name]

@@ -20,11 +20,9 @@ across models (§3.2), so the pools contend far less.
 from __future__ import annotations
 
 import heapq
-import math
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Tuple
 
-import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.runtime.request import Request

@@ -16,7 +16,7 @@ Arrivals are Poisson at a configurable per-model RPS (paper: 0.2-1.0).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List, Optional, Tuple
+from typing import List, Optional
 
 import numpy as np
 

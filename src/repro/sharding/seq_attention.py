@@ -15,8 +15,7 @@ states, not KV tensors, cross the pool boundary).
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional, Sequence, Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -10,10 +10,9 @@ from __future__ import annotations
 
 import fnmatch
 import math
-from typing import Dict, Iterable, Optional, Sequence, Tuple, Union
+from typing import Iterable, Sequence, Tuple, Union
 
 import jax
-import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 AxisName = Union[str, Tuple[str, ...], None]

@@ -9,7 +9,7 @@ the quickstart/example training curves are meaningful, not noise-fitting.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, Iterator, Optional
+from typing import Dict, Iterator
 
 import numpy as np
 

@@ -8,7 +8,7 @@ parameters' sharding, i.e. ZeRO-style sharded states under pjit for free.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, NamedTuple, Optional, Tuple
+from typing import Dict, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp

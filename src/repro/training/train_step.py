@@ -9,13 +9,11 @@ hooks + in_shardings — the step itself is sharding-agnostic.
 """
 from __future__ import annotations
 
-import functools
 from typing import Callable, Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ModelConfig
 from repro.models.hooks import Hooks, IDENTITY_HOOKS
 from repro.models.model import Model
 from repro.training import compression

@@ -6,7 +6,6 @@ import tempfile
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import get_smoke_config
 from repro.models import build_model
@@ -14,8 +13,7 @@ from repro.training import checkpoint as ckpt
 from repro.training import compression
 from repro.training.data import DataConfig, SyntheticLM
 from repro.training.optimizer import AdamW
-from repro.training.train_step import (TrainState, cross_entropy,
-                                       init_train_state, make_train_step)
+from repro.training.train_step import init_train_state, make_train_step
 
 
 def _setup(arch="qwen3-14b", **opt_kw):
