@@ -12,7 +12,13 @@ Guarded metrics (lower is better for all of them):
     slab layout or slot accounting regressed;
   * fig7: crosspool P99 TBT at 0.8 and 1.0 RPS — the tail-latency
     headline (the simulation is seeded, so drift is a code change, not
-    noise).
+    noise);
+  * online: the session API's online/batch median-TBT ratio — machine
+    speed cancels in the ratio, but the measured medians still jitter
+    with host load, so this entry carries a wide per-metric tolerance:
+    only a multiple-x online-path slowdown (lost prefill coalescing,
+    per-token host work creeping in) trips it, not scheduler noise.
+    The recorded P99s ride along in BENCH_summary.json unguarded.
 
 Metrics present in the baseline but missing from the new summary (or
 produced by a failed benchmark) are hard failures: a silently skipped
@@ -33,14 +39,19 @@ def _get(tree, path):
     return tree
 
 
-#: (label, path into the summary JSON, index into the value or None)
+#: (label, path into the summary JSON, index into the value or None,
+#:  per-metric tolerance overriding --tolerance or None)
 GUARDED = [
     ("table1 device FFN bytes (arena, prefill+decode GiB)",
-     ("table1", "metrics", "arena", "consolidated_arena_GiB"), None),
+     ("table1", "metrics", "arena", "consolidated_arena_GiB"), None, None),
     ("fig7 crosspool P99 TBT @ 0.8 RPS (s)",
-     ("fig7", "metrics", "('crosspool', 0.8)"), 1),
+     ("fig7", "metrics", "('crosspool', 0.8)"), 1, None),
     ("fig7 crosspool P99 TBT @ 1.0 RPS (s)",
-     ("fig7", "metrics", "('crosspool', 1.0)"), 1),
+     ("fig7", "metrics", "('crosspool', 1.0)"), 1, None),
+    # wall-clock medians on shared CI hosts jitter ~2x; guard only a
+    # multiple-x online-path regression
+    ("online session online/batch P50 TBT ratio",
+     ("online", "metrics", "online_over_batch_p50"), None, 3.0),
 ]
 
 
@@ -72,7 +83,8 @@ def main(argv=None) -> None:
         new = json.load(f)
 
     failures = []
-    for label, path, index in GUARDED:
+    for label, path, index, tol in GUARDED:
+        tolerance = args.tolerance if tol is None else tol
         b, err = extract(base, path, index)
         if err is not None:
             print(f"SKIP (not in baseline) {label}: {err}")
@@ -83,11 +95,11 @@ def main(argv=None) -> None:
             continue
         ratio = n / b if b else float("inf")
         verdict = "OK"
-        if n > b * (1.0 + args.tolerance):
+        if n > b * (1.0 + tolerance):
             verdict = "REGRESSED"
             failures.append(
                 f"{label}: {b:.6g} -> {n:.6g} "
-                f"(+{(ratio - 1) * 100:.1f}% > {args.tolerance * 100:.0f}%)")
+                f"(+{(ratio - 1) * 100:.1f}% > {tolerance * 100:.0f}%)")
         print(f"{verdict:9s} {label}: baseline={b:.6g} new={n:.6g} "
               f"({(ratio - 1) * 100:+.1f}%)")
 

@@ -1,0 +1,170 @@
+"""Online vs batch serving through the session API: decode-tail parity.
+
+Fig. 7 measures TBT tails in the discrete-event simulator at paper scale;
+this benchmark runs the REAL engine at smoke scale on one Poisson
+ShareGPT-like arrival trace, twice:
+
+  * batch  — the offline ``run()`` compatibility wrapper (the seed API);
+  * online — ``submit``/``step`` driven from the arrival clock, tokens
+    streamed through per-request callbacks, same-model arrivals coalesced
+    into [B, S] prefill passes.
+
+Each engine is warmed up first (every prefill bucket/batch shape and the
+decode programs compile before measurement, then ``reset_stats`` opens
+the measured window), so the recorded TBTs are compute, not XLA traces.
+
+``run()`` is a thin wrapper over the same step loop, so the two drivers
+serve the same token VOLUME (asserted; per-token streams are compared
+bit-exactly in ``tests/test_session.py`` on an arrival-free trace —
+under live Poisson arrivals the step boundaries land wherever the host's
+measured compute times put them, so stream identity across two
+wall-clock runs is not a deterministic claim).  P99 TBT for both modes
+is recorded in BENCH_summary.json; the guarded metric is the
+online/batch MEDIAN-TBT ratio — machine speed cancels in the ratio and
+the median is robust to single-step OS jitter, so the regression gate is
+stable across CI hosts while a real online-path slowdown (extra
+dispatches, lost coalescing) still trips it.
+"""
+from __future__ import annotations
+
+from repro.configs import PAPER_COLOC_SET, get_smoke_config
+from repro.runtime import trace as trace_mod
+from repro.runtime.engine import CrossPoolEngine, EngineMode
+from repro.runtime.request import Request, percentile
+
+
+def _models():
+    return {n: get_smoke_config(n).replace(dtype="float32")
+            for n in PAPER_COLOC_SET}
+
+
+def _engine():
+    return CrossPoolEngine(_models(), page_budget=4096, page_bytes=4096,
+                           slab_bytes=4096, max_batch=2, max_ctx=64,
+                           mode=EngineMode(pipeline=True, lowering=True),
+                           seed=0)
+
+
+def _trace():
+    reqs = trace_mod.make_requests(
+        list(PAPER_COLOC_SET), rps_per_model=4.0, horizon_s=2.0,
+        kind="sharegpt", seed=11, scale_tokens=0.05, max_new_cap=5)
+    for r in reqs:
+        # snap prompts to the warmed-up lengths: the pool's prompt-KV
+        # scatter compiles per (model, n_tokens), so unseen lengths would
+        # put XLA traces inside the measured TBT window
+        r.prompt_tokens = 6 + (r.prompt_tokens % 2)
+    # burst head (the paper's premise: bursty cold-model traffic): each
+    # model's first two requests arrive together, so a coalesced [2, S]
+    # prefill is part of the measured schedule deterministically — the
+    # Poisson tail then exercises per-step late joins
+    seen = {}
+    for r in reqs:
+        if seen.setdefault(r.model, 0) < 2:
+            r.arrival_time = 0.0
+            seen[r.model] += 1
+    reqs.sort(key=lambda r: r.arrival_time)
+    return reqs
+
+
+def _warmup(engine):
+    """Compile every shape the measured trace can hit: [1,16] and [2,16]
+    prefill (coalesced and late-join), both decode programs."""
+    reqs = [Request(10_000 + 10 * i + j, name, 5 + j, 2, 0.0)
+            for i, name in enumerate(PAPER_COLOC_SET) for j in range(3)]
+    engine.run(reqs)
+    assert engine.stats.tokens_out > 0
+    assert max(engine.stats.prefill_batch_sizes) > 1
+    engine.reset_stats()
+
+
+def _serve_online(engine, reqs):
+    pending = sorted(reqs, key=lambda r: r.arrival_time)
+    streamed = 0
+
+    def on_token(event):
+        nonlocal streamed
+        streamed += 1
+
+    steps = 0
+    while pending or engine.busy:
+        if steps >= 10_000:
+            break
+        steps += 1
+        # advance-then-submit, exactly like the run() wrapper, so the
+        # admission bookkeeping is stamped with the arrival clock
+        if not engine.busy and pending:
+            engine.advance(pending[0].arrival_time)
+        due = [r for r in pending if r.arrival_time <= engine.now]
+        pending = [r for r in pending if r.arrival_time > engine.now]
+        for r in due:
+            engine.submit(r, on_token=on_token)
+        events = engine.step()
+        if not events and not pending and not engine.busy:
+            break
+    stats = engine.finalize()
+    return stats, streamed
+
+
+def _measure(engine, online: bool):
+    reqs = _trace()
+    for r in reqs:
+        # the warmup advanced the session clock; keep the Poisson gaps
+        r.arrival_time += engine.now
+    if online:
+        stats, streamed = _serve_online(engine, reqs)
+        assert streamed == stats.tokens_out, "callback stream lost tokens"
+    else:
+        stats = engine.run(reqs)
+    tbt = [t for r in reqs for t in r.tbt_samples()]
+    ttft = [r.first_token_time - r.arrival_time
+            for r in reqs if r.first_token_time]
+    return stats, tbt, ttft, reqs
+
+
+def run(csv=print) -> dict:
+    # build + warm BOTH engines before measuring EITHER, so the process
+    # (allocator pools, XLA runtime, dispatch paths) is equally warm for
+    # the two measured phases
+    eng_b, eng_o = _engine(), _engine()
+    _warmup(eng_b)
+    _warmup(eng_o)
+    stats_b, tbt_b, _, reqs_b = _measure(eng_b, online=False)
+    stats_o, tbt_o, ttft_o, reqs_o = _measure(eng_o, online=True)
+
+    # run() is a thin wrapper over submit/step: same served volume
+    assert len(reqs_b) == len(reqs_o)
+    assert stats_o.tokens_out == stats_b.tokens_out, \
+        "online submit/step served a different token volume than run()"
+    sizes = stats_o.prefill_batch_sizes
+    coalesced = sum(1 for b in sizes if b > 1)
+    assert coalesced > 0, \
+        "the Poisson burst never coalesced a same-model prefill"
+
+    p99_b, p99_o = percentile(tbt_b, 99), percentile(tbt_o, 99)
+    p50_b, p50_o = percentile(tbt_b, 50), percentile(tbt_o, 50)
+    ratio_p50 = p50_o / p50_b if p50_b else float("nan")
+    csv(f"online,batch_p99_tbt_ms={p99_b * 1e3:.2f},"
+        f"online_p99_tbt_ms={p99_o * 1e3:.2f}")
+    csv(f"online,batch_p50_tbt_ms={p50_b * 1e3:.2f},"
+        f"online_p50_tbt_ms={p50_o * 1e3:.2f},p50_ratio={ratio_p50:.3f}")
+    csv(f"online,requests={len(reqs_o)},tokens={stats_o.tokens_out},"
+        f"prefill_passes={len(sizes)},coalesced={coalesced},"
+        f"max_B={max(sizes, default=0)}")
+    assert stats_o.tokens_out > 0
+    return {
+        "batch_p99_tbt_s": p99_b,
+        "online_p99_tbt_s": p99_o,
+        "batch_p50_tbt_s": p50_b,
+        "online_p50_tbt_s": p50_o,
+        "online_over_batch_p50": ratio_p50,
+        "online_p95_ttft_s": percentile(ttft_o, 95),
+        "tokens_out": stats_o.tokens_out,
+        "prefill_passes": len(sizes),
+        "coalesced_passes": int(coalesced),
+        "coalesced_max_b": int(max(sizes, default=0)),
+    }
+
+
+if __name__ == "__main__":
+    run()

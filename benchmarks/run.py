@@ -19,7 +19,7 @@ import numpy as np
 
 from benchmarks import (fig1b_kv_accumulation, fig2_kv_availability,
                         fig6_context_scalability, fig7_tbt, kernels_bench,
-                        table1_weight_breakdown, table3_ablation)
+                        online_tbt, table1_weight_breakdown, table3_ablation)
 
 BENCHES = {
     "fig1b": fig1b_kv_accumulation.run,
@@ -29,6 +29,7 @@ BENCHES = {
     "fig7": fig7_tbt.run,
     "table3": table3_ablation.run,
     "kernels": kernels_bench.run,
+    "online": online_tbt.run,
 }
 
 

@@ -1,5 +1,6 @@
 """Quickstart: build any assigned architecture, run forward / prefill /
-decode, and take a few train steps — all on CPU at smoke scale.
+decode, take a few train steps, and stream tokens through the online
+serving session — all on CPU at smoke scale.
 
   PYTHONPATH=src python examples/quickstart.py --arch qwen3-moe-235b-a22b
 """
@@ -10,7 +11,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ARCH_NAMES, get_smoke_config
+from repro.core.split_exec import supports_split
 from repro.models import build_model
+from repro.runtime.engine import CrossPoolEngine
+from repro.runtime.request import Request
 from repro.runtime.sampler import sample
 from repro.training.data import DataConfig, SyntheticLM
 from repro.training.optimizer import AdamW
@@ -72,6 +76,19 @@ def main():
                                          for k, v in kw.items()}})
         if i % 5 == 0 or i == args.steps - 1:
             print(f"train step {i:3d} loss {float(metrics['loss']):.4f}")
+
+    # --- online serving session: submit / step / stream ------------------
+    if supports_split(cfg):
+        engine = CrossPoolEngine({cfg.name: cfg}, page_budget=512,
+                                 page_bytes=4096, slab_bytes=4096,
+                                 max_batch=2, max_ctx=64)
+        streamed = []
+        handle = engine.submit(Request(0, cfg.name, 8, 4, 0.0),
+                               on_token=lambda e: streamed.append(e.token))
+        while not handle.done:
+            engine.step()
+        print(f"session streamed {streamed} "
+              f"(admission={handle.admission}, state={handle.state.value})")
     print("quickstart OK")
 
 

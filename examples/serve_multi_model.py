@@ -6,6 +6,11 @@ colocating three cold MoE/MLA models -> decode with batched requests ->
 TBT / throughput / pool-utilization report.
 
   PYTHONPATH=src python examples/serve_multi_model.py --rps 1.0 --horizon 8
+
+``--online`` drives the session API instead of the offline ``run()``
+wrapper: requests are submitted one by one as their Poisson arrival time
+comes due, tokens stream through per-request callbacks, and same-model
+arrivals coalesce into [B, S] prefill passes between decode steps.
 """
 import argparse
 
@@ -20,12 +25,47 @@ from repro.runtime.engine import CrossPoolEngine, EngineMode
 from repro.runtime.request import percentile
 
 
+def serve_online(engine, reqs):
+    """Drive the session API from the trace's arrival clock: submit each
+    request when due, step between arrivals, stream tokens via callbacks.
+    Returns (handles, finalized stats)."""
+    first_events = []
+    handles = []
+    pending = sorted(reqs, key=lambda r: r.arrival_time)
+    steps = 0
+    while pending or engine.busy:
+        if steps >= 10_000:
+            break
+        steps += 1
+        # idle with future arrivals: advance the clock to the next one,
+        # BEFORE submitting, so admission stamps the arrival time
+        if not engine.busy and pending:
+            engine.advance(pending[0].arrival_time)
+        now = engine.now
+        due = [r for r in pending if r.arrival_time <= now]
+        pending = [r for r in pending if r.arrival_time > now]
+        for r in due:
+            handles.append(engine.submit(
+                r, on_token=lambda e: first_events.append(e)
+                if e.first else None))
+        events = engine.step()
+        if not events and not pending and not engine.busy:
+            break          # only unserviceable queued requests remain
+    for e in first_events[:3]:
+        print(f"  stream: request {e.request_id} ({e.model}) first token "
+              f"{e.token} at t={e.time:.3f}s")
+    return handles, engine.finalize()
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--rps", type=float, default=1.0)
     ap.add_argument("--horizon", type=float, default=8.0)
     ap.add_argument("--quantile", type=float, default=0.99)
     ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--online", action="store_true",
+                    help="drive the submit/step session API from the "
+                         "arrival trace instead of the offline run() wrapper")
     args = ap.parse_args()
 
     models = {n: get_smoke_config(n) for n in PAPER_COLOC_SET}
@@ -80,8 +120,20 @@ def main():
     for r in reqs:
         r.prompt_tokens = max(min(r.prompt_tokens, 48), 2)
     print(f"\n=== serving {len(reqs)} requests over {len(models)} cold "
-          f"models ===")
-    stats = engine.run(reqs)
+          f"models ({'online submit/step' if args.online else 'batch run()'})"
+          f" ===")
+    if args.online:
+        handles, stats = serve_online(engine, reqs)
+        by_state = {}
+        for h in handles:
+            by_state[h.state.value] = by_state.get(h.state.value, 0) + 1
+        coalesced = [b for b in stats.prefill_batch_sizes if b > 1]
+        print(f"handles: {by_state}; prefill passes "
+              f"{len(stats.prefill_batch_sizes)} "
+              f"({len(coalesced)} coalesced, max B = "
+              f"{max(stats.prefill_batch_sizes, default=0)})")
+    else:
+        stats = engine.run(reqs)
 
     finished = [r for r in reqs if r.finish_time > 0]
     print(f"finished {len(finished)}/{len(reqs)}  tokens {stats.tokens_out}  "

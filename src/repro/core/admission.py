@@ -170,6 +170,21 @@ class AdmissionController:
         if self.arena is not None and model in self.arena.views:
             self.arena.unpin(model)
 
+    def cancel_queued(self, request_id: int) -> bool:
+        """Remove a still-queued request from its model's front-door queue.
+
+        Queued requests hold NO resources (``try_admit`` failed before any
+        page/pin was taken), so cancellation is pure bookkeeping; admitted
+        requests are cancelled through the engine, which releases pages and
+        calls :meth:`finish` instead.
+        """
+        for q in self.queues.values():
+            for pending in q:
+                if pending.request_id == request_id:
+                    q.remove(pending)
+                    return True
+        return False
+
     def drain(self, now: float) -> List[PendingRequest]:
         """Admit queued requests that now fit (FIFO per model, round-robin
         across models so one model cannot starve the others)."""

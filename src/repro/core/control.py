@@ -42,6 +42,7 @@ from typing import Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.pools import PooledModel, transfer
 from repro.kernels.ops import donate_argnums as _donate
@@ -106,6 +107,18 @@ class HostDrivenStep:
         self.result = (self._logits(p_kv, x), pool)
 
 
+def logit_index(true_len):
+    """Last-prompt-position index for ``prefill_logits``.
+
+    A host int (every row shares one unpadded length) stays a scalar —
+    the seed trace shape — while a per-row sequence from a coalesced
+    same-model batch becomes a [B] int32 vector.
+    """
+    if isinstance(true_len, (int, np.integer)):
+        return jnp.int32(int(true_len) - 1)
+    return jnp.asarray(np.asarray(true_len, np.int32).reshape(-1) - 1)
+
+
 class StreamingPrefill:
     """Arena-bounded prompt-phase execution with streamed weight uploads.
 
@@ -155,9 +168,11 @@ class StreamingPrefill:
     def __call__(self, tokens, true_len, pool, writer=None
                  ) -> Tuple[jax.Array, jax.Array]:
         """tokens [B,S] prompt ids; ``true_len`` the unpadded length whose
-        last position's logits are returned; ``writer(layer, layer_kv,
-        pool) -> pool`` scatters one layer's prompt KV into the shared
-        pool (None skips KV capture).  Returns (logits [B,V], pool)."""
+        last position's logits are returned — a host int shared by every
+        row, or a length-B sequence for a coalesced same-model batch where
+        each row carries its own prompt; ``writer(layer, layer_kv, pool)
+        -> pool`` scatters one layer's prompt KV into the shared pool
+        (None skips KV capture).  Returns (logits [B,V], pool)."""
         name = self.pooled.cfg.name
         arena = self.pooled.arena
         fns = self.pooled.stage_fns
@@ -179,7 +194,7 @@ class StreamingPrefill:
             if self.kv_device is not None:
                 ffn_out = transfer(ffn_out, self.kv_device)  # F-to-A
             x = self._combine(x, ffn_out)
-        return self._logits(p_kv, x, jnp.int32(true_len - 1)), pool
+        return self._logits(p_kv, x, logit_index(true_len)), pool
 
 
 class PagedFusedStep:

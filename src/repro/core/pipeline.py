@@ -36,9 +36,8 @@ from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 
-from repro.core.control import HostDrivenStep
+from repro.core.control import HostDrivenStep, logit_index
 from repro.core.pools import PooledModel, transfer
 
 
@@ -70,7 +69,9 @@ class InflightBatch:
     logits: Optional[jax.Array] = None
     # prompt-phase extras
     prefill: bool = False
-    true_len: int = 0                 # unpadded prompt length (host int)
+    # unpadded prompt length: host int, or a length-B sequence when the
+    # batch coalesces several same-model prompts into one [B,S] pass
+    true_len: object = 0
     kv_writer: Optional[Callable] = None
 
     @property
@@ -140,7 +141,7 @@ class LayerPipelineScheduler:
             b.layer += 1
             if b.layer >= fns.n_layers:
                 b.logits = (step._plogits(p_kv, b.x,
-                                          jnp.int32(b.true_len - 1))
+                                          logit_index(b.true_len))
                             if b.prefill else step._logits(p_kv, b.x))
                 b.phase = "done"                              # early exit
             else:

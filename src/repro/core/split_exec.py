@@ -57,7 +57,8 @@ class StageFns(NamedTuple):
     #                           -> (x_resid, ffn_input, layer_kv)
     #                        layer_kv: (k, v) [B,S,KV,hd] for GQA or
     #                                  (latent, rope) [B,S,·] for MLA
-    prefill_logits: Callable  # (params, x [B,S,D], logit_index) -> [B,V]
+    prefill_logits: Callable  # (params, x [B,S,D],
+    #                           logit_index scalar | [B])      -> [B,V]
     n_layers: int
 
 
@@ -122,7 +123,20 @@ def make_stage_fns(cfg: ModelConfig, view: ModelView,
                                            keepdims=False)
         p_l = w_view.unpack_layer(arena, row)
         if cfg.is_moe:
-            out, _ = moe_mod.apply_moe(p_l["moe"], ffn_in, cfg)
+            B, S = ffn_in.shape[0], ffn_in.shape[1]
+            if B > 1 and S > 1:
+                # batched (coalesced) prefill: route each request's prompt
+                # independently, so expert capacity is per request and a
+                # [B,S] pass is bit-exact with B separate [1,S] passes —
+                # one request's tokens can never evict another's from an
+                # expert's capacity window (decode keeps the batch-global
+                # formulation: its rows are single tokens)
+                out, _ = jax.vmap(
+                    lambda r: moe_mod.apply_moe(p_l["moe"], r[None], cfg)
+                )(ffn_in)
+                out = out[:, 0]
+            else:
+                out, _ = moe_mod.apply_moe(p_l["moe"], ffn_in, cfg)
         else:
             out = layers.apply_mlp(p_l["mlp"], ffn_in, cfg.mlp_kind)
         return out
@@ -155,7 +169,13 @@ def make_stage_fns(cfg: ModelConfig, view: ModelView,
         return x, ffn_in, layer_kv
 
     def prefill_logits(params, x, logit_index):
-        x_last = jax.lax.dynamic_slice_in_dim(x, logit_index, 1, axis=1)
+        # ``logit_index`` is scalar (one shared unpadded length) or [B]
+        # (a coalesced batch where every row has its own true length)
+        idx = jnp.asarray(logit_index, jnp.int32)
+        if idx.ndim == 0:
+            x_last = jax.lax.dynamic_slice_in_dim(x, idx, 1, axis=1)
+        else:
+            x_last = jnp.take_along_axis(x, idx[:, None, None], axis=1)
         x_last = layers.rms_norm(x_last, params["final_norm"], cfg.norm_eps)
         return layers.unembed(params["embed"], x_last)[:, 0]
 

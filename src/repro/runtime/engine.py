@@ -1,21 +1,33 @@
-"""CrossPool serving engine: colocated multi-model decode over the pools.
+"""CrossPool serving engine: an online, continuously-batched session API.
 
-End-to-end path (paper §3/§4, decode-side):
+End-to-end path (paper §3/§4), now event-driven (DESIGN.md §7):
 
-  arrivals -> AdmissionController (planner budget, queue-or-reject)
-           -> prefill (bucketed); prompt KV is scattered into the SHARED
-              paged pool pages mapped by the admission-time
-              ``register_request``
-           -> decode loop, reading/writing KV through the pool:
-                lowering=fused : one compiled paged step per model per
-                                 token ("persistent kernel" analogue,
-                                 ``PagedFusedStep``)
-                lowering=host  : per-layer attention/FFN dispatches across
-                                 the disaggregated pools
-                pipeline=True  : two models' batches kept in flight so
-                                 attention and FFN overlap (paper Fig. 4)
-           -> sampling, TBT bookkeeping
-           -> release slot + pages, drain admission queue.
+  submit(request) -> AdmissionController verdict (planner budget,
+           queue-or-reject) surfaced on the returned RequestHandle
+  step(now)
+        -> drain the front-door queue (requests whose resources freed)
+        -> PrefillBatcher: coalesce admitted same-model arrivals into ONE
+           [B, S] StreamingPrefill pass per (model, prompt-bucket) group;
+           prompt KV is scattered into the SHARED paged pool pages mapped
+           at admission
+        -> decode: one step per active model over the pool
+             lowering=fused : one compiled paged step per model per token
+                              ("persistent kernel" analogue,
+                              ``PagedFusedStep``)
+             lowering=host  : per-layer attention/FFN dispatches across
+                              the disaggregated pools
+             pipeline=True  : the active models' batches kept in flight so
+                              attention and FFN overlap (paper Fig. 4)
+        -> completions: release slot + pages + weight pin, so the NEXT
+           step's drain can admit what was queued behind them
+        -> list[TokenEvent] (per-token streaming callbacks fire inline)
+  cancel(handle) -> atomically frees KV pages and drops the weight pin
+  drain() -> step until quiescent
+
+Requests join and leave decode batches BETWEEN steps — there is no
+global barrier and no offline trace: ``run(requests)`` survives only as
+a thin compatibility wrapper that submits arrivals when due and calls
+``step``.
 
 The virtualizer's device page pool is the SINGLE source of KV truth for
 every dense/moe/vlm model: total device KV bytes are fixed by
@@ -23,24 +35,14 @@ every dense/moe/vlm model: total device KV bytes are fixed by
 Families outside split execution (SSM/hybrid/enc-dec/SWA) fall back to a
 fused dense-cache path; their pool pages are accounting-only.
 
-Since PR 2 the weights side is symmetric: FFN/MoE weights live in ONE
-shared slab arena (``repro.core.weight_pool.WeightArena``) whose device
-bytes are fixed by ``slot_budget`` alone.  A cold model is ACTIVATED into
-the arena when its first request reaches a batch slot (evicting idle
-models LRU under pressure), pinned while it has in-flight requests, and
-unpinned as they finish.
-
-PREFILL runs through the arena too (PR 3): there is no per-model
-device-resident param tree at all — ``ModelRunner`` keeps only batch-slot
-state, prompt-phase FFN gathers the same ``(arena, slot_table)`` slabs as
-decode (``control.StreamingPrefill``), and activation maps slots WITHOUT
-uploading: each layer's slabs stream in behind the previous layer's
-prefill attention, so a cold model's first token overlaps its own weight
-upload in BOTH lowering modes.  In host-driven pipeline mode, concurrent
-cold prefills additionally interleave through the layer-wise scheduler.
-Admission is arena-aware: a cold-model request whose slabs are not
-reachable without revoking another admitted model's weights queues at the
-front door instead of thrashing the LRU.
+The weights side is symmetric (PR 2/3): FFN/MoE weights live in ONE
+shared slab arena whose device bytes are fixed by ``slot_budget`` alone;
+prefill streams each layer's slabs in behind the previous layer's
+attention, so a cold model's first token overlaps its own upload in BOTH
+lowering modes, and ``ModelRunner`` holds NO full param tree.  Admission
+is arena-aware: a cold-model request whose slabs are not reachable
+without revoking another admitted model's weights queues at the front
+door instead of thrashing the LRU.
 
 Engine-scale model set = the paper's colocation trio at smoke scale; the
 production-mesh behaviour of the same code paths is proven by the dry-run.
@@ -50,7 +52,7 @@ from __future__ import annotations
 import math
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -70,15 +72,8 @@ from repro.core.weight_pool import DEFAULT_SLAB_BYTES, OutOfSlabsError
 from repro.models import build_model
 from repro.runtime.request import Phase, Request
 from repro.runtime.sampler import sample
-
-_BUCKETS = (16, 32, 64, 128, 256, 512)
-
-
-def _bucket(n: int, max_ctx: int) -> int:
-    for b in _BUCKETS:
-        if n <= b and b <= max_ctx:
-            return b
-    return max_ctx
+from repro.runtime.session import (HandleState, PrefillBatcher, PrefillGroup,
+                                   RequestHandle, TokenEvent)
 
 
 @dataclass
@@ -95,9 +90,12 @@ class EngineStats:
     ttft: List[float] = field(default_factory=list)
     step_times: Dict[str, List[float]] = field(default_factory=dict)
     slow_steps: int = 0            # straggler-mitigation counter
+    cancelled: int = 0             # requests cancelled through the session
+    # batch size of every executed prefill pass (B > 1 = coalesced)
+    prefill_batch_sizes: List[int] = field(default_factory=list)
     # live view of the admission controller's counters (global + per model)
     admission: Optional[AdmissionStats] = None
-    # weights-arena counters (activations/evictions/uploads), set by run()
+    # weights-arena counters (activations/evictions/uploads)
     weights_pool: Dict[str, float] = field(default_factory=dict)
 
     @property
@@ -116,6 +114,10 @@ class ModelRunner:
     copies are the pooled kv_params (non-FFN) and the arena's packed host
     masters.  ``paged=False`` (fused fallback families): a contiguous
     per-model cache and a device-resident ``params`` tree as before.
+
+    Prefill consumes :class:`~repro.runtime.session.PrefillGroup`s — one
+    ``[B, S]`` pass per same-model same-bucket group, committing each row
+    into its own batch slot.
     """
 
     def __init__(self, name: str, cfg: ModelConfig, params,
@@ -185,25 +187,27 @@ class ModelRunner:
     def _active_slots(self) -> List[int]:
         return [i for i, s in enumerate(self.slots) if s is not None]
 
-    def _prompt_ids_and_writer(self, req: Request, rng: np.random.Generator):
-        """(prompt ids [bucket], write length, per-layer pool writer).
-
-        Prompts longer than the bucket are truncated to it, exactly as the
-        dense prefill's fixed-width cache slice did."""
-        b = _bucket(req.prompt_tokens, self.max_ctx)
-        ids = rng.integers(0, self.cfg.vocab_size, b).astype(np.int32)
-        n_write = min(req.prompt_tokens, b)
+    # ------------------------------------------------------------------
+    # prefill: one [B, S] pass per coalesced group
+    # ------------------------------------------------------------------
+    def _group_writer(self, group: PrefillGroup):
+        """Per-layer pool writer scattering EVERY row's prompt KV to its
+        own request's pages (the writer threads the donated pool buffer
+        through B scatters per layer)."""
 
         def writer(layer, layer_kv, pool):
-            return self.virt.write_prompt_layer(
-                pool, self.name, req.request_id, layer, layer_kv, n_write)
+            for i, (req, n_w) in enumerate(zip(group.requests,
+                                               group.n_writes)):
+                pool = self.virt.write_prompt_layer(
+                    pool, self.name, req.request_id, layer, layer_kv, n_w,
+                    batch_index=i)
+            return pool
 
-        return ids, n_write, writer
+        return writer
 
-    def _commit_prefill(self, req: Request, logits: jax.Array) -> int:
+    def _commit_prefill(self, req: Request, tok: int) -> int:
         slot = self.free_slot()
         assert slot is not None
-        tok = int(jnp.argmax(logits[0]))
         self.slots[slot] = req
         self.lengths[slot] = req.prompt_tokens
         self.next_tokens[slot] = tok
@@ -211,39 +215,51 @@ class ModelRunner:
         req.output_ids.append(tok)       # the prefill-sampled first token
         return slot
 
-    def prefill_request(self, req: Request, rng: np.random.Generator) -> int:
+    def _commit_group(self, group: PrefillGroup, logits: jax.Array
+                      ) -> List[int]:
+        toks = np.asarray(jnp.argmax(logits, axis=-1))
+        return [self._commit_prefill(req, int(toks[i]))
+                for i, req in enumerate(group.requests)]
+
+    def prefill_group(self, group: PrefillGroup) -> List[int]:
+        """Execute one coalesced prompt pass and commit each row to a
+        batch slot; returns the slots in row order."""
         # check BEFORE any device work: a full batch must fail here, not
         # after the prompt KV has already been scattered into the pool
-        assert self.free_slot() is not None
+        free = sum(1 for s in self.slots if s is None)
+        assert group.batch_size <= free, (group.batch_size, free)
         if self.paged:
-            ids, n_write, writer = self._prompt_ids_and_writer(req, rng)
             # streaming prompt phase: per-layer attention with the next
-            # layer's arena slabs uploading behind it; prompt KV is
-            # scattered into pool pages as each layer completes
+            # layer's arena slabs uploading behind it; every row's prompt
+            # KV is scattered into pool pages as each layer completes
             logits, self.virt.pool = self.prefill_step(
-                jnp.asarray(ids[None, :]), n_write, self.virt.pool, writer)
-        else:
+                jnp.asarray(group.tokens()), group.true_lens(),
+                self.virt.pool, self._group_writer(group))
+            return self._commit_group(group, logits)
+        # fallback families: per-slot dense prefill, one row at a time
+        slots = []
+        for ids, req in zip(group.ids, group.requests):
             slot = self.free_slot()
             assert slot is not None
-            b = _bucket(req.prompt_tokens, self.max_ctx)
-            ids = rng.integers(0, self.cfg.vocab_size, b).astype(np.int32)
             logits, self.cache = self._prefill(
                 self.params, jnp.asarray(ids[None, :]), self.cache,
                 jnp.int32(slot), jnp.int32(req.prompt_tokens))
-        return self._commit_prefill(req, logits)
+            slots.append(self._commit_prefill(
+                req, int(jnp.argmax(logits[0]))))
+        return slots
 
-    def make_prefill_batch(self, req: Request, rng: np.random.Generator,
+    def make_prefill_batch(self, group: PrefillGroup,
                            batch_id: int) -> InflightBatch:
-        """Package one request's prompt phase for the layer-wise scheduler
+        """Package one group's prompt phase for the layer-wise scheduler
         (interleaves with other models' prefill/decode stages)."""
-        ids, n_write, writer = self._prompt_ids_and_writer(req, rng)
         return InflightBatch(
             batch_id=batch_id, model=self.name,
-            tokens=jnp.asarray(ids[None, :]), prefill=True,
-            true_len=n_write, kv_writer=writer)
+            tokens=jnp.asarray(group.tokens()), prefill=True,
+            true_len=group.true_lens(), kv_writer=self._group_writer(group))
 
-    def apply_prefill_result(self, batch: InflightBatch, req: Request) -> int:
-        return self._commit_prefill(req, batch.logits)
+    def apply_prefill_result(self, batch: InflightBatch,
+                             group: PrefillGroup) -> List[int]:
+        return self._commit_group(group, batch.logits)
 
     # ------------------------------------------------------------------
     # decode: issue (non-blocking dispatch) / commit (block + bookkeeping)
@@ -342,6 +358,13 @@ class ModelRunner:
 
 
 class CrossPoolEngine:
+    """The serving session: ``submit`` / ``step`` / ``cancel`` / ``drain``.
+
+    One engine instance IS one continuously-batched serving session over
+    the shared pools.  ``run(requests)`` remains as a thin offline
+    wrapper that submits arrivals when due and steps to completion.
+    """
+
     def __init__(self, models: Dict[str, ModelConfig], *,
                  page_budget: int, page_bytes: int = DEFAULT_PAGE_BYTES,
                  slot_budget: Optional[int] = None,
@@ -422,7 +445,228 @@ class CrossPoolEngine:
         self.stats = EngineStats(step_times={n: [] for n in models},
                                  admission=self.admission.stats)
 
+        # --- session state -------------------------------------------------
+        self.now = 0.0
+        self.batcher = PrefillBatcher()
+        self.handles: Dict[int, RequestHandle] = {}
+        self.waiting: List[Request] = []     # admitted, no batch slot yet
+        self._submitted: Dict[int, Request] = {}
+        self._window: set = set()            # request ids in the stats window
+        self._events: List[TokenEvent] = []
+        self._in_step = False
+        self._deferred_cancels: List[RequestHandle] = []
+
     # ------------------------------------------------------------------
+    # the session API
+    # ------------------------------------------------------------------
+    def advance(self, now: float) -> float:
+        """Move the session clock forward (it never runs backwards).
+        External drivers advance to an arrival's due time BEFORE
+        submitting it, so admission/queue-wait bookkeeping is stamped
+        with the arrival clock — exactly as the ``run()`` wrapper does."""
+        self.now = max(self.now, float(now))
+        return self.now
+
+    def submit(self, req: Request, on_token=None) -> RequestHandle:
+        """Offer one request to the front door at the engine's current
+        time; the admission verdict is on the returned handle."""
+        assert req.request_id not in self._submitted, \
+            f"request id {req.request_id} already submitted"
+        self._submitted[req.request_id] = req
+        self._window.add(req.request_id)
+        outcome = self._admit(req, self.now)
+        if outcome == "admitted":
+            req.admit_time = self.now
+            self.waiting.append(req)
+            state = HandleState.ADMITTED
+        elif outcome == "queued":
+            state = HandleState.QUEUED
+        else:
+            state = HandleState.REJECTED
+        handle = RequestHandle(request=req, admission=outcome, state=state,
+                               on_token=on_token, _engine=self)
+        self.handles[req.request_id] = handle
+        return handle
+
+    def step(self, now: Optional[float] = None) -> List[TokenEvent]:
+        """One engine step: drain -> batched prefill -> decode ->
+        completions.  Returns the tokens generated this step (streaming
+        callbacks fire inline as each batch commits)."""
+        if now is not None:
+            self.now = max(self.now, float(now))
+        self._events = []
+        self._in_step = True
+        try:
+            self._step_phases()
+        finally:
+            self._in_step = False
+            deferred, self._deferred_cancels = self._deferred_cancels, []
+            for handle in deferred:     # reentrant cancels, now safe
+                self.cancel(handle)
+        return self._events
+
+    def _step_phases(self) -> None:
+        # --- drain the front-door queue (resources freed last step) ------
+        for p in self.admission.drain(self.now):
+            req = self._submitted[p.request_id]
+            req.admit_time = self.now
+            self.handles[req.request_id].state = HandleState.ADMITTED
+            self.waiting.append(req)
+
+        # --- prefill: coalesce admitted arrivals into [B, S] groups ------
+        groups, self.waiting = self.batcher.plan(
+            self.waiting, self.runners, self.rng, self._try_activate)
+        if groups:
+            self.now = self._prefill_groups(groups, self.now)
+
+        # --- decode: one step per active model ---------------------------
+        active = [n for n, r in self.runners.items() if r.active]
+        if self.mode.pipeline and len(active) >= 2:
+            self.now = self._decode_pipelined(active, self.now)
+        else:
+            for n in active:
+                self.now = self._decode_model(n, self.now)
+
+        # --- completions -------------------------------------------------
+        for n, runner in self.runners.items():
+            for slot, req in enumerate(runner.slots):
+                if req is not None and req.done:
+                    runner.release(slot)
+                    self._finish(req, self.now)
+
+    def cancel(self, handle: Union[RequestHandle, int]) -> bool:
+        """Abort a submitted request, atomically returning its resources.
+
+        Unpins weight slabs and frees KV pages in one host-side
+        transaction (no device work, nothing can fail part-way):
+        queued requests hold nothing and just leave the queue; admitted
+        requests release their admission-time pages and drop the arena
+        pin via ``AdmissionController.finish`` — the same teardown a
+        natural completion uses — whether they are still waiting for a
+        slot (mid-prefill) or already decoding.
+
+        Reentrancy: a cancel issued from inside an ``on_token`` callback
+        (the "stop at token X" pattern) lands while the step's commit
+        loops are mid-flight, so it is DEFERRED to the step boundary —
+        the request may emit the rest of this step's tokens first, and a
+        request that completes within the same step stays FINISHED.
+        """
+        if isinstance(handle, int):
+            handle = self.handles[handle]
+        if handle.state.terminal:
+            return False
+        if self._in_step:
+            if handle not in self._deferred_cancels:
+                self._deferred_cancels.append(handle)
+            return True
+        req = handle.request
+        if handle.state is HandleState.QUEUED:
+            self.admission.cancel_queued(req.request_id)
+        else:
+            if handle.state is HandleState.DECODING:
+                runner = self.runners[req.model]
+                for slot, r in enumerate(runner.slots):
+                    if r is req:
+                        runner.release(slot)
+                        break
+            else:                            # ADMITTED: waiting for a slot
+                self.waiting = [r for r in self.waiting
+                                if r.request_id != req.request_id]
+            # pages + pin go back together: the KV release and the
+            # admission-side unpin are both pure bookkeeping, so there is
+            # no window in which a cancelled request still holds memory
+            self.virt.release_request(req.request_id)
+            self.admission.finish(req.model)
+        req.phase = Phase.CANCELLED
+        req.finish_time = self.now
+        handle.state = HandleState.CANCELLED
+        self.stats.cancelled += 1
+        return True
+
+    def drain(self, *, max_steps: int = 10_000) -> EngineStats:
+        """Step until every submitted request finished (or nothing can
+        make progress / ``max_steps``); returns the finalized stats."""
+        steps = 0
+        while (self.waiting or self.admission.queued_count()
+               or self._any_active()):
+            if steps >= max_steps:
+                break
+            steps += 1
+            events = self.step()
+            if not events and not self.waiting and not self._any_active():
+                # only queued requests remain and the pools are at rest:
+                # nothing in flight can free pages/slabs, so drain() can
+                # never make progress — exit instead of spinning
+                break
+        return self.finalize()
+
+    def finalize(self) -> EngineStats:
+        """Fold per-request latency samples into the stats snapshot."""
+        self.stats.wall_s = self.now
+        self.stats.tbt = [t for rid in self._window
+                          for t in self._submitted[rid].tbt_samples()]
+        if self.arena is not None:
+            self.stats.weights_pool = self.arena.utilization()
+        return self.stats
+
+    def reset_stats(self) -> EngineStats:
+        """Open a fresh measurement window on a live session (long-running
+        sessions measure in windows: warmup/steady-state, per-tenant
+        SLOs).  Step-time logs, token counters and per-request latency
+        folds restart; the admission controller's lifetime counters keep
+        accumulating and stay visible on the new snapshot.  Terminal
+        requests and their handles are PRUNED here — this is the point
+        that bounds a long-lived session's memory — so a session that
+        never resets retains every handle it ever created."""
+        self.stats = EngineStats(step_times={n: [] for n in self.models},
+                                 admission=self.admission.stats)
+        for rid, handle in list(self.handles.items()):
+            if handle.state.terminal:
+                del self.handles[rid]
+                del self._submitted[rid]
+        self._window.clear()
+        return self.stats
+
+    # ------------------------------------------------------------------
+    # offline compatibility wrapper
+    # ------------------------------------------------------------------
+    def run(self, requests: List[Request], *,
+            max_steps: int = 10_000) -> EngineStats:
+        """Serve a pre-generated trace to completion (or max_steps): a
+        thin wrapper that submits arrivals when due and calls ``step`` —
+        there is no second serving loop."""
+        pending = sorted(requests, key=lambda r: r.arrival_time)
+        steps = 0
+        while (pending or self.waiting or self.admission.queued_count()
+               or self._any_active()):
+            if steps >= max_steps:
+                break
+            steps += 1
+            # jump virtual time to the next arrival if idle
+            if not self.waiting and not self._any_active() and pending:
+                self.advance(pending[0].arrival_time)
+            due = [r for r in pending if r.arrival_time <= self.now]
+            pending = [r for r in pending if r.arrival_time > self.now]
+            for r in due:
+                self.submit(r)
+            events = self.step()
+            if (not events and not self.waiting and not pending
+                    and not self._any_active()):
+                # only queued requests remain (see ``drain``)
+                break
+        return self.finalize()
+
+    # ------------------------------------------------------------------
+    @property
+    def busy(self) -> bool:
+        """Whether stepping can make progress right now: requests are in
+        batch slots or admitted-waiting (queued-only backpressure is
+        visible via ``admission.queued_count()`` instead)."""
+        return bool(self.waiting) or self._any_active()
+
+    def _any_active(self) -> bool:
+        return any(r.active for r in self.runners.values())
+
     def _activate_model(self, name: str) -> None:
         """Map a cold model's slabs before its first prefill — WITHOUT
         uploading: the streaming prompt phase prefetches layer L+1's slabs
@@ -439,6 +683,20 @@ class CrossPoolEngine:
             return
         self.arena.activate(name, upload=False)
 
+    def _try_activate(self, name: str) -> bool:
+        """Activation gate for the prefill batcher: False keeps the
+        request waiting (resident models' pins drop as they finish)."""
+        try:
+            self._activate_model(name)
+        except OutOfSlabsError:
+            # every resident model is pinned by in-flight requests; those
+            # pins drop as they finish, so the request stays waiting —
+            # UNLESS the model can never fit even an empty arena
+            if self.arena.views[name].total_slabs > self.arena.slot_budget:
+                raise
+            return False
+        return True
+
     # ------------------------------------------------------------------
     def _admit(self, req: Request, now: float) -> str:
         pending = PendingRequest(req.request_id, req.model,
@@ -454,94 +712,9 @@ class CrossPoolEngine:
         self.virt.release_request(req.request_id)
         # drops the admission-time pin too: idle models become evictable
         self.admission.finish(req.model)
-
-    # ------------------------------------------------------------------
-    def run(self, requests: List[Request], *,
-            max_steps: int = 10_000) -> EngineStats:
-        """Serve a pre-generated trace to completion (or max_steps)."""
-        pending = sorted(requests, key=lambda r: r.arrival_time)
-        waiting: List[Request] = []       # admitted by controller, no slot yet
-        by_id = {r.request_id: r for r in requests}
-        now = 0.0
-        steps = 0
-
-        def admit_arrivals():
-            nonlocal pending
-            due = [r for r in pending if r.arrival_time <= now]
-            pending = [r for r in pending if r.arrival_time > now]
-            for r in due:
-                if self._admit(r, now) == "admitted":
-                    r.admit_time = now
-                    waiting.append(r)
-            for p in self.admission.drain(now):
-                r = by_id[p.request_id]
-                r.admit_time = now
-                waiting.append(r)
-
-        while (pending or waiting or self.admission.queued_count() or
-               any(r.active for r in self.runners.values())):
-            if steps >= max_steps:
-                break
-            steps += 1
-            # jump virtual time to the next arrival if idle
-            if not waiting and not any(r.active for r in self.runners.values()) \
-                    and pending:
-                now = max(now, pending[0].arrival_time)
-            admit_arrivals()
-            if (not waiting and not pending and
-                    not any(r.active for r in self.runners.values())):
-                # only queued requests remain and the pools are at rest:
-                # nothing in flight can free pages/slabs, so drain() can
-                # never make progress — exit instead of spinning to
-                # max_steps (the queued requests stay unserved)
-                break
-
-            # --- prefill admitted requests into free slots ----------------
-            still, ready = [], []
-            for req in waiting:
-                runner = self.runners[req.model]
-                if runner.free_slot() is None or \
-                        sum(1 for r in ready if r.model == req.model) >= \
-                        sum(1 for s in runner.slots if s is None):
-                    still.append(req)
-                    continue
-                try:
-                    self._activate_model(req.model)
-                except OutOfSlabsError:
-                    # every resident model is pinned by in-flight
-                    # requests; those pins drop as they finish, so the
-                    # request stays waiting — UNLESS the model can
-                    # never fit even an empty arena (budget error)
-                    if self.arena.views[req.model].total_slabs \
-                            > self.arena.slot_budget:
-                        raise
-                    still.append(req)
-                    continue
-                ready.append(req)
-            waiting = still
-            if ready:
-                now = self._prefill_ready(ready, now)
-
-            # --- decode: one step per active model ------------------------
-            active = [n for n, r in self.runners.items() if r.active]
-            if self.mode.pipeline and len(active) >= 2:
-                now = self._decode_pipelined(active, now)
-            else:
-                for n in active:
-                    now = self._decode_model(n, now)
-
-            # --- completions ---------------------------------------------
-            for n, runner in self.runners.items():
-                for slot, req in enumerate(runner.slots):
-                    if req is not None and req.done:
-                        runner.release(slot)
-                        self._finish(req, now)
-        self.stats.wall_s = now
-        for r in requests:
-            self.stats.tbt.extend(r.tbt_samples())
-        if self.arena is not None:
-            self.stats.weights_pool = self.arena.utilization()
-        return self.stats
+        handle = self.handles.get(req.request_id)
+        if handle is not None:
+            handle.state = HandleState.FINISHED
 
     # ------------------------------------------------------------------
     def report(self) -> str:
@@ -559,6 +732,10 @@ class CrossPoolEngine:
             if m is not None:
                 lines.append(f"  {name}: admitted={m.admitted} "
                              f"queued={m.queued} rejected={m.rejected}")
+        coalesced = [b for b in s.prefill_batch_sizes if b > 1]
+        lines.append(f"prefill: {len(s.prefill_batch_sizes)} passes, "
+                     f"{len(coalesced)} coalesced "
+                     f"(max B = {max(s.prefill_batch_sizes, default=0)})")
         u = self.virt.utilization()
         lines.append(f"kv pool: peak {u['peak_mapped']}/"
                      f"{self.virt.page_budget} pages, "
@@ -588,6 +765,12 @@ class CrossPoolEngine:
             return None
         return self.host_steps.get(name)
 
+    def _emit(self, event: TokenEvent) -> None:
+        self._events.append(event)
+        handle = self.handles.get(event.request_id)
+        if handle is not None and handle.on_token is not None:
+            handle.on_token(event)
+
     def _book_tokens(self, runner: ModelRunner, toks: np.ndarray,
                      act: List[int], now: float) -> None:
         for i in act:
@@ -596,6 +779,10 @@ class CrossPoolEngine:
             req.output_ids.append(int(toks[i]))
             req.token_times.append(now)
             self.stats.tokens_out += 1
+            self._emit(TokenEvent(
+                request_id=req.request_id, model=req.model,
+                token=int(toks[i]), index=req.generated - 1, time=now,
+                done=req.done))
 
     def _book_first_token(self, req: Request, now: float) -> None:
         req.first_token_time = now
@@ -603,48 +790,66 @@ class CrossPoolEngine:
         req.generated += 1
         self.stats.tokens_out += 1
         self.stats.ttft.append(now - req.arrival_time)
+        handle = self.handles.get(req.request_id)
+        if handle is not None:
+            handle.state = HandleState.DECODING
+        self._emit(TokenEvent(
+            request_id=req.request_id, model=req.model,
+            token=req.output_ids[-1], index=0, time=now, first=True,
+            done=req.done))
 
-    def _prefill_ready(self, ready: List[Request], now: float) -> float:
-        """Prefill activated requests.  In host-driven pipeline mode,
+    # ------------------------------------------------------------------
+    # prefill phase
+    # ------------------------------------------------------------------
+    def _prefill_groups(self, groups: List[PrefillGroup],
+                        now: float) -> float:
+        """Execute the coalesced groups.  In host-driven pipeline mode,
         distinct models' prompt phases interleave through the layer-wise
         scheduler (model A's layer-L attention overlaps model B's FFN and
         each model's own layer-L+1 slab upload); everything else runs the
-        sequential streaming path."""
+        sequential streaming path — one [B, S] pass per group."""
+        self.stats.prefill_batch_sizes.extend(g.batch_size for g in groups)
         if self.scheduler is not None and self.mode.pipeline:
-            group: Dict[str, Request] = {}
-            rest: List[Request] = []
-            for req in ready:
-                if self.runners[req.model].paged and req.model not in group:
-                    group[req.model] = req
+            first: Dict[str, PrefillGroup] = {}
+            rest: List[PrefillGroup] = []
+            for g in groups:
+                if self.runners[g.model].paged and g.model not in first:
+                    first[g.model] = g
                 else:
-                    rest.append(req)
-            if len(group) >= 2:
-                now = self._prefill_pipelined(list(group.values()), now)
-                ready = rest
-        for req in ready:
-            runner = self.runners[req.model]
+                    rest.append(g)
+            if len(first) >= 2:
+                now = self._prefill_pipelined(list(first.values()), now)
+                groups = rest
+        for g in groups:
+            runner = self.runners[g.model]
             t0 = time.perf_counter()
-            runner.prefill_request(req, self.rng)
+            runner.prefill_group(g)
             now += time.perf_counter() - t0
-            self._book_first_token(req, now)
+            for req in g.requests:
+                self._book_first_token(req, now)
         return now
 
-    def _prefill_pipelined(self, reqs: List[Request], now: float) -> float:
+    def _prefill_pipelined(self, groups: List[PrefillGroup],
+                           now: float) -> float:
         """Concurrent cold-model prompt phases through the scheduler."""
         t0 = time.perf_counter()
-        batches = [self.runners[r.model].make_prefill_batch(r, self.rng, i)
-                   for i, r in enumerate(reqs)]
+        batches = [self.runners[g.model].make_prefill_batch(g, i)
+                   for i, g in enumerate(groups)]
         done, pool = self.scheduler.run(batches, self.virt.pool,
                                         max_inflight=2)
         self.virt.pool = pool
         now += time.perf_counter() - t0
-        by_model = {r.model: r for r in reqs}
+        by_model = {g.model: g for g in groups}
         for b in done:
-            req = by_model[b.model]
-            self.runners[b.model].apply_prefill_result(b, req)
-            self._book_first_token(req, now)
+            g = by_model[b.model]
+            self.runners[b.model].apply_prefill_result(b, g)
+            for req in g.requests:
+                self._book_first_token(req, now)
         return now
 
+    # ------------------------------------------------------------------
+    # decode phase
+    # ------------------------------------------------------------------
     def _decode_model(self, name: str, now: float) -> float:
         runner = self.runners[name]
         t0 = time.perf_counter()
@@ -700,3 +905,7 @@ class CrossPoolEngine:
         for n in fallback:          # families outside split execution
             now = self._decode_model(n, now)
         return now
+
+
+#: Back-compat alias: the ISSUE's name for the session-capable engine.
+ServingSession = CrossPoolEngine

@@ -12,6 +12,7 @@ class Phase(enum.Enum):
     DECODE = "decode"
     FINISHED = "finished"
     REJECTED = "rejected"
+    CANCELLED = "cancelled"
 
 
 @dataclass

@@ -1,0 +1,214 @@
+"""Online serving session primitives: handles, token events, prefill batching.
+
+The engine's front-end is event-driven (DESIGN.md §7): callers ``submit``
+requests one at a time and drive ``step`` — there is no offline trace.
+This module holds the request-level objects that API hands out:
+
+* :class:`RequestHandle` — the caller's view of one submitted request.
+  The admission controller's verdict (admit / queue / reject — the
+  front door's backpressure) is visible on the handle immediately after
+  ``submit`` instead of being buried in engine internals, and per-token
+  streaming arrives through the handle's ``on_token`` callback.
+* :class:`TokenEvent` — one generated token: which request, which
+  position in its stream, at what engine time, and whether it is the
+  first (TTFT) or last (stream-done) token.
+* :class:`PrefillBatcher` — the arrival-coalescing phase of the step
+  loop.  Admitted same-model requests whose prompts quantize to the SAME
+  bucket are packed into one ``[B, S]`` :class:`PrefillGroup` and execute
+  as a single streaming-prefill pass; per-request expert routing keeps a
+  coalesced pass bit-exact with B separate ``[1, S]`` passes (see
+  ``split_exec.make_stage_fns``).
+"""
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.runtime.request import Request
+
+
+class HandleState(enum.Enum):
+    """Lifecycle of a submitted request, as seen through its handle.
+
+    ``QUEUED`` and ``REJECTED`` surface the admission controller's
+    backpressure; ``ADMITTED`` means pages are mapped and the weight pin
+    is held but the request has not reached a batch slot yet;
+    ``DECODING`` covers prefill-committed through last token.
+    """
+
+    QUEUED = "queued"
+    ADMITTED = "admitted"
+    DECODING = "decoding"
+    FINISHED = "finished"
+    REJECTED = "rejected"
+    CANCELLED = "cancelled"
+
+    @property
+    def terminal(self) -> bool:
+        return self in (HandleState.FINISHED, HandleState.REJECTED,
+                        HandleState.CANCELLED)
+
+
+@dataclass
+class TokenEvent:
+    """One generated token, as surfaced by ``step``/``on_token``."""
+
+    request_id: int
+    model: str
+    token: int
+    index: int                  # 0-based position in the output stream
+    time: float                 # engine virtual time of emission
+    first: bool = False         # the TTFT token (sampled by prefill)
+    done: bool = False          # stream complete with this token
+
+
+@dataclass
+class RequestHandle:
+    """Caller-side view of one submitted request.
+
+    ``admission`` is the front door's verdict at submit time ("admitted"
+    / "queued" / "rejected") and never changes; ``state`` tracks the live
+    lifecycle (a queued request that later drains moves to ``ADMITTED``).
+    """
+
+    request: Request
+    admission: str
+    state: HandleState
+    on_token: Optional[Callable[[TokenEvent], None]] = None
+    _engine: object = field(default=None, repr=False)
+
+    @property
+    def request_id(self) -> int:
+        return self.request.request_id
+
+    @property
+    def model(self) -> str:
+        return self.request.model
+
+    @property
+    def tokens(self) -> List[int]:
+        """Tokens streamed so far (grows between ``step`` calls)."""
+        return list(self.request.output_ids)
+
+    @property
+    def done(self) -> bool:
+        return self.state.terminal
+
+    def cancel(self) -> bool:
+        """Cancel through the owning engine (see ``CrossPoolEngine.cancel``)."""
+        return self._engine.cancel(self)
+
+
+# ---------------------------------------------------------------------------
+# prefill coalescing
+# ---------------------------------------------------------------------------
+
+#: Prompt-length quantization ladder shared with the seed engine: a prompt
+#: occupies the smallest bucket >= its length (capped at max_ctx), so the
+#: compiled prefill programs see a handful of static shapes.
+PREFILL_BUCKETS = (16, 32, 64, 128, 256, 512)
+
+
+def prompt_bucket(n: int, max_ctx: int) -> int:
+    for b in PREFILL_BUCKETS:
+        if n <= b and b <= max_ctx:
+            return b
+    return max_ctx
+
+
+@dataclass
+class PrefillGroup:
+    """Same-model, same-bucket requests coalesced into one [B, S] pass.
+
+    ``ids[i]`` is row i's prompt (synthetic or real, already truncated to
+    the bucket); ``n_writes[i]`` is how many of those tokens are real —
+    the row's prompt-KV write length and logit position.
+    """
+
+    model: str
+    bucket: int
+    requests: List[Request] = field(default_factory=list)
+    ids: List[np.ndarray] = field(default_factory=list)
+    n_writes: List[int] = field(default_factory=list)
+
+    @property
+    def batch_size(self) -> int:
+        return len(self.requests)
+
+    def tokens(self) -> np.ndarray:
+        """[B, bucket] int32 prompt ids."""
+        return np.stack(self.ids).astype(np.int32)
+
+    def true_lens(self):
+        """Per-row unpadded lengths: host int for B=1 (the seed trace
+        shape), a list for a genuinely coalesced batch."""
+        if len(self.n_writes) == 1:
+            return self.n_writes[0]
+        return list(self.n_writes)
+
+
+class PrefillBatcher:
+    """Select admitted requests for this step and coalesce their prompts.
+
+    Selection mirrors the seed driver exactly — requests are considered
+    in waiting order, capped per model by the runner's free batch slots,
+    and a cold model that cannot activate under arena pressure stays
+    waiting — then selected requests are grouped by (model, bucket) in
+    first-seen order.  Prompt ids are drawn (or taken from
+    ``request.prompt_ids``) at SELECTION time in waiting order, so the
+    id stream is independent of how groups later execute (sequentially,
+    batched, or interleaved through the pipeline scheduler).
+    """
+
+    def plan(self, waiting: List[Request], runners: Dict[str, object],
+             rng: np.random.Generator,
+             try_activate: Callable[[str], bool]
+             ) -> Tuple[List[PrefillGroup], List[Request]]:
+        """Returns (groups in first-seen order, still-waiting requests)."""
+        groups: Dict[Tuple[str, int], PrefillGroup] = {}
+        still: List[Request] = []
+        taken: Dict[str, int] = {}
+        for req in waiting:
+            runner = runners[req.model]
+            free = sum(1 for s in runner.slots if s is None)
+            if free == 0 or taken.get(req.model, 0) >= free:
+                still.append(req)
+                continue
+            if not try_activate(req.model):
+                still.append(req)
+                continue
+            taken[req.model] = taken.get(req.model, 0) + 1
+            bucket = prompt_bucket(req.prompt_tokens, runner.max_ctx)
+            ids, n_write = self._prompt_ids(req, runner.cfg, bucket, rng)
+            key = (req.model, bucket)
+            g = groups.get(key)
+            if g is None:
+                g = groups[key] = PrefillGroup(req.model, bucket)
+            g.requests.append(req)
+            g.ids.append(ids)
+            g.n_writes.append(n_write)
+        return list(groups.values()), still
+
+    @staticmethod
+    def _prompt_ids(req: Request, cfg, bucket: int,
+                    rng: np.random.Generator) -> Tuple[np.ndarray, int]:
+        """(row ids [bucket], real-token count).  Prompts longer than the
+        bucket are truncated to it, exactly as the seed dense prefill's
+        fixed-width cache slice did."""
+        if req.prompt_ids is not None:
+            real = np.asarray(req.prompt_ids, np.int32).reshape(-1)
+            # pages were mapped and the batch-slot length will be set from
+            # ``prompt_tokens`` — a mismatched id array would scatter KV
+            # past the mapped pages (or attend over never-written ones)
+            assert len(real) == req.prompt_tokens, (
+                f"request {req.request_id}: prompt_ids length {len(real)} "
+                f"!= prompt_tokens {req.prompt_tokens}")
+            n = min(req.prompt_tokens, bucket)
+            ids = np.zeros(bucket, np.int32)
+            ids[:n] = real[:n]
+            return ids, n
+        ids = rng.integers(0, cfg.vocab_size, bucket).astype(np.int32)
+        return ids, min(req.prompt_tokens, bucket)
