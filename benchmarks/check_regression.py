@@ -18,7 +18,10 @@ Guarded metrics (lower is better for all of them):
     with host load, so this entry carries a wide per-metric tolerance:
     only a multiple-x online-path slowdown (lost prefill coalescing,
     per-token host work creeping in) trips it, not scheduler noise.
-    The recorded P99s ride along in BENCH_summary.json unguarded.
+    The recorded P99s ride along in BENCH_summary.json unguarded;
+  * elastic: the static/elastic peak-admitted-concurrency ratio on the
+    scripted long-context burst — deterministic integers (machine speed
+    cancels), so any growth is the rebalancer losing its win.
 
 Metrics present in the baseline but missing from the new summary (or
 produced by a failed benchmark) are hard failures: a silently skipped
@@ -52,6 +55,13 @@ GUARDED = [
     # multiple-x online-path regression
     ("online session online/batch P50 TBT ratio",
      ("online", "metrics", "online_over_batch_p50"), None, 3.0),
+    # deterministic integer ratio (peak admitted concurrency, static over
+    # elastic, on the scripted burst): machine speed cancels entirely, so
+    # the tolerance is ZERO — any growth means the rebalancer stopped
+    # converting arena slack into admitted requests
+    ("elastic burst static/elastic peak-admitted ratio",
+     ("elastic", "metrics", "static_over_elastic_peak_admitted"),
+     None, 0.0),
 ]
 
 

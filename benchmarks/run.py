@@ -17,9 +17,10 @@ import traceback
 
 import numpy as np
 
-from benchmarks import (fig1b_kv_accumulation, fig2_kv_availability,
-                        fig6_context_scalability, fig7_tbt, kernels_bench,
-                        online_tbt, table1_weight_breakdown, table3_ablation)
+from benchmarks import (elastic_burst, fig1b_kv_accumulation,
+                        fig2_kv_availability, fig6_context_scalability,
+                        fig7_tbt, kernels_bench, online_tbt,
+                        table1_weight_breakdown, table3_ablation)
 
 BENCHES = {
     "fig1b": fig1b_kv_accumulation.run,
@@ -30,6 +31,7 @@ BENCHES = {
     "table3": table3_ablation.run,
     "kernels": kernels_bench.run,
     "online": online_tbt.run,
+    "elastic": elastic_burst.run,
 }
 
 

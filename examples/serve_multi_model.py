@@ -16,7 +16,7 @@ import argparse
 
 import numpy as np
 
-from repro.configs import PAPER_COLOC_SET, get_smoke_config
+from repro.configs import ElasticConfig, PAPER_COLOC_SET, get_smoke_config
 from repro.core.planner import (WorkloadSpec, plan_pool, split_device_budget,
                                 worst_case_pages, worst_case_weight_bytes)
 from repro.core.weight_pool import slabs_for_config
@@ -66,6 +66,10 @@ def main():
     ap.add_argument("--online", action="store_true",
                     help="drive the submit/step session API from the "
                          "arrival trace instead of the offline run() wrapper")
+    ap.add_argument("--elastic", action="store_true",
+                    help="enable the online KV<->weights boundary "
+                         "rebalancer (windowed re-plan + host KV swap "
+                         "tier; DESIGN.md §8)")
     args = ap.parse_args()
 
     models = {n: get_smoke_config(n) for n in PAPER_COLOC_SET}
@@ -113,7 +117,9 @@ def main():
         models, page_budget=page_budget,
         page_bytes=4096, slot_budget=dev_plan.slot_budget,
         slab_bytes=slab_bytes, max_batch=4, max_ctx=64,
-        mode=EngineMode(pipeline=True, lowering=True))
+        mode=EngineMode(pipeline=True, lowering=True),
+        elastic=ElasticConfig(window_s=max(args.horizon, 4.0))
+        if args.elastic else None)
     reqs = trace_mod.make_requests(
         list(models), rps_per_model=args.rps, horizon_s=args.horizon,
         kind="sharegpt", scale_tokens=0.05, max_new_cap=args.max_new)
@@ -132,6 +138,13 @@ def main():
               f"{len(stats.prefill_batch_sizes)} "
               f"({len(coalesced)} coalesced, max B = "
               f"{max(stats.prefill_batch_sizes, default=0)})")
+        if stats.elastic:
+            print(f"elastic: kv occupancy EWMA "
+                  f"{stats.elastic['kv_occupancy_ewma']:.3f}, slab "
+                  f"{stats.elastic['slab_occupancy_ewma']:.3f}, "
+                  f"{int(stats.elastic.get('rebalances', 0))} rebalances, "
+                  f"swap {engine.virt.swap_out_pages} out / "
+                  f"{engine.virt.swap_in_pages} in")
     else:
         stats = engine.run(reqs)
 

@@ -9,6 +9,7 @@ import importlib
 from typing import Dict, Tuple
 
 from repro.configs.base import (  # noqa: F401  (re-export)
+    ElasticConfig,
     MLAConfig,
     ModelConfig,
     SHAPES,

@@ -303,6 +303,37 @@ class ModelConfig:
 
 
 # ---------------------------------------------------------------------------
+# Elastic pool rebalancing (DESIGN.md §8)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ElasticConfig:
+    """Knobs for the online KV<->weights boundary rebalancer.
+
+    Like :class:`ModelConfig`, this is pure data: ``repro.core.elastic``
+    interprets it.  The split between the KV page pool and the weight
+    slab arena is re-estimated from a sliding telemetry window (windowed
+    Eq. 1-2) every ``interval_steps`` session steps; a move is applied
+    only when it clears ``hysteresis`` AND ``cooldown_steps`` have passed
+    since the last one, and never moves more than ``max_step_fraction``
+    of either pool at once — three dampers that keep a bursty signal from
+    thrashing the boundary.
+    """
+
+    enabled: bool = True
+    interval_steps: int = 4          # re-plan cadence (session steps)
+    window_s: float = 30.0           # telemetry window feeding the re-plan
+    hysteresis: float = 0.15         # min fractional budget change to act
+    cooldown_steps: int = 8          # min steps between APPLIED moves
+    ewma_alpha: float = 0.25         # occupancy-EWMA smoothing factor
+    quantile: float = 0.95           # windowed Eq. (2) sizing quantile
+    max_step_fraction: float = 0.5   # max fraction of a pool moved at once
+    min_page_budget: int = 16        # absolute KV-pool floor (pages)
+    headroom_pages: int = 0          # admission reserve while shrinking
+
+
+# ---------------------------------------------------------------------------
 # Input shapes (assigned shape set)
 # ---------------------------------------------------------------------------
 

@@ -5,6 +5,7 @@
 * virtualizer  — paged KV virtualization of one shared physical pool
 * weight_pool  — expert-slab weights arena: cold-model activation/eviction
 * admission    — queue-or-reject enforcement of the planned budget
+* elastic      — online KV<->weights boundary rebalancer (host KV swap tier)
 * pools        — KVCachePool / WeightsPool engine-level disaggregation
 * split_exec   — proxy-layer split of attention vs FFN execution
 * pipeline     — layer-wise two-batch pipeline scheduler (+ slab prefetch)
@@ -12,8 +13,9 @@
 * placement    — StaticPartition / kvcached / CrossPool capacity models
 """
 from repro.core.admission import AdmissionController, PendingRequest  # noqa: F401
+from repro.core.elastic import ElasticRebalancer, RebalanceDecision  # noqa: F401
 from repro.core.planner import (DeviceBytesPlan, PoolPlan,  # noqa: F401
-                                WorkloadSpec, plan_pool,
+                                WorkloadSpec, plan_pool, replan_split,
                                 split_device_budget, worst_case_pages)
 from repro.core.virtualizer import KVVirtualizer, OutOfPagesError  # noqa: F401
 from repro.core.weight_pool import (OutOfSlabsError, WeightArena,  # noqa: F401

@@ -50,6 +50,8 @@ class AdmissionStats:
     queue_wait_total: float = 0.0
     # admissions deferred purely by weights-arena pressure (cold-model burst)
     weight_pressure_queued: int = 0
+    # admissions deferred by KV-page pressure (the rebalancer's grow signal)
+    page_pressure_queued: int = 0
     per_model: Dict[str, ModelAdmissionStats] = field(default_factory=dict)
 
     def bump(self, model: str, outcome: str) -> None:
@@ -81,6 +83,11 @@ class AdmissionController:
         # same protected set.
         self.inflight: Dict[str, int] = collections.defaultdict(int)
         self._last_block: str = ""      # "pages" | "weights" | "" (admitted)
+        # the elastic rebalancer's pressure signal: free pages held back
+        # from admission (swap-tier fault-in headroom / pending-shrink
+        # reservation).  Verdicts always read the LIVE budgets — the pool
+        # objects are resized in place — and this reserve on top of them.
+        self.reserve_pages: int = 0
         self.stats = AdmissionStats()
 
     def offer(self, req: PendingRequest, now: float) -> str:
@@ -96,6 +103,8 @@ class AdmissionController:
                 # counted ONCE per deferred request, here — not on drain
                 # retries and not for rejections
                 self.stats.weight_pressure_queued += 1
+            elif self._last_block == "pages":
+                self.stats.page_pressure_queued += 1
             return "queued"
         self.stats.bump(req.model, "rejected")
         return "rejected"
@@ -144,7 +153,8 @@ class AdmissionController:
         LRU eviction victim — including the window between admission and
         the prefill that makes the model resident."""
         expect = req.expected_output if self.reserve_output else 0
-        if not self.virt.can_admit(req.model, req.prompt_tokens, expect):
+        if not self.virt.can_admit(req.model, req.prompt_tokens, expect,
+                                   reserve=self.reserve_pages):
             self._last_block = "pages"
             return False
         if not self._weights_pressure_ok(req.model):

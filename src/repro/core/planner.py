@@ -267,6 +267,33 @@ def split_device_budget(specs: Sequence[WorkloadSpec], total_bytes: int, *,
     )
 
 
+def replan_split(specs: Sequence[WorkloadSpec], total_bytes: int, *,
+                 page_bytes: int = DEFAULT_PAGE_BYTES,
+                 slab_bytes: int = DEFAULT_SLAB_BYTES,
+                 quantile: float = 0.95, window_s: float = 30.0,
+                 residency_s: Optional[float] = None,
+                 coresident: int = 1, seed: int = 0) -> DeviceBytesPlan:
+    """Windowed ONLINE re-run of the Eq. (1)-(2) split (DESIGN.md §8).
+
+    Same machinery as :func:`split_device_budget`, parameterized for the
+    elastic rebalancer's step-boundary cadence instead of offline
+    provisioning: the ``specs`` come from the telemetry window (observed
+    arrival rates + joint rows of recently completed requests), the
+    Monte Carlo horizon is a few windows rather than an hour, and the
+    trial count is small — the hysteresis/cooldown dampers absorb the
+    extra estimator variance.  Deterministic for a fixed ``seed`` and
+    fixed specs, which is what makes rebalance decisions replayable on a
+    recorded trace.
+    """
+    horizon = max(4.0 * window_s, 20.0)
+    return split_device_budget(
+        specs, total_bytes, page_bytes=page_bytes, slab_bytes=slab_bytes,
+        quantile=quantile, horizon_s=horizon,
+        residency_s=residency_s if residency_s is not None
+        else max(window_s, 1.0),
+        n_trials=2, coresident=coresident, seed=seed)
+
+
 def worst_case_weight_bytes(specs: Sequence[WorkloadSpec]) -> int:
     """Static baseline: every colocated model's FFN device-resident."""
     return sum(static_ffn_bytes(s.model) for s in specs)

@@ -82,6 +82,10 @@ class WeightsPool:
         """DEVICE weights-pool bytes: the arena, fixed by slot_budget."""
         return self.arena.device_bytes()
 
+    def resize(self, slot_budget: int):
+        """Elastic entry: live-resize the arena (DESIGN.md §8)."""
+        return self.arena.resize(slot_budget)
+
     def host_master_bytes(self) -> int:
         return sum(
             leaf.size * leaf.dtype.itemsize
@@ -105,6 +109,10 @@ class KVCachePool:
 
     def add_model(self, name: str, kv_params: Dict) -> None:
         self.attn_params[name] = jax.device_put(kv_params, self.device)
+
+    def resize(self, page_budget: int, protected=()):
+        """Elastic entry: live-resize the shared page pool (DESIGN.md §8)."""
+        return self.virtualizer.resize(page_budget, protected=protected)
 
     def total_param_bytes(self) -> int:
         return sum(

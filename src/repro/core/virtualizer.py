@@ -27,6 +27,18 @@ Device-side state is maintained incrementally:
   * ``batch_tables`` returns a cached ``[n_layers, B, max_pages]`` device
     array and re-uploads only the rows whose page mapping actually changed
     (a request that decodes within its last page does not dirty its row).
+
+Elasticity (DESIGN.md §8): the pool is no longer frozen at session start.
+``resize`` grows or shrinks ``page_budget`` at step boundaries, and a
+**host swap tier** makes shrinking safe for in-flight requests: instead of
+killing a request whose pages no longer fit, its coldest pages move to a
+host-resident buffer (``swap_out``), survivors are compacted into the
+retained prefix of the pool with ONE jitted gather, page tables are
+remapped atomically under the existing revision counter, and swapped
+pages fault back in on next touch (``ensure_resident``).  Swapped table
+entries are encoded in-place as ``-2 - host_slot`` so the page tables
+stay the single source of mapping truth; ``-1`` remains the batch-table
+padding sentinel and never appears in a request's own tables.
 """
 from __future__ import annotations
 
@@ -88,9 +100,28 @@ def make_view(cfg: ModelConfig, page_elems: int) -> ModelView:
     return ModelView(cfg.name, per_tok, tpp, cfg.n_decoder_attn_layers, shape)
 
 
+#: Swapped page-table encoding: entry ``-2 - host_slot``.  ``-1`` stays
+#: the batch-table padding sentinel, so any entry <= _SWAP_BASE is a
+#: swapped page and ``_SWAP_BASE - entry`` recovers the host slot.
+_SWAP_BASE = -2
+
+
+def _swap_encode(host_slot: int) -> int:
+    return _SWAP_BASE - host_slot
+
+
+def _swap_decode(entry: int) -> int:
+    return _SWAP_BASE - entry
+
+
 @dataclass
 class RequestPages:
-    """Per-request mapping: page_table[layer][chunk] -> physical page id."""
+    """Per-request mapping: page_table[layer][chunk] -> physical page id.
+
+    Entries >= 0 are device pages; entries <= -2 encode pages swapped to
+    the host tier (see ``_swap_encode``) — ``n_swapped`` counts them so
+    residency checks stay O(1).
+    """
 
     request_id: int
     model: str
@@ -101,9 +132,34 @@ class RequestPages:
     # unique per registration AND per page-mapping change, so a reused
     # request id can never alias a stale cached batch table
     rev: int = -1
+    last_touch: int = 0            # virtualizer idle clock (swap victim order)
+    n_swapped: int = 0             # table entries currently in the host tier
+
+    def device_entries(self):
+        """Yield (table, index, page) for every device-resident entry."""
+        for tab in self.tables:
+            for i, p in enumerate(tab):
+                if p >= 0:
+                    yield tab, i, p
+        for i, p in enumerate(self.state_pages):
+            if p >= 0:
+                yield self.state_pages, i, p
+
+    def swapped_entries(self):
+        """Yield (table, index, host_slot) for every swapped entry."""
+        for tab in self.tables:
+            for i, p in enumerate(tab):
+                if p <= _SWAP_BASE:
+                    yield tab, i, _swap_decode(p)
+        for i, p in enumerate(self.state_pages):
+            if p <= _SWAP_BASE:
+                yield self.state_pages, i, _swap_decode(p)
+
 
 
 _POOL_SCATTER = None
+_ROW_SCATTER = None
+_ROW_GATHER = None
 
 
 def _pool_scatter(pool, kv_flat, pages, slots):
@@ -116,6 +172,24 @@ def _pool_scatter(pool, kv_flat, pages, slots):
         _POOL_SCATTER = jax.jit(paged_kv_write,
                                 donate_argnums=donate_argnums(0))
     return _POOL_SCATTER(pool, kv_flat, pages, slots)
+
+
+def _pool_row_scatter(pool, ids, rows):
+    """Scatter whole page rows (fault-in from the host swap tier)."""
+    global _ROW_SCATTER
+    if _ROW_SCATTER is None:
+        _ROW_SCATTER = jax.jit(lambda p, i, r: p.at[i].set(r),
+                               donate_argnums=donate_argnums(0))
+    return _ROW_SCATTER(pool, ids, rows)
+
+
+def _pool_row_gather(pool, ids):
+    """Gather whole page rows: ONE compiled gather builds the compacted /
+    resized pool buffer (also used to read rows out for swap-out)."""
+    global _ROW_GATHER
+    if _ROW_GATHER is None:
+        _ROW_GATHER = jax.jit(lambda p, i: p[i])
+    return _ROW_GATHER(pool, ids)
 
 
 class KVVirtualizer:
@@ -144,10 +218,19 @@ class KVVirtualizer:
         # incremental device page-table cache: key -> {buf, revs, dev}
         self._batch_cache: Dict[tuple, dict] = {}
         self._rev_counter = 0
+        # host swap tier: page rows evicted by a shrink live here until the
+        # next touch faults them back in (lazily allocated, grows 2x)
+        self.swap_buffer: Optional[np.ndarray] = None
+        self.swap_free: List[int] = []
+        self._touch_clock = 0
         # stats
         self.peak_mapped = 0
         self.map_events = 0
         self.unmap_events = 0
+        self.swap_out_pages = 0
+        self.swap_in_pages = 0
+        self.resizes = 0
+        self.swapped_now = 0           # entries currently in the host tier
 
     # ------------------------------------------------------------------
     # accounting
@@ -161,13 +244,16 @@ class KVVirtualizer:
         return len(self.free_list)
 
     def can_admit(self, model: str, prompt_tokens: int,
-                  expected_output: int = 0) -> bool:
+                  expected_output: int = 0, reserve: int = 0) -> bool:
+        """``reserve`` pages are held back from admission — the elastic
+        rebalancer's pressure signal (pages promised to a pending shrink
+        or kept as fault-in headroom for the swap tier)."""
         view = self.views[model]
         cfg = self.configs[model]
         need = view.pages_for(prompt_tokens + expected_output) if view.n_kv_layers \
             else 0
         need += math.ceil(cfg.state_bytes_per_request() / self.page_bytes)
-        return need <= self.free_pages
+        return need <= self.free_pages - max(reserve, 0)
 
     # ------------------------------------------------------------------
     # slow path: map / unmap
@@ -209,6 +295,7 @@ class KVVirtualizer:
         req.tokens = prompt_tokens
         req.rev = self._next_rev()
         self.requests[request_id] = req
+        self.touch(request_id)
         return req
 
     def pages_needed_for_extend(self, request_id: int,
@@ -245,16 +332,194 @@ class KVVirtualizer:
                     tab.extend(pages[layer * delta:(layer + 1) * delta])
                 req.rev = self._next_rev()
         req.tokens += new_tokens
+        self.touch(request_id)
 
     def release_request(self, request_id: int) -> None:
         req = self.requests.pop(request_id)
         n = 0
-        for t in req.tables:
-            self.free_list.extend(t)
-            n += len(t)
-        self.free_list.extend(req.state_pages)
-        n += len(req.state_pages)
+        for _, _, page in req.device_entries():
+            self.free_list.append(page)
+            n += 1
+        for _, _, slot in req.swapped_entries():
+            self.swap_free.append(slot)
+            self.swapped_now -= 1
+            n += 1
         self.unmap_events += n
+
+    # ------------------------------------------------------------------
+    # elastic boundary: host swap tier + live resize (DESIGN.md §8)
+    # ------------------------------------------------------------------
+    def touch(self, request_id: int) -> None:
+        """Mark a request recently used (swap victims are least-recent)."""
+        self._touch_clock += 1
+        self.requests[request_id].last_touch = self._touch_clock
+
+    def _swap_slots(self, n: int) -> List[int]:
+        """Take ``n`` host-tier slots, growing the swap buffer on demand."""
+        while len(self.swap_free) < n:
+            old = 0 if self.swap_buffer is None else len(self.swap_buffer)
+            cap = max(old * 2, n, 16)
+            buf = np.zeros((cap, self.page_elems), self.dtype)
+            if self.swap_buffer is not None:
+                buf[:old] = self.swap_buffer
+            self.swap_buffer = buf
+            self.swap_free.extend(range(cap - 1, old - 1, -1))
+        return [self.swap_free.pop() for _ in range(n)]
+
+    def swap_out(self, request_id: int, max_pages: Optional[int] = None
+                 ) -> int:
+        """Move up to ``max_pages`` of a request's device pages to the host
+        tier (coldest — lowest token chunks — first); returns the count.
+
+        The freed device ids go straight back to the free list; table
+        entries are rewritten to the swapped encoding and the request's
+        revision bumps, so any cached batch table is invalidated.  Page
+        CONTENTS move with the page (one device gather + one host copy),
+        so a later fault-in is bit-for-bit invisible to attention.
+        """
+        req = self.requests[request_id]
+        victims: List[Tuple[List[int], int, int]] = []
+        view = self.views[req.model]
+        chunks = len(req.tables[0]) if req.tables else 0
+        # chunk-major: the lowest (oldest-token) chunk of every layer goes
+        # first, so partial swaps shed the coldest KV across layers evenly
+        for c in range(chunks):
+            for layer in range(view.n_kv_layers):
+                if req.tables[layer][c] >= 0:
+                    victims.append((req.tables[layer], c,
+                                    req.tables[layer][c]))
+        for i, p in enumerate(req.state_pages):
+            if p >= 0:
+                victims.append((req.state_pages, i, p))
+        if max_pages is not None:
+            victims = victims[:max_pages]
+        if not victims:
+            return 0
+        ids = np.asarray([p for _, _, p in victims], np.int32)
+        slots = self._swap_slots(len(victims))
+        if self.pool is not None:
+            rows = np.asarray(_pool_row_gather(self.pool, jnp.asarray(ids)))
+            self.swap_buffer[np.asarray(slots)] = rows
+        for (tab, i, page), slot in zip(victims, slots):
+            tab[i] = _swap_encode(slot)
+            self.free_list.append(page)
+        req.rev = self._next_rev()
+        req.n_swapped += len(victims)
+        self.swapped_now += len(victims)
+        self.swap_out_pages += len(victims)
+        return len(victims)
+
+    def ensure_resident(self, request_id: int) -> int:
+        """Fault a request's swapped pages back onto the device (the
+        "next touch" of the swap tier); returns how many were faulted.
+
+        Atomic like every other mapping change: the device pages are taken
+        in ONE ``_take``, so ``OutOfPagesError`` leaves the tables, the
+        swap tier and the free list untouched.
+        """
+        req = self.requests[request_id]
+        if req.n_swapped == 0:
+            return 0
+        entries = list(req.swapped_entries())
+        pages = self._take(len(entries))
+        if self.pool is not None:
+            rows = self.swap_buffer[
+                np.asarray([s for _, _, s in entries])].copy()
+            self.pool = _pool_row_scatter(
+                self.pool, jnp.asarray(np.asarray(pages, np.int32)),
+                jnp.asarray(rows))
+        for (tab, i, slot), page in zip(entries, pages):
+            tab[i] = page
+            self.swap_free.append(slot)
+        req.rev = self._next_rev()
+        req.n_swapped = 0
+        self.swapped_now -= len(entries)
+        self.swap_in_pages += len(entries)
+        self.touch(request_id)
+        return len(entries)
+
+    def swap_out_idle(self, need: int, protected=()) -> int:
+        """Free ``need`` device pages by swapping the coldest pages of the
+        longest-idle requests (skipping ``protected`` ids); returns how
+        many were actually freed."""
+        protected = set(protected)
+        freed = 0
+        order = sorted(self.requests.values(), key=lambda r: r.last_touch)
+        for req in order:
+            if freed >= need:
+                break
+            if req.request_id in protected:
+                continue
+            freed += self.swap_out(req.request_id, need - freed)
+        return freed
+
+    def resize(self, new_budget: int, protected=()) -> Dict[str, int]:
+        """Live-repartition entry point: grow or shrink the pool to
+        ``new_budget`` pages at a step boundary.
+
+        Growing copies the old buffer into the prefix of a larger one and
+        appends fresh ids to the free list.  Shrinking swaps out the
+        coldest pages of the longest-idle (non-``protected``) requests
+        until the survivors fit, then compacts survivors into the retained
+        prefix with ONE jitted gather and remaps every table atomically
+        (all revisions bump; the batch-table cache drops).  Raises
+        ``OutOfPagesError`` — with NO state change beyond completed swaps —
+        when protected requests alone exceed the new budget.
+        """
+        new_budget = int(new_budget)
+        assert new_budget >= 1, new_budget
+        old_budget = self.page_budget
+        if new_budget == old_budget:
+            return {"page_budget": old_budget, "swapped_out": 0, "moved": 0}
+        swapped = 0
+        if new_budget > old_budget:
+            if self.pool is not None:
+                pad = jnp.zeros((new_budget - old_budget, self.page_elems),
+                                self.pool.dtype)
+                self.pool = jnp.concatenate([self.pool, pad], axis=0)
+            # new ids go to the FRONT of the (pop-from-the-end) free list,
+            # so existing low ids keep being preferred — allocation order
+            # stays deterministic across grows
+            self.free_list = list(range(new_budget - 1, old_budget - 1, -1)) \
+                + self.free_list
+            self.page_budget = new_budget
+            self.resizes += 1
+            return {"page_budget": new_budget, "swapped_out": 0, "moved": 0}
+
+        # --- shrink ----------------------------------------------------
+        device_mapped = self.mapped_pages
+        if device_mapped > new_budget:
+            swapped = self.swap_out_idle(device_mapped - new_budget,
+                                         protected)
+        if self.mapped_pages > new_budget:
+            raise OutOfPagesError(
+                f"cannot shrink to {new_budget} pages: {self.mapped_pages} "
+                f"still mapped after swapping {swapped} (protected "
+                f"requests hold too many pages)")
+        # compact survivors into [0, new_budget): deterministic order —
+        # requests by id, then layer-major table order
+        old_ids: List[int] = []
+        entries: List[Tuple[List[int], int]] = []
+        for rid in sorted(self.requests):
+            req = self.requests[rid]
+            for tab, i, page in req.device_entries():
+                entries.append((tab, i))
+                old_ids.append(page)
+        k = len(old_ids)
+        perm = np.zeros(new_budget, np.int32)
+        perm[:k] = np.asarray(old_ids, np.int32) if k else []
+        if self.pool is not None:
+            self.pool = _pool_row_gather(self.pool, jnp.asarray(perm))
+        for new_id, (tab, i) in enumerate(entries):
+            tab[i] = new_id
+        for req in self.requests.values():
+            req.rev = self._next_rev()
+        self._batch_cache.clear()
+        self.free_list = list(range(new_budget - 1, k - 1, -1))
+        self.page_budget = new_budget
+        self.resizes += 1
+        return {"page_budget": new_budget, "swapped_out": swapped,
+                "moved": k}
 
     # ------------------------------------------------------------------
     # fast path: device views
@@ -283,6 +548,11 @@ class KVVirtualizer:
         key = (model,
                tuple(-1 if r is None else r for r in request_ids),
                max_pages)
+        for rid in request_ids:
+            if rid is not None and rid in self.requests:
+                assert self.requests[rid].n_swapped == 0, (
+                    f"request {rid} has swapped pages; call "
+                    f"ensure_resident before building batch tables")
         revs = tuple(
             -1 if rid is None or rid not in self.requests
             else self.requests[rid].rev
@@ -333,6 +603,9 @@ class KVVirtualizer:
         ``layer=None`` vectorizes over ALL layers: ``tokens`` is [n] and the
         result is [n_layers * n] in layer-major order.
         """
+        assert req.n_swapped == 0, (
+            f"request {req.request_id} has swapped pages; call "
+            f"ensure_resident before writing KV")
         chunk = tokens // view.tokens_per_page
         slots = (tokens % view.tokens_per_page).astype(np.int32)
         if layer is not None:
@@ -431,4 +704,13 @@ class KVVirtualizer:
             "free_pages": self.free_pages,
             "peak_mapped": self.peak_mapped,
             "internal_frag_bytes": frag * self.dtype.itemsize,
+            # elastic-boundary signals (DESIGN.md §8)
+            "page_budget": self.page_budget,
+            "occupancy": self.mapped_pages / max(self.page_budget, 1),
+            "swapped_pages": self.swapped_now,
+            "swap_out_pages": self.swap_out_pages,
+            "swap_in_pages": self.swap_in_pages,
+            "swap_tier_bytes": (0 if self.swap_buffer is None
+                                else self.swap_buffer.nbytes),
+            "resizes": self.resizes,
         }

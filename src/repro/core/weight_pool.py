@@ -277,6 +277,7 @@ class Residency:
 
 
 _ARENA_SCATTER = None
+_ARENA_GATHER = None
 
 
 def _arena_scatter(arena, ids, rows):
@@ -309,6 +310,7 @@ class WeightArena:
         self.activations = 0
         self.evictions = 0
         self.layer_uploads = 0
+        self.resizes = 0
 
     # ------------------------------------------------------------------
     # registration / allocation
@@ -359,6 +361,22 @@ class WeightArena:
     def is_resident(self, name: str) -> bool:
         return name in self.residency
 
+    def pinned_slabs(self) -> int:
+        """Slabs the elastic rebalancer can never reclaim: every pinned
+        model's full footprint, resident or promised (an admitted cold
+        model's pin is taken BEFORE its activation maps slots)."""
+        return sum(self.views[n].total_slabs
+                   for n in self.pins if n in self.views)
+
+    def min_slot_budget(self) -> int:
+        """Smallest budget a shrink may target: pinned footprints, and
+        never below the largest registered model (a smaller arena would
+        make that model permanently unserviceable — admission fails
+        loudly on it)."""
+        largest = max((v.total_slabs for v in self.views.values()),
+                      default=1)
+        return max(self.pinned_slabs(), largest, 1)
+
     def utilization(self) -> Dict[str, float]:
         return {
             "slot_budget": self.slot_budget,
@@ -369,6 +387,9 @@ class WeightArena:
             "evictions": self.evictions,
             "layer_uploads": self.layer_uploads,
             "device_bytes": self.device_bytes(),
+            "occupancy": self.resident_slabs / max(self.slot_budget, 1),
+            "pinned_slabs": self.pinned_slabs(),
+            "resizes": self.resizes,
         }
 
     # ------------------------------------------------------------------
@@ -465,6 +486,76 @@ class WeightArena:
         self.free_list.extend(int(s) for s in res.slots.ravel())
         self._table_cache.pop(name, None)
         self.evictions += 1
+
+    # ------------------------------------------------------------------
+    # elastic boundary: live resize (DESIGN.md §8)
+    # ------------------------------------------------------------------
+    def resize(self, new_budget: int) -> Dict[str, int]:
+        """Grow or shrink ``slot_budget`` at a step boundary.
+
+        Growing copies the arena into the prefix of a larger buffer and
+        prepends fresh ids to the (pop-from-the-end) free list, so low
+        slabs keep being preferred deterministically.  Shrinking evicts
+        idle unpinned models LRU until the survivors fit, then compacts
+        every surviving residency into the retained prefix with ONE
+        jitted gather and bumps each residency's rev (slot-table caches
+        refresh; host masters are untouched, so the moved bytes stay
+        bit-exact).  Raises ``OutOfSlabsError`` when pinned residents
+        alone exceed the new budget — no state changes beyond completed
+        evictions.
+        """
+        new_budget = int(new_budget)
+        assert new_budget >= 1, new_budget
+        old_budget = self.slot_budget
+        if new_budget == old_budget:
+            return {"slot_budget": old_budget, "evicted": 0, "moved": 0}
+        if new_budget > old_budget:
+            if self.arena is not None:
+                pad = jnp.zeros((new_budget - old_budget, self.slab_bytes),
+                                self.arena.dtype)
+                self.arena = jnp.concatenate([self.arena, pad], axis=0)
+            self.free_list = list(range(new_budget - 1, old_budget - 1, -1)) \
+                + self.free_list
+            self.slot_budget = new_budget
+            self.resizes += 1
+            return {"slot_budget": new_budget, "evicted": 0, "moved": 0}
+
+        # --- shrink: evict idle LRU until the survivors fit -------------
+        evicted = 0
+        while self.resident_slabs > new_budget:
+            idle = sorted((r.last_used, n) for n, r in self.residency.items()
+                          if n not in self.pins)
+            if not idle:
+                raise OutOfSlabsError(
+                    f"cannot shrink arena to {new_budget} slabs: "
+                    f"{self.resident_slabs} resident and every resident "
+                    f"model is pinned (pinned: {sorted(self.pins)})")
+            self.evict(idle[0][1])
+            evicted += 1
+        # compact survivors into [0, new_budget) in deterministic order
+        old_ids: List[int] = []
+        for name in sorted(self.residency):
+            old_ids.extend(int(s) for s in self.residency[name].slots.ravel())
+        k = len(old_ids)
+        perm = np.zeros(new_budget, np.int32)
+        perm[:k] = np.asarray(old_ids, np.int32) if k else []
+        if self.arena is not None:
+            global _ARENA_GATHER
+            if _ARENA_GATHER is None:
+                _ARENA_GATHER = jax.jit(lambda a, i: a[i])
+            self.arena = _ARENA_GATHER(self.arena, jnp.asarray(perm))
+        next_id = 0
+        for name in sorted(self.residency):
+            res = self.residency[name]
+            n = res.slots.size
+            res.slots = np.arange(next_id, next_id + n,
+                                  dtype=np.int32).reshape(res.slots.shape)
+            res.rev = self._next_rev()
+            next_id += n
+        self.free_list = list(range(new_budget - 1, k - 1, -1))
+        self.slot_budget = new_budget
+        self.resizes += 1
+        return {"slot_budget": new_budget, "evicted": evicted, "moved": k}
 
     # ------------------------------------------------------------------
     # uploads (slow path, but overlappable with compute)

@@ -229,7 +229,8 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
         t_compile = time.time() - t0
 
         mem = compiled.memory_analysis()
-        cost = compiled.cost_analysis()
+        from repro.launch.hlo_analysis import xla_cost_analysis
+        cost = xla_cost_analysis(compiled)
         hlo = compiled.as_text()
 
     chips = mesh_chip_count(mesh)

@@ -119,27 +119,34 @@ def parse_module(hlo: str) -> Dict[str, Computation]:
     return comps
 
 
+_OPERAND_NAME_RE = re.compile(r"%[\w.\-]+")
+
+
 def _dot_flops(rhs: str, shapes: Dict[str, Tuple[str, List[int]]]) -> float:
     """2 * |result| * K for one dot line."""
     shape_tok = _first_shape(rhs)
     if not shape_tok:
         return 0.0
     _, result_dims = _shape_dims(shape_tok)
-    # operands
+    # operands: HLO prints each as "<shape>{layout} %name" — the first
+    # %name in the argument list is the lhs (a lookup keyed on the whole
+    # token would miss the symbol table and silently drop K)
     args = re.findall(r"dot\(([^)]*)\)", rhs)
     if not args:
         return 0.0
-    operands = [a.strip() for a in args[0].split(",")]
-    lhs_name = operands[0] if operands else None
-    lhs = shapes.get(lhs_name)
+    m = _OPERAND_NAME_RE.search(args[0])
+    lhs = shapes.get(m.group(0)) if m else None
+    if lhs is None:
+        # contraction operand shape from the operand token itself
+        # (pre-layout HLO sometimes omits the symbol-table entry)
+        st = _SHAPE_RE.search(args[0])
+        lhs = _shape_dims(st.group(0)) if st else None
     mcon = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", rhs)
+    k = 1
     if lhs and mcon:
-        k = 1
         for d in mcon.group(1).split(","):
             if d and int(d) < len(lhs[1]):
                 k *= lhs[1][int(d)]
-    else:
-        k = 1
     return 2.0 * math.prod(result_dims or [1]) * k
 
 
@@ -149,6 +156,20 @@ class ModuleStats:
     collective_bytes: Dict[str, int]
     collective_total: int
     coll_count: int
+
+
+def xla_cost_analysis(compiled) -> dict:
+    """Normalize ``Compiled.cost_analysis()`` across jax versions.
+
+    Older jaxlibs return one properties dict; newer ones return a
+    per-module LIST of dicts.  Every caller of the backend numbers (the
+    EXPERIMENTS methodology scripts and the analyzer's own tests) wants
+    the entry module's dict, so resolve the difference here once.
+    """
+    c = compiled.cost_analysis()
+    if isinstance(c, (list, tuple)):
+        return c[0] if c else {}
+    return c
 
 
 def analyze(hlo: str, depth_trips: List[int]) -> ModuleStats:

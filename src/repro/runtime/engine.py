@@ -35,6 +35,13 @@ every dense/moe/vlm model: total device KV bytes are fixed by
 Families outside split execution (SSM/hybrid/enc-dec/SWA) fall back to a
 fused dense-cache path; their pool pages are accounting-only.
 
+With ``elastic=ElasticConfig(...)`` the KV/weights split is no longer
+frozen: per-step telemetry feeds a windowed Eq. (1)-(2) re-plan and the
+two pools are live-repartitioned at step boundaries — the KV pool
+shrinks through a host swap tier (in-flight requests' cold pages fault
+back on next touch), the arena shrinks by LRU-evicting idle models, and
+total device bytes are conserved (DESIGN.md §8).
+
 The weights side is symmetric (PR 2/3): FFN/MoE weights live in ONE
 shared slab arena whose device bytes are fixed by ``slot_budget`` alone;
 prefill streams each layer's slabs in behind the previous layer's
@@ -58,11 +65,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ModelConfig
+from repro.configs.base import ElasticConfig, ModelConfig
 from repro.core.admission import (AdmissionController, AdmissionStats,
                                   PendingRequest)
 from repro.core.control import (HostDrivenStep, PagedFusedStep,
                                 StreamingPrefill)
+from repro.core.elastic import ElasticRebalancer
 from repro.core.pipeline import InflightBatch, LayerPipelineScheduler
 from repro.core import split_exec
 from repro.core.pools import build_pools
@@ -73,7 +81,8 @@ from repro.models import build_model
 from repro.runtime.request import Phase, Request
 from repro.runtime.sampler import sample
 from repro.runtime.session import (HandleState, PrefillBatcher, PrefillGroup,
-                                   RequestHandle, TokenEvent)
+                                   RebalanceEvent, RequestHandle, TokenEvent)
+from repro.runtime.telemetry import DemandTelemetry
 
 
 @dataclass
@@ -97,6 +106,10 @@ class EngineStats:
     admission: Optional[AdmissionStats] = None
     # weights-arena counters (activations/evictions/uploads)
     weights_pool: Dict[str, float] = field(default_factory=dict)
+    # applied elastic boundary moves (empty when elastic is off)
+    rebalance_events: List[RebalanceEvent] = field(default_factory=list)
+    # telemetry + rebalancer snapshot folded in by finalize()
+    elastic: Dict[str, float] = field(default_factory=dict)
 
     @property
     def throughput(self) -> float:
@@ -229,6 +242,11 @@ class ModelRunner:
         free = sum(1 for s in self.slots if s is None)
         assert group.batch_size <= free, (group.batch_size, free)
         if self.paged:
+            for req in group.requests:
+                # admission-mapped pages may have been swapped while the
+                # request waited for a slot; prompt-KV scatters need them
+                # device-resident (their contents are still unwritten)
+                self.virt.ensure_resident(req.request_id)
             # streaming prompt phase: per-layer attention with the next
             # layer's arena slabs uploading behind it; every row's prompt
             # KV is scattered into pool pages as each layer completes
@@ -252,6 +270,9 @@ class ModelRunner:
                            batch_id: int) -> InflightBatch:
         """Package one group's prompt phase for the layer-wise scheduler
         (interleaves with other models' prefill/decode stages)."""
+        if self.paged:
+            for req in group.requests:
+                self.virt.ensure_resident(req.request_id)
         return InflightBatch(
             batch_id=batch_id, model=self.name,
             tokens=jnp.asarray(group.tokens()), prefill=True,
@@ -275,6 +296,10 @@ class ModelRunner:
         unless the budget is under-planned).
         """
         act = self._active_slots()
+        for i in act:
+            # the swap tier's "next touch": pages a shrink pushed to the
+            # host fault back in before this step's tables are built
+            self.virt.ensure_resident(self.slots[i].request_id)
         need = sum(self.virt.pages_needed_for_extend(
             self.slots[i].request_id, 1) for i in act)
         if need > self.virt.free_pages:
@@ -371,7 +396,8 @@ class CrossPoolEngine:
                  slab_bytes: int = DEFAULT_SLAB_BYTES,
                  max_batch: int = 4, max_ctx: int = 256,
                  mode: Optional[EngineMode] = None, seed: int = 0,
-                 slow_step_factor: float = 4.0):
+                 slow_step_factor: float = 4.0,
+                 elastic: Optional[ElasticConfig] = None):
         self.models = models
         self.mode = mode or EngineMode()
         self.rng = np.random.default_rng(seed)
@@ -406,6 +432,17 @@ class CrossPoolEngine:
         # arena-aware admission: cold-model bursts queue at the front door
         # instead of thrashing the arena LRU between admitted models
         self.admission = AdmissionController(self.virt, arena=self.arena)
+        # elastic boundary (DESIGN.md §8): windowed demand telemetry +
+        # step-boundary KV<->weights repartitioning.  Telemetry observes
+        # even with rebalancing disabled IF a config is passed; both stay
+        # None on the default (frozen-split) path.
+        self.telemetry: Optional[DemandTelemetry] = None
+        self.rebalancer: Optional[ElasticRebalancer] = None
+        if elastic is not None and self.arena is not None:
+            self.telemetry = DemandTelemetry(models, elastic)
+            self.rebalancer = ElasticRebalancer(
+                self.virt, self.arena, admission=self.admission,
+                telemetry=self.telemetry, cfg=elastic, seed=seed)
 
         self.host_steps = None
         self.scheduler = None
@@ -474,6 +511,8 @@ class CrossPoolEngine:
             f"request id {req.request_id} already submitted"
         self._submitted[req.request_id] = req
         self._window.add(req.request_id)
+        if self.telemetry is not None:
+            self.telemetry.note_arrival(req.model, self.now)
         outcome = self._admit(req, self.now)
         if outcome == "admitted":
             req.admit_time = self.now
@@ -505,13 +544,16 @@ class CrossPoolEngine:
                 self.cancel(handle)
         return self._events
 
-    def _step_phases(self) -> None:
-        # --- drain the front-door queue (resources freed last step) ------
+    def _drain_front_door(self) -> None:
         for p in self.admission.drain(self.now):
             req = self._submitted[p.request_id]
             req.admit_time = self.now
             self.handles[req.request_id].state = HandleState.ADMITTED
             self.waiting.append(req)
+
+    def _step_phases(self) -> None:
+        # --- drain the front-door queue (resources freed last step) ------
+        self._drain_front_door()
 
         # --- prefill: coalesce admitted arrivals into [B, S] groups ------
         groups, self.waiting = self.batcher.plan(
@@ -533,6 +575,69 @@ class CrossPoolEngine:
                 if req is not None and req.done:
                     runner.release(slot)
                     self._finish(req, self.now)
+
+        # --- elastic boundary (step-boundary ONLY: no batch is in flight,
+        #     so page tables and slot tables can remap atomically) --------
+        self._observe_and_rebalance()
+
+    def _observe_and_rebalance(self) -> None:
+        """Fold this step into the telemetry window and let the
+        rebalancer repartition the device-byte boundary if the windowed
+        Eq. (1)-(2) estimate says so (DESIGN.md §8)."""
+        if self.telemetry is None:
+            return
+        self.telemetry.observe(self.now, self.virt, self.arena,
+                               self.admission)
+        if self.rebalancer is None:
+            return
+        protected: Dict[int, int] = {}
+        live: Optional[Dict[str, list]] = None
+        if self.rebalancer.would_evaluate():
+            # slotted requests with their REMAINING declared output: the
+            # KV shrink floor reserves their whole lifetime, same as
+            # admission did.  Assembled only on re-plan steps — the common
+            # step pays one counter check, not an O(slots+queued) walk.
+            protected = {
+                req.request_id: max(req.max_new_tokens - req.generated, 1)
+                for runner in self.runners.values()
+                for req in runner.slots if req is not None}
+            live = {}
+            for req in self.waiting:
+                live.setdefault(req.model, []).append(
+                    (req.prompt_tokens, req.max_new_tokens))
+            for runner in self.runners.values():
+                for req in runner.slots:
+                    if req is not None:
+                        live.setdefault(req.model, []).append(
+                            (req.prompt_tokens, req.max_new_tokens))
+            # queued requests are the clearest demand signal of all —
+            # they are EXACTLY what the old split could not admit
+            for q in self.admission.queues.values():
+                for p in q:
+                    live.setdefault(p.model, []).append(
+                        (p.prompt_tokens, p.expected_output))
+        decision = self.rebalancer.step(self.now, protected=protected,
+                                        live_requests=live)
+        if decision is not None:
+            # the budgets just changed: re-drain the front door NOW, so a
+            # session where everything was queued behind the old split
+            # makes progress this step (run()/drain() exit when a step
+            # produces no events and nothing is admitted — without this,
+            # a grow that frees room for queued-only load would be
+            # followed by the loop breaking before its next drain)
+            self._drain_front_door()
+            self.stats.rebalance_events.append(RebalanceEvent(
+                step=decision.step, time=decision.now,
+                page_budget=(decision.old_page_budget,
+                             decision.new_page_budget),
+                slot_budget=(decision.old_slot_budget,
+                             decision.new_slot_budget),
+                kv_delta_bytes=(decision.new_page_budget
+                                - decision.old_page_budget)
+                * self.virt.page_bytes,
+                swapped_out=decision.swapped_out,
+                evicted_models=decision.evicted_models,
+                reason=decision.reason))
 
     def cancel(self, handle: Union[RequestHandle, int]) -> bool:
         """Abort a submitted request, atomically returning its resources.
@@ -607,6 +712,10 @@ class CrossPoolEngine:
                           for t in self._submitted[rid].tbt_samples()]
         if self.arena is not None:
             self.stats.weights_pool = self.arena.utilization()
+        if self.telemetry is not None:
+            self.stats.elastic = self.telemetry.snapshot()
+            if self.rebalancer is not None:
+                self.stats.elastic.update(self.rebalancer.snapshot())
         return self.stats
 
     def reset_stats(self) -> EngineStats:
@@ -683,9 +792,10 @@ class CrossPoolEngine:
             return
         self.arena.activate(name, upload=False)
 
-    def _try_activate(self, name: str) -> bool:
-        """Activation gate for the prefill batcher: False keeps the
+    def _try_activate(self, req: Request) -> bool:
+        """Residency gate for the prefill batcher: False keeps the
         request waiting (resident models' pins drop as they finish)."""
+        name = req.model
         try:
             self._activate_model(name)
         except OutOfSlabsError:
@@ -695,6 +805,14 @@ class CrossPoolEngine:
             if self.arena.views[name].total_slabs > self.arena.slot_budget:
                 raise
             return False
+        if self.runners[name].paged:
+            try:
+                # pages swapped to the host tier while the request waited
+                # fault back in HERE, where deferral is graceful — inside
+                # prefill_group a failed fault would abort the whole step
+                self.virt.ensure_resident(req.request_id)
+            except OutOfPagesError:
+                return False
         return True
 
     # ------------------------------------------------------------------
@@ -709,6 +827,10 @@ class CrossPoolEngine:
     def _finish(self, req: Request, now: float) -> None:
         req.phase = Phase.FINISHED
         req.finish_time = now
+        if self.telemetry is not None:
+            self.telemetry.note_finish(
+                req.model, req.prompt_tokens, req.generated,
+                req.admit_time, now)
         self.virt.release_request(req.request_id)
         # drops the admission-time pin too: idle models become evictable
         self.admission.finish(req.model)
@@ -726,7 +848,10 @@ class CrossPoolEngine:
                  f"slow_steps={s.slow_steps}"]
         adm = self.admission.stats
         lines.append(f"admission: admitted={adm.admitted} "
-                     f"queued={adm.queued} rejected={adm.rejected}")
+                     f"queued={adm.queued} rejected={adm.rejected} "
+                     f"(pressure: pages={adm.page_pressure_queued} "
+                     f"weights={adm.weight_pressure_queued}, "
+                     f"reserve={self.admission.reserve_pages} pages)")
         for name in self.models:
             m = adm.per_model.get(name)
             if m is not None:
@@ -739,7 +864,34 @@ class CrossPoolEngine:
         u = self.virt.utilization()
         lines.append(f"kv pool: peak {u['peak_mapped']}/"
                      f"{self.virt.page_budget} pages, "
-                     f"frag {u['internal_frag_bytes'] / 1024:.1f} KiB")
+                     f"frag {u['internal_frag_bytes'] / 1024:.1f} KiB, "
+                     f"swap {u['swap_out_pages']} out / "
+                     f"{u['swap_in_pages']} in "
+                     f"({u['swapped_pages']} held), "
+                     f"{u['resizes']} resizes")
+        if self.telemetry is not None:
+            t = self.telemetry.snapshot()
+            lines.append(
+                f"elastic: occupancy EWMA kv={t['kv_occupancy_ewma']:.3f} "
+                f"slabs={t['slab_occupancy_ewma']:.3f} "
+                f"queue={t['queue_depth_ewma']:.2f}")
+            if self.rebalancer is not None:
+                r = self.rebalancer.snapshot()
+                lines.append(
+                    f"  rebalancer: {int(r['rebalances'])} applied / "
+                    f"{int(r['evaluations'])} evaluated "
+                    f"(hysteresis skips {int(r['skipped_hysteresis'])}, "
+                    f"cooldown {int(r['skipped_cooldown'])}, "
+                    f"aborted {int(r['aborted'])}); live split "
+                    f"{int(r['page_budget'])} pages / "
+                    f"{int(r['slot_budget'])} slabs")
+                for e in self.stats.rebalance_events[-3:]:
+                    lines.append(
+                        f"  move @step {e.step}: pages "
+                        f"{e.page_budget[0]}->{e.page_budget[1]}, slabs "
+                        f"{e.slot_budget[0]}->{e.slot_budget[1]} "
+                        f"({e.reason}, swapped {e.swapped_out}, "
+                        f"evicted {e.evicted_models})")
         if self.arena is not None:
             w = self.arena.utilization()
             lines.append(

@@ -12,6 +12,10 @@ This module holds the request-level objects that API hands out:
 * :class:`TokenEvent` — one generated token: which request, which
   position in its stream, at what engine time, and whether it is the
   first (TTFT) or last (stream-done) token.
+* :class:`RebalanceEvent` — one applied elastic boundary move (the
+  session-facing view of ``core.elastic.RebalanceDecision``): how many
+  device bytes moved between the KV page pool and the weight arena, and
+  what it cost (pages swapped to the host tier, models evicted).
 * :class:`PrefillBatcher` — the arrival-coalescing phase of the step
   loop.  Admitted same-model requests whose prompts quantize to the SAME
   bucket are packed into one ``[B, S]`` :class:`PrefillGroup` and execute
@@ -63,6 +67,26 @@ class TokenEvent:
     time: float                 # engine virtual time of emission
     first: bool = False         # the TTFT token (sampled by prefill)
     done: bool = False          # stream complete with this token
+
+
+@dataclass(frozen=True)
+class RebalanceEvent:
+    """One applied elastic KV<->weights boundary move (DESIGN.md §8).
+
+    Emitted at the step boundary that applied it; ``kv_delta_bytes`` is
+    positive when the KV pool grew at the arena's expense.  The sum of
+    the two pools' device bytes is invariant across events (byte
+    conservation is the rebalancer's contract).
+    """
+
+    step: int
+    time: float                  # engine virtual time of application
+    page_budget: Tuple[int, int]     # (old, new) KV pool pages
+    slot_budget: Tuple[int, int]     # (old, new) arena slabs
+    kv_delta_bytes: int
+    swapped_out: int             # pages pushed to the host swap tier
+    evicted_models: int          # idle models LRU-evicted from the arena
+    reason: str                  # "kv_demand" | "weight_demand"
 
 
 @dataclass
@@ -165,9 +189,14 @@ class PrefillBatcher:
 
     def plan(self, waiting: List[Request], runners: Dict[str, object],
              rng: np.random.Generator,
-             try_activate: Callable[[str], bool]
+             try_activate: Callable[[Request], bool]
              ) -> Tuple[List[PrefillGroup], List[Request]]:
-        """Returns (groups in first-seen order, still-waiting requests)."""
+        """Returns (groups in first-seen order, still-waiting requests).
+
+        ``try_activate(request)`` is the engine's residency gate: weight
+        slabs mapped for the model AND any host-swapped KV pages faulted
+        back in for the request — False keeps the request waiting (pins
+        drop and pages free as other requests finish)."""
         groups: Dict[Tuple[str, int], PrefillGroup] = {}
         still: List[Request] = []
         taken: Dict[str, int] = {}
@@ -177,7 +206,7 @@ class PrefillBatcher:
             if free == 0 or taken.get(req.model, 0) >= free:
                 still.append(req)
                 continue
-            if not try_activate(req.model):
+            if not try_activate(req):
                 still.append(req)
                 continue
             taken[req.model] = taken.get(req.model, 0) + 1

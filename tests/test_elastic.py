@@ -1,0 +1,410 @@
+"""Elastic rebalancer invariants (DESIGN.md §8).
+
+* property test: arbitrary grow/shrink/swap/fault sequences on the
+  virtualizer never lose or alias a mapped page — device ids stay unique
+  and account exactly against the budget, host swap slots stay unique,
+  and ``utilization()`` stays consistent, including across mid-sequence
+  ``OutOfPagesError``;
+* token-level bit-exactness: a decode stream crossing a forced
+  shrink -> swap-out -> fault-in -> grow cycle reproduces the
+  unperturbed paged stream EXACTLY (and the dense reference numerically)
+  in BOTH lowering modes;
+* arena: shrink evicts idle LRU models, compacts survivors bit-exactly,
+  and respects the pinned floor;
+* hysteresis determinism: two rebalancers fed the same recorded
+  observation stream make identical decisions;
+* engine acceptance: under a page-pressure burst the rebalancer converts
+  idle arena slack into KV pages, and every request's token stream is
+  bit-exact with the frozen-split engine's.
+"""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import ElasticConfig, PAPER_COLOC_SET, get_smoke_config
+from repro.core.control import HostDrivenStep, PagedFusedStep
+from repro.core.elastic import ElasticRebalancer
+from repro.core.pools import build_pools
+from repro.core.virtualizer import KVVirtualizer, OutOfPagesError
+from repro.core.weight_pool import OutOfSlabsError
+from repro.models import build_model
+from repro.runtime.telemetry import DemandTelemetry
+
+
+# ---------------------------------------------------------------------------
+# property: no page is ever lost or aliased
+# ---------------------------------------------------------------------------
+
+def _check_invariants(virt: KVVirtualizer) -> None:
+    device = []
+    swapped = []
+    for req in virt.requests.values():
+        dev = [(id(tab), i, p) for tab, i, p in req.device_entries()]
+        sw = [(id(tab), i, s) for tab, i, s in req.swapped_entries()]
+        assert req.n_swapped == len(sw), "n_swapped drifted"
+        device.extend(p for _, _, p in dev)
+        swapped.extend(s for _, _, s in sw)
+    assert len(device) == len(set(device)), "aliased device page"
+    assert len(swapped) == len(set(swapped)), "aliased swap slot"
+    assert not set(device) & set(virt.free_list), "mapped page in free list"
+    assert all(0 <= p < virt.page_budget for p in device), \
+        "device page out of budget"
+    assert len(device) + virt.free_pages == virt.page_budget, "page leak"
+    if virt.swap_buffer is not None:
+        assert not set(swapped) & set(virt.swap_free), \
+            "held swap slot in swap free list"
+        assert len(swapped) + len(virt.swap_free) == len(virt.swap_buffer)
+    assert virt.swapped_now == len(swapped)
+    u = virt.utilization()
+    assert u["mapped_pages"] == len(device)
+    assert u["swapped_pages"] == len(swapped)
+
+
+@settings(max_examples=15, deadline=None)
+@given(ops=st.lists(
+    st.tuples(st.sampled_from(["register", "extend", "release", "swap",
+                               "fault", "grow", "shrink"]),
+              st.sampled_from(list(PAPER_COLOC_SET)),
+              st.integers(1, 600)),
+    min_size=1, max_size=40))
+def test_property_elastic_never_loses_or_aliases_pages(ops):
+    """Random map/extend/release/swap/fault/resize interleavings keep the
+    page accounting exact — including sequences where a resize or fault
+    raises OutOfPagesError mid-run."""
+    budget = 64
+    virt = KVVirtualizer({n: get_smoke_config(n) for n in PAPER_COLOC_SET},
+                         page_budget=budget, page_bytes=4096,
+                         allocate_device_pool=False)
+    live = {}
+    next_id = 0
+    for op, model, arg in ops:
+        try:
+            if op == "register" or not live:
+                virt.register_request(next_id, model, arg)
+                live[next_id] = model
+                next_id += 1
+            elif op == "extend":
+                virt.extend_request(next(iter(live)), arg)
+            elif op == "release":
+                rid = next(iter(live))
+                virt.release_request(rid)
+                del live[rid]
+            elif op == "swap":
+                virt.swap_out(next(iter(live)), max_pages=arg)
+            elif op == "fault":
+                virt.ensure_resident(next(iter(live)))
+            elif op == "grow":
+                virt.resize(virt.page_budget + (arg % 64) + 1)
+            else:                                     # shrink
+                target = max(virt.page_budget - (arg % 64) - 1, 1)
+                virt.resize(target)
+        except OutOfPagesError:
+            pass
+        _check_invariants(virt)
+    for rid in list(live):
+        virt.release_request(rid)
+    assert virt.free_pages == virt.page_budget
+    assert virt.swapped_now == 0
+
+
+# ---------------------------------------------------------------------------
+# token-level bit-exactness across a forced shrink -> swap -> grow cycle
+# ---------------------------------------------------------------------------
+
+def _paged_setup(name):
+    cfg = get_smoke_config(name).replace(dtype="float32")
+    models = {name: cfg}
+    model = build_model(cfg)
+    params = {name: model.init(jax.random.PRNGKey(0))}
+    kv_pool, w_pool, pooled = build_pools(
+        models, params, page_budget=256, page_bytes=4096,
+        pool_dtype=jnp.float32)
+    return cfg, model, params, kv_pool.virtualizer, pooled
+
+
+def _fresh_stream_virt(virt_proto, name, model, params, seq, B):
+    """A fresh virtualizer over the same geometry with both requests'
+    prompt KV written (the same bytes every stream starts from)."""
+    virt = KVVirtualizer({name: virt_proto.configs[name]},
+                         page_budget=virt_proto.page_budget,
+                         page_bytes=virt_proto.page_bytes,
+                         dtype=virt_proto.dtype)
+    rng = np.random.default_rng(0)
+    cfg = virt_proto.configs[name]
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, seq)), jnp.int32)
+    cache = model.init_cache(B, 16)
+    _, cache = model.prefill(params[name], tokens, cache)
+    for b in range(B):
+        virt.register_request(b, name, seq)
+        virt.write_prompt_from_cache(name, b, cache, seq, batch_index=b)
+    return virt, cache
+
+
+@pytest.mark.parametrize("name", ["qwen3-moe-235b-a22b", "minicpm3-4b"])
+@pytest.mark.parametrize("lowering", [True, False])
+def test_decode_bitexact_across_shrink_swap_fault_cycle(name, lowering):
+    """Greedy-decode two requests; mid-stream, force the full elastic
+    cycle on the live pool (swap the ACTIVE requests out, shrink+compact,
+    grow back, fault in).  Every post-cycle step's logits must equal the
+    unperturbed paged stream bit-for-bit, and the dense reference
+    numerically."""
+    cfg, model, params, virt_proto, pooled = _paged_setup(name)
+    B, seq, n_steps, cycle_at = 2, 8, 5, 2
+    view = virt_proto.views[name]
+    max_pages = max(1, math.ceil(16 / view.tokens_per_page))
+    devs = jax.devices()
+    step = (PagedFusedStep(pooled[name]) if lowering
+            else HostDrivenStep(pooled[name], devs[0], devs[-1]))
+
+    def run(perturb: bool):
+        virt, cache = _fresh_stream_virt(virt_proto, name, model, params,
+                                         seq, B)
+        dense_cache = jax.tree.map(lambda x: x, cache)
+        out = []
+        next_tok = jnp.zeros((B,), jnp.int32)
+        for t in range(n_steps):
+            if perturb and t == cycle_at:
+                # the full cycle, against ACTIVE requests: swap out both
+                # streams' pages, shrink (compacts survivors: none left
+                # mapped, so this exercises the degenerate gather too),
+                # grow back, fault in on "next touch"
+                assert virt.swap_out(0) > 0
+                virt.swap_out(1)
+                mapped = virt.mapped_pages
+                virt.resize(max(mapped + 2, 8))
+                assert virt.page_budget < 256
+                virt.resize(256)
+            length = seq + t
+            want, dense_cache = model.decode_step(
+                params[name], next_tok, dense_cache, jnp.int32(length))
+            for b in range(B):
+                virt.ensure_resident(b)        # the swap tier's next touch
+                virt.extend_request(b, 1)
+            tables = virt.batch_tables(name, [0, 1], max_pages)
+            got, virt.pool = step(next_tok, virt.pool, tables,
+                                  jnp.full((B,), length, jnp.int32))
+            np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                       rtol=1e-4, atol=1e-4)
+            out.append(np.asarray(got))
+            next_tok = jnp.argmax(want, axis=-1).astype(jnp.int32)
+        return out
+
+    reference = run(perturb=False)
+    perturbed = run(perturb=True)
+    assert len(reference) == len(perturbed) == n_steps
+    for t, (a, b) in enumerate(zip(reference, perturbed)):
+        np.testing.assert_array_equal(
+            a, b, err_msg=f"step {t} diverged across the elastic cycle")
+
+
+# ---------------------------------------------------------------------------
+# arena shrink/grow
+# ---------------------------------------------------------------------------
+
+def test_arena_resize_evicts_idle_compacts_pinned_bitexact():
+    names = list(PAPER_COLOC_SET)
+    models = {n: get_smoke_config(n).replace(dtype="float32") for n in names}
+    params = {n: build_model(c).init(jax.random.PRNGKey(i))
+              for i, (n, c) in enumerate(models.items())}
+    _, w_pool, pooled = build_pools(models, params, page_budget=32,
+                                    page_bytes=4096, slab_bytes=4096)
+    arena = w_pool.arena
+    keep = names[0]
+    arena.pin(keep)
+    ref = arena.views[keep].unpack_layer(arena.arena,
+                                         arena.slot_table(keep)[0])
+    ref_leaves = [np.asarray(x) for x in jax.tree.leaves(ref)]
+
+    floor = arena.min_slot_budget()
+    r = arena.resize(floor)
+    assert r["evicted"] >= 1, "idle models should be LRU-evicted"
+    assert set(arena.residency) == {keep}
+    assert arena.slot_budget == floor
+    # compaction moved the pinned model's slabs; the unpacked weights are
+    # bit-for-bit identical through the remapped slot table
+    got = arena.views[keep].unpack_layer(arena.arena,
+                                         arena.slot_table(keep)[0])
+    for a, b in zip(ref_leaves, jax.tree.leaves(got)):
+        np.testing.assert_array_equal(a, np.asarray(b))
+    # shrinking below the pinned resident set must refuse loudly
+    assert floor > 1
+    with pytest.raises(OutOfSlabsError):
+        arena.resize(floor - 1)
+    assert arena.slot_budget == floor
+    # grow back: an evicted model re-activates and reproduces its weights
+    grow_to = floor + arena.views[names[1]].total_slabs
+    arena.resize(grow_to)
+    arena.activate(names[1])
+    assert arena.is_resident(names[1])
+
+
+# ---------------------------------------------------------------------------
+# hysteresis determinism on a fixed observation stream
+# ---------------------------------------------------------------------------
+
+def _scripted_rebalancer(cfg):
+    models = {n: get_smoke_config(n) for n in PAPER_COLOC_SET[:2]}
+    virt = KVVirtualizer(models, page_budget=64, page_bytes=4096,
+                         allocate_device_pool=False)
+    params = {n: build_model(c.replace(dtype="float32")).init(
+        jax.random.PRNGKey(i)) for i, (n, c) in enumerate(models.items())}
+    _, w_pool, _ = build_pools(
+        {n: c.replace(dtype="float32") for n, c in models.items()}, params,
+        page_budget=64, page_bytes=4096, slab_bytes=4096,
+        allocate_device_pool=False, allocate_device_arena=False)
+    telemetry = DemandTelemetry(models, cfg)
+    reb = ElasticRebalancer(virt, w_pool.arena, telemetry=telemetry,
+                            cfg=cfg, seed=7)
+    return virt, w_pool.arena, telemetry, reb
+
+
+def test_hysteresis_decisions_deterministic_on_fixed_trace():
+    """The same recorded observation stream (arrivals, completions,
+    occupancy samples on a virtual clock) must produce the IDENTICAL
+    decision sequence — the re-plan Monte Carlo runs on a fixed seed."""
+    cfg = ElasticConfig(interval_steps=2, cooldown_steps=2, hysteresis=0.02,
+                        window_s=40.0, min_page_budget=4)
+    m0 = PAPER_COLOC_SET[0]
+
+    def drive(reb, virt, telemetry):
+        decisions = []
+        rng = np.random.default_rng(3)
+        now = 0.0
+        for step in range(30):
+            now += 0.25
+            if step % 2 == 0:
+                telemetry.note_arrival(m0, now)
+            if step % 5 == 4:
+                telemetry.note_finish(m0, int(rng.integers(8, 32)),
+                                      int(rng.integers(2, 8)),
+                                      now - 1.0, now)
+            telemetry.observe(now, virt, reb.arena, None)
+            d = reb.step(now)
+            decisions.append(None if d is None else
+                             (d.step, d.new_page_budget, d.new_slot_budget,
+                              d.reason))
+        return decisions
+
+    virt1, arena1, tel1, reb1 = _scripted_rebalancer(cfg)
+    virt2, arena2, tel2, reb2 = _scripted_rebalancer(cfg)
+    d1 = drive(reb1, virt1, tel1)
+    d2 = drive(reb2, virt2, tel2)
+    assert d1 == d2
+    assert any(d is not None for d in d1), \
+        "the scripted trace should trigger at least one rebalance"
+    # applied decisions conserve device bytes
+    for d in reb1.events:
+        assert (d.new_page_budget * virt1.page_bytes
+                + d.new_slot_budget * arena1.slab_bytes) <= reb1.total_bytes
+
+
+# ---------------------------------------------------------------------------
+# telemetry / admission pressure signals
+# ---------------------------------------------------------------------------
+
+def test_telemetry_window_and_admission_reserve():
+    models = {n: get_smoke_config(n) for n in PAPER_COLOC_SET[:1]}
+    name = next(iter(models))
+    cfg = ElasticConfig(window_s=10.0, ewma_alpha=0.5)
+    tel = DemandTelemetry(models, cfg)
+    virt = KVVirtualizer(models, page_budget=16, page_bytes=4096,
+                         allocate_device_pool=False)
+    tel.note_arrival(name, 0.0)
+    tel.note_arrival(name, 1.0)
+    tel.note_finish(name, 8, 4, 0.5, 2.0)
+    virt.register_request(0, name, 8)
+    tel.observe(2.0, virt, None, None)
+    assert tel.kv_occupancy_ewma > 0.0
+    assert tel.arrival_rate(name, 2.0) == pytest.approx(2 / 2.0)
+    specs = tel.window_specs(2.0)
+    assert len(specs) == 1 and specs[0].model.name == name
+    # events age out of the window
+    tel.observe(50.0, virt, None, None)
+    assert tel.window_specs(50.0) == []
+    # admission reserve: held-back pages make can_admit conservative
+    assert virt.can_admit(name, 1, 0, reserve=0)
+    assert not virt.can_admit(name, 1, 0, reserve=virt.free_pages)
+
+
+# ---------------------------------------------------------------------------
+# engine acceptance: burst converts arena slack into KV pages, bit-exact
+# ---------------------------------------------------------------------------
+
+class TestEngineElastic:
+    def _engine(self, elastic):
+        from repro.runtime.engine import CrossPoolEngine, EngineMode
+        # minicpm3 (MLA, dense FFN -> batch-independent logits) is the
+        # serving target; qwen3-moe is registered but never used, so its
+        # all-resident arena share is idle slack the rebalancer can
+        # convert into KV pages
+        models = {n: get_smoke_config(n).replace(dtype="float32")
+                  for n in ("minicpm3-4b", "qwen3-moe-235b-a22b")}
+        return CrossPoolEngine(
+            models, page_budget=24, page_bytes=4096, slab_bytes=4096,
+            max_batch=4, max_ctx=64,
+            mode=EngineMode(pipeline=True, lowering=True),
+            elastic=elastic)
+
+    def _burst(self, n=6):
+        from repro.runtime.request import Request
+        rng = np.random.default_rng(11)
+        cfg = get_smoke_config("minicpm3-4b")
+        return [Request(i, "minicpm3-4b", 16, 3, 0.0,
+                        prompt_ids=rng.integers(0, cfg.vocab_size, 16))
+                for i in range(n)]
+
+    def test_burst_rebalances_and_streams_bitexact(self):
+        elastic = ElasticConfig(interval_steps=1, cooldown_steps=1,
+                                hysteresis=0.05, window_s=60.0,
+                                min_page_budget=8, quantile=0.95)
+        eng_e = self._engine(elastic)
+        eng_f = self._engine(None)
+        stats_e = eng_e.run(self._burst())
+        reqs_f = self._burst()
+        stats_f = eng_f.run(reqs_f)
+        assert stats_e.tokens_out == stats_f.tokens_out > 0
+        # the page-pressure burst must trigger at least one KV grow
+        assert stats_e.rebalance_events, "burst never rebalanced"
+        assert any(e.kv_delta_bytes > 0 for e in stats_e.rebalance_events)
+        assert eng_e.virt.page_budget > 24
+        # byte conservation across every applied move
+        for e in stats_e.rebalance_events:
+            total = (e.page_budget[1] * eng_e.virt.page_bytes
+                     + e.slot_budget[1] * eng_e.arena.slab_bytes)
+            assert total <= eng_e.rebalancer.total_bytes
+        # token-level bit-exactness per request vs the frozen split
+        done_e = {h.request.request_id: h.request.output_ids
+                  for h in eng_e.handles.values()}
+        for req in reqs_f:
+            assert done_e[req.request_id] == req.output_ids, \
+                f"request {req.request_id} diverged under rebalancing"
+
+    def test_queued_only_load_unblocked_by_rebalance(self):
+        """A request too large for the frozen KV split queues forever on
+        the frozen engine; with elastic on, the queue itself is the
+        demand signal — the rebalancer grows the pool and the SAME step
+        re-drains the front door, so run() keeps making progress instead
+        of exiting on an event-less step."""
+        from repro.runtime.engine import CrossPoolEngine, EngineMode
+        from repro.runtime.request import Request
+        models = {n: get_smoke_config(n).replace(dtype="float32")
+                  for n in ("minicpm3-4b", "qwen3-moe-235b-a22b")}
+        elastic = ElasticConfig(interval_steps=1, cooldown_steps=1,
+                                hysteresis=0.05, min_page_budget=4,
+                                max_step_fraction=64.0, window_s=60.0)
+        engine = CrossPoolEngine(
+            models, page_budget=4, page_bytes=1024, slab_bytes=4096,
+            max_batch=2, max_ctx=64,
+            mode=EngineMode(pipeline=True, lowering=True), elastic=elastic)
+        # needs more pages than the whole initial budget -> queued
+        req = Request(0, "minicpm3-4b", 32, 2, 0.0)
+        assert not engine.virt.can_admit("minicpm3-4b", 32, 2)
+        stats = engine.run([req])
+        assert engine.rebalancer.events, "queue pressure never rebalanced"
+        assert engine.virt.page_budget > 4
+        assert req.finish_time > 0 and stats.tokens_out > 0, \
+            "queued-only load was never admitted after the grow"

@@ -6,22 +6,10 @@ totals using known_trip_count.
 """
 import jax
 import jax.numpy as jnp
-import pytest
 
 from repro.launch import hlo_analysis as ha
 
 L, N, D = 8, 64, 128
-
-# Pre-existing seed failures (ROADMAP.md): on this jax/jaxlib build the CPU
-# backend's cost_analysis reports scan-body flops differently from the
-# analyzer's trip-count model, so the absolute-flop assertions miss.  Marked
-# non-strict so the suite is a real gate for NEW regressions; remove the
-# marks when the analyzer is retuned for current XLA.
-_seed_xfail = pytest.mark.xfail(
-    strict=False,
-    reason="pre-existing seed failure: XLA CPU cost_analysis flop "
-           "accounting diverges from the analyzer's trip-count model "
-           "on this jax build")
 
 
 def _scanned(x, Ws):
@@ -29,16 +17,13 @@ def _scanned(x, Ws):
     return y
 
 
-@_seed_xfail
 def test_cost_analysis_counts_loop_bodies_once():
-    Ws = jnp.ones((L, D, D))
-    x = jnp.ones((N, D))
-    c = jax.jit(_scanned).lower(x, Ws).compile().cost_analysis()
+    c = ha.xla_cost_analysis(jax.jit(_scanned).lower(
+        jnp.ones((N, D)), jnp.ones((L, D, D))).compile())
     one_layer = 2 * N * D * D
     assert abs(c["flops"] - one_layer) < one_layer * 0.01
 
 
-@_seed_xfail
 def test_analyzer_recovers_full_flops():
     Ws = jnp.ones((L, D, D))
     x = jnp.ones((N, D))
@@ -48,7 +33,6 @@ def test_analyzer_recovers_full_flops():
     assert abs(stats.flops - want) < want * 0.01
 
 
-@_seed_xfail
 def test_analyzer_nested_scans():
     """Outer scan (3) x inner scan (L) multiply correctly."""
     Ws = jnp.ones((L, D, D))
@@ -66,7 +50,6 @@ def test_analyzer_nested_scans():
     assert abs(stats.flops - want) < want * 0.01
 
 
-@_seed_xfail
 def test_known_trip_count_overrides_depth_guess():
     """Even with WRONG depth hints, backend_config trips win."""
     Ws = jnp.ones((L, D, D))
