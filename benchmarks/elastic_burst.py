@@ -18,7 +18,10 @@ Recorded in BENCH_summary.json; the guarded metric is the
 static/elastic peak-admitted-concurrency ratio (a deterministic integer
 ratio — machine speed cancels entirely), expected well under 1.  P99
 queue time and P99 TBT ride along unguarded (wall-clock, reported for
-the trajectory).
+the trajectory).  A third engine re-serves the burst with
+``decode_steps_per_dispatch=4``: rebalancing happens only at dispatch
+boundaries, so the grow must still fire between K-token blocks with
+bit-exact streams (the multi-step composition check, DESIGN.md §9).
 """
 from __future__ import annotations
 
@@ -43,11 +46,12 @@ def _models():
             for n in PAPER_COLOC_SET}
 
 
-def _engine(elastic: bool) -> CrossPoolEngine:
+def _engine(elastic: bool, decode_steps: int = 1) -> CrossPoolEngine:
     return CrossPoolEngine(
         _models(), page_budget=PAGE_BUDGET, page_bytes=PAGE_BYTES,
         slab_bytes=SLAB_BYTES, max_batch=8, max_ctx=64,
-        mode=EngineMode(pipeline=True, lowering=True), seed=0,
+        mode=EngineMode(pipeline=True, lowering=True,
+                        decode_steps_per_dispatch=decode_steps), seed=0,
         # one-jump growth (max_step_fraction >> 1): every resize changes
         # the pool SHAPE and recompiles the fused step, so a burst response
         # wants one large aligned move, not eight geometric ones
@@ -147,6 +151,26 @@ def run(csv=print) -> dict:
     # THE paper claim: strictly higher admitted concurrency at equal bytes
     assert peak_e > peak_s, (peak_e, peak_s)
 
+    # --- multi-step composition: the same burst on an elastic K=4 engine.
+    # Rebalances stay at dispatch boundaries (DESIGN.md §9), so the grow
+    # must still fire between K-token blocks and the token streams must be
+    # bit-exact vs the K=1 elastic engine (greedy, dense target model).
+    # The K=1 pair above stays the guarded headline: K=4 finishes each
+    # request in fewer steps, so its peak concurrency is a different
+    # serving profile, not a stronger/weaker rebalancer.
+    eng_e4 = _engine(True, decode_steps=4)
+    _warmup(eng_e4)
+    reqs_e4, stats_e4, peak_e4, _ = _serve_burst(eng_e4)
+    assert stats_e4.tokens_out == stats_e.tokens_out
+    by_id_e = {r.request_id: r for r in reqs_e}
+    for r in reqs_e4:
+        assert r.output_ids == by_id_e[r.request_id].output_ids, \
+            f"request {r.request_id} diverged between K=1 and K=4 elastic"
+    assert eng_e4.rebalancer.events, \
+        "the K=4 elastic engine never rebalanced"
+    assert eng_e4.virt.page_budget > PAGE_BUDGET
+    assert peak_e4 > peak_s, (peak_e4, peak_s)
+
     q99_s, q99_e = percentile(qw_s, 99), percentile(qw_e, 99)
     tbt99_s = percentile(stats_s.tbt, 99)
     tbt99_e = percentile(stats_e.tbt, 99)
@@ -161,9 +185,13 @@ def run(csv=print) -> dict:
         f"final_pages={eng_e.virt.page_budget},"
         f"final_slabs={eng_e.arena.slot_budget},"
         f"swap_out={swap['swap_out_pages']},swap_in={swap['swap_in_pages']}")
+    csv(f"elastic_burst,k4_peak_admitted={peak_e4},"
+        f"k4_rebalances={len(eng_e4.rebalancer.events)},"
+        f"k4_final_pages={eng_e4.virt.page_budget}")
     return {
         "peak_admitted_static": int(peak_s),
         "peak_admitted_elastic": int(peak_e),
+        "peak_admitted_elastic_k4": int(peak_e4),
         # the guarded ratio: deterministic integers, lower is better
         "static_over_elastic_peak_admitted": peak_s / peak_e,
         "queue_p99_static_s": q99_s,

@@ -18,11 +18,11 @@ serve the same token VOLUME (asserted; per-token streams are compared
 bit-exactly in ``tests/test_session.py`` on an arrival-free trace —
 under live Poisson arrivals the step boundaries land wherever the host's
 measured compute times put them, so stream identity across two
-wall-clock runs is not a deterministic claim).  P99 TBT for both modes
-is recorded in BENCH_summary.json; the guarded metric is the
-online/batch MEDIAN-TBT ratio — machine speed cancels in the ratio and
-the median is robust to single-step OS jitter, so the regression gate is
-stable across CI hosts while a real online-path slowdown (extra
+wall-clock runs is not a deterministic claim).  The guarded metrics are
+the online/batch MEDIAN- and P99-TBT ratios — machine speed cancels in
+a ratio, and both carry wide per-metric tolerances (the median is robust
+to single-step OS jitter; the P99 is noisier still), so the regression
+gate is stable across CI hosts while a real online-path slowdown (extra
 dispatches, lost coalescing) still trips it.
 """
 from __future__ import annotations
@@ -144,8 +144,9 @@ def run(csv=print) -> dict:
     p99_b, p99_o = percentile(tbt_b, 99), percentile(tbt_o, 99)
     p50_b, p50_o = percentile(tbt_b, 50), percentile(tbt_o, 50)
     ratio_p50 = p50_o / p50_b if p50_b else float("nan")
+    ratio_p99 = p99_o / p99_b if p99_b else float("nan")
     csv(f"online,batch_p99_tbt_ms={p99_b * 1e3:.2f},"
-        f"online_p99_tbt_ms={p99_o * 1e3:.2f}")
+        f"online_p99_tbt_ms={p99_o * 1e3:.2f},p99_ratio={ratio_p99:.3f}")
     csv(f"online,batch_p50_tbt_ms={p50_b * 1e3:.2f},"
         f"online_p50_tbt_ms={p50_o * 1e3:.2f},p50_ratio={ratio_p50:.3f}")
     csv(f"online,requests={len(reqs_o)},tokens={stats_o.tokens_out},"
@@ -158,6 +159,7 @@ def run(csv=print) -> dict:
         "batch_p50_tbt_s": p50_b,
         "online_p50_tbt_s": p50_o,
         "online_over_batch_p50": ratio_p50,
+        "online_over_batch_p99": ratio_p99,
         "online_p95_ttft_s": percentile(ttft_o, 95),
         "tokens_out": stats_o.tokens_out,
         "prefill_passes": len(sizes),

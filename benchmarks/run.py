@@ -19,8 +19,8 @@ import numpy as np
 
 from benchmarks import (elastic_burst, fig1b_kv_accumulation,
                         fig2_kv_availability, fig6_context_scalability,
-                        fig7_tbt, kernels_bench, online_tbt,
-                        table1_weight_breakdown, table3_ablation)
+                        fig7_tbt, kernels_bench, multistep_decode,
+                        online_tbt, table1_weight_breakdown, table3_ablation)
 
 BENCHES = {
     "fig1b": fig1b_kv_accumulation.run,
@@ -32,6 +32,7 @@ BENCHES = {
     "kernels": kernels_bench.run,
     "online": online_tbt.run,
     "elastic": elastic_burst.run,
+    "multistep": multistep_decode.run,
 }
 
 

@@ -9,6 +9,7 @@ import importlib
 from typing import Dict, Tuple
 
 from repro.configs.base import (  # noqa: F401  (re-export)
+    DEFAULT_DECODE_STEPS_PER_DISPATCH,
     ElasticConfig,
     MLAConfig,
     ModelConfig,

@@ -14,6 +14,18 @@ from dataclasses import dataclass
 from typing import Optional, Tuple
 
 # ---------------------------------------------------------------------------
+# Runtime defaults
+# ---------------------------------------------------------------------------
+
+# Decode tokens committed per host dispatch when control lowering is ON
+# (``runtime.engine.EngineMode.decode_steps_per_dispatch``).  1 preserves
+# the seed single-step behaviour; >1 enables the persistent multi-step
+# decode path (``core.control.MultiStepFusedStep``) which amortises the
+# host dispatch + sampling round-trip across K tokens.  Host-driven
+# lowering (the ablation baseline) always runs K=1.
+DEFAULT_DECODE_STEPS_PER_DISPATCH = 1
+
+# ---------------------------------------------------------------------------
 # Model configuration
 # ---------------------------------------------------------------------------
 

@@ -252,9 +252,112 @@ class PagedFusedStep:
                           tokens, pool, page_tables, lengths)
 
 
-def dispatch_count(n_layers: int, fused: bool) -> int:
-    """Host dispatches per decode token (the ablation's control metric)."""
+class MultiStepFusedStep:
+    """Persistent multi-step decode: K tokens per host dispatch.
+
+    An outer ``lax.scan`` over :class:`PagedFusedStep`'s body carrying
+    ``(tokens, pool, lengths, done_mask)`` for K inner steps, with
+    sampling (``runtime.sampler.sample_on_device``) compiled into the
+    same program — logits NEVER leave the device; the host sees one
+    dispatch returning ``[K, B]`` sampled token ids.
+
+    Page tables are NOT in the carry: the virtualizer pre-reserves a
+    block of pages covering all K tokens (``reserve_decode_block``)
+    before dispatch, so the scan body indexes into the pre-extended
+    table and no host table mutation happens mid-dispatch.  Per-row
+    freezing (DESIGN.md §9):
+
+    * ``done0 = steps_left <= 0`` freezes inactive batch-padding rows
+      from step 0;
+    * a row that samples its ``eos_id`` (or exhausts its per-row step
+      budget) flips ``done`` — subsequent inner steps re-run its
+      forward with frozen ``(token, length)`` but every state write is
+      masked: emitted token is -1 (host trims by valid count), length
+      and next-token freeze, and the spurious KV write beyond the
+      frozen length lands either on a -1 table entry (dropped by the
+      paged writer) or in a reserved page that attention never reads
+      (reads stop at ``lengths``) and that ``commit_decode_block``
+      returns to the free list.
+
+    Valid tokens are therefore a strict prefix of each ``[K]`` row;
+    the host commits ``(row >= 0).sum()`` tokens per request.  Greedy
+    sampling never traces PRNG ops; with ``temperature > 0`` the inner
+    step index is folded into ``key`` so a dispatch is replayable.
+    """
+
+    def __init__(self, pooled: PooledModel, k: int,
+                 temperature: float = 0.0, top_k: int = 0, device=None):
+        from repro.runtime.sampler import sample_on_device
+        self.pooled = pooled
+        self.k = int(k)
+        assert self.k >= 1
+        fns = pooled.stage_fns
+        if device is None:
+            leaves = jax.tree.leaves(pooled.kv_params)
+            device = (next(iter(leaves[0].devices())) if leaves
+                      else jax.devices()[0])
+        self._p_kv = jax.device_put(pooled.kv_params, device)
+        n_steps = self.k
+
+        def step(p_kv, arena, slot_table, tokens, pool, page_tables,
+                 lengths, steps_left, eos_ids, key):
+            def inner(carry, t):
+                toks, pool, lens, done = carry
+                x = fns.embed(p_kv, toks)
+
+                def body(c, layer):
+                    x, pool = c
+                    x, ffn_in, pool = fns.attn_stage(
+                        p_kv, x, pool, page_tables, lens, layer)
+                    ffn_out = fns.ffn_stage(arena, slot_table, ffn_in,
+                                            layer)
+                    x = fns.combine(x, ffn_out)
+                    return (x, pool), None
+
+                (x, pool), _ = jax.lax.scan(
+                    body, (x, pool), jnp.arange(fns.n_layers))
+                logits = fns.logits(p_kv, x)
+                sampled = sample_on_device(
+                    logits, key, t, temperature=temperature, top_k=top_k)
+                out_tok = jnp.where(done, jnp.int32(-1), sampled)
+                next_tok = jnp.where(done, toks, sampled)
+                new_len = jnp.where(done, lens, lens + 1)
+                hit_eos = (~done) & (eos_ids >= 0) & (sampled == eos_ids)
+                new_done = done | hit_eos | (steps_left <= t + 1)
+                return (next_tok, pool, new_len, new_done), out_tok
+
+            done0 = steps_left <= 0
+            (_, pool, _, _), out = jax.lax.scan(
+                inner, (tokens, pool, lengths, done0),
+                jnp.arange(n_steps))
+            return out, pool
+
+        self._step = jax.jit(step, donate_argnums=_donate(4))
+
+    def __call__(self, tokens, pool, page_tables, lengths, steps_left,
+                 eos_ids=None, key=None) -> Tuple[jax.Array, jax.Array]:
+        """tokens [B]; pool; page_tables [L,B,P] PRE-EXTENDED to cover K
+        tokens; lengths [B]; steps_left [B] int32 per-row token budget
+        for this dispatch (0 freezes the row entirely); eos_ids [B]
+        int32, -1 disables EOS for that row.  Returns
+        (token ids [K,B] int32 with -1 past each row's valid prefix,
+        updated pool)."""
+        abuf, slot_table = self.pooled.arena.acquire(self.pooled.cfg.name)
+        if eos_ids is None:
+            eos_ids = jnp.full(tokens.shape, -1, jnp.int32)
+        if key is None:
+            key = jax.random.PRNGKey(0)   # greedy path never reads it
+        return self._step(self._p_kv, abuf, slot_table, tokens, pool,
+                          page_tables, lengths, steps_left, eos_ids, key)
+
+
+def dispatch_count(n_layers: int, fused: bool,
+                   decode_steps: int = 1) -> int:
+    """Host dispatches to commit ``decode_steps`` decode tokens (the
+    ablation's control metric).  Fused lowering commits the whole
+    K-token block in ONE dispatch (``MultiStepFusedStep``); host-driven
+    mode pays the full per-layer dispatch train per token."""
     if fused:
         return 1
     # embed + (attn + ffn + combine + 2 transfers) per layer + logits
-    return 2 + n_layers * 5
+    return (2 + n_layers * 5) * decode_steps

@@ -26,6 +26,12 @@ batch's ``kv_writer``, FFN through the same arena gather — so a cold
 model's prompt phase interleaves with other models' decode stages and its
 own streaming weight uploads (DESIGN.md §6).
 
+The scheduler always advances ONE token per decode batch pass — the
+multi-step K-tokens-per-dispatch path (DESIGN.md §9) lives in the fused
+lowering (``control.MultiStepFusedStep``), which replaces per-layer
+interleaving with a single device-resident program; the two are
+alternative lowerings of the same engine step, never composed.
+
 Execution is asynchronous: every stage issue returns a lazy jax value, so
 stages bound to the two pool devices genuinely overlap; the scheduler's job
 is to *issue* stages in an order that keeps both pools busy.

@@ -334,6 +334,89 @@ class KVVirtualizer:
         req.tokens += new_tokens
         self.touch(request_id)
 
+    def reserve_decode_block(self, request_id: int, k: int = 1) -> int:
+        """Pre-map pages covering the next ``k`` decode tokens WITHOUT
+        committing them (multi-step decode, DESIGN.md §9).
+
+        Extends every layer table to cover ``tokens + k`` while leaving
+        ``req.tokens`` untouched — the tokens are committed only after
+        the dispatch returns (``commit_decode_block``), so a dispatch
+        that stops early (EOS mid-block) never leaves phantom tokens in
+        the accounting.  The revision bumps when pages are added, so the
+        next ``batch_tables`` upload carries the reserved entries and
+        the device scan can append KV without any host table mutation
+        mid-dispatch.
+
+        Ordering contract: the caller faults swapped pages back in FIRST
+        (``ensure_resident``) — reserving on top of a swapped table would
+        interleave fresh device ids with host-slot encodings and the
+        batch-table build would reject the row anyway.
+
+        Atomic like ``extend_request``: one ``_take`` for all layers, so
+        ``OutOfPagesError`` leaves every table at its old length.
+        Returns the number of pages mapped.
+        """
+        req = self.requests[request_id]
+        view = self.views[req.model]
+        if not view.n_kv_layers:
+            self.touch(request_id)
+            return 0
+        assert req.n_swapped == 0, (
+            f"request {request_id} has swapped pages; call ensure_resident "
+            f"before reserving a decode block")
+        have = len(req.tables[0])
+        need = math.ceil(max(req.tokens + k, 1) / view.tokens_per_page)
+        delta = need - have
+        if delta <= 0:
+            self.touch(request_id)
+            return 0
+        pages = self._take(delta * view.n_kv_layers)
+        for layer, tab in enumerate(req.tables):
+            tab.extend(pages[layer * delta:(layer + 1) * delta])
+        req.rev = self._next_rev()
+        self.touch(request_id)
+        return len(pages)
+
+    def commit_decode_block(self, request_id: int, n_committed: int) -> int:
+        """Commit ``n_committed`` tokens of a reserved decode block and
+        return the unused reserved pages to the free list.
+
+        The inverse of ``reserve_decode_block``: ``req.tokens`` advances
+        by the tokens the device actually emitted (EOS / per-row budget
+        may stop a K-block early) and any reserved chunk beyond
+        ``ceil(tokens / tokens_per_page)`` is unmapped — trimmed pages go
+        back in reverse order so the free list keeps handing out the
+        lowest ids first (allocation order stays deterministic).  The
+        revision bumps only when pages were trimmed.  Returns the number
+        of pages returned.
+        """
+        req = self.requests[request_id]
+        view = self.views[req.model]
+        req.tokens += n_committed
+        if not view.n_kv_layers:
+            self.touch(request_id)
+            return 0
+        keep = math.ceil(max(req.tokens, 1) / view.tokens_per_page)
+        if len(req.tables[0]) <= keep:
+            self.touch(request_id)
+            return 0
+        trimmed = 0
+        for tab in req.tables:
+            extra = tab[keep:]
+            del tab[keep:]
+            for p in reversed(extra):
+                if p <= _SWAP_BASE:      # reserved page swapped meanwhile
+                    self.swap_free.append(_swap_decode(p))
+                    req.n_swapped -= 1
+                    self.swapped_now -= 1
+                else:
+                    self.free_list.append(p)
+            trimmed += len(extra)
+        self.unmap_events += trimmed
+        req.rev = self._next_rev()
+        self.touch(request_id)
+        return trimmed
+
     def release_request(self, request_id: int) -> None:
         req = self.requests.pop(request_id)
         n = 0

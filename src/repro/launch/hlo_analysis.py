@@ -66,10 +66,17 @@ class Computation:
     whiles: List[Tuple[str, Optional[int]]] = field(default_factory=list)
     calls: List[str] = field(default_factory=list)      # fusions/calls
     conds: List[str] = field(default_factory=list)      # while conditions
+    root_rhs: str = ""                                  # ROOT line's rhs
+    host_transfers: int = 0    # outfeed/infeed/send/recv ops in this comp
 
 
 _COMMENT_RE = re.compile(r"/\*.*?\*/")
 _TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+# Ops that move bytes between device and host mid-program.  Entry
+# parameters/results are the ONLY other device<->host surface, and those
+# are covered separately by entry_output_shapes().
+_HOST_TRANSFER_RE = re.compile(
+    r"\b(outfeed|infeed|send|send-done|recv|recv-done)\(")
 
 
 def parse_module(hlo: str) -> Dict[str, Computation]:
@@ -91,10 +98,14 @@ def parse_module(hlo: str) -> Dict[str, Computation]:
         if not md:
             continue
         name, rhs = md.groups()
+        if raw.lstrip().startswith("ROOT"):
+            cur.root_rhs = rhs
         shape_tok = _first_shape(rhs)
         if shape_tok:
             cur.shapes[name] = _shape_dims(shape_tok)
 
+        if _HOST_TRANSFER_RE.search(rhs):
+            cur.host_transfers += 1
         if " dot(" in rhs or rhs.startswith("dot("):
             cur.dot_flops += _dot_flops(rhs, cur.shapes)
         for kind in _COLLECTIVES:
@@ -172,14 +183,8 @@ def xla_cost_analysis(compiled) -> dict:
     return c
 
 
-def analyze(hlo: str, depth_trips: List[int]) -> ModuleStats:
-    """Walk from ENTRY, assigning execution counts.
-
-    ``depth_trips[d]`` = trip count of while loops at nesting depth d
-    (depth 0 = whiles in ENTRY).  Deeper loops than provided reuse the last
-    entry.  Fusions/calls inherit their caller's count.
-    """
-    comps = parse_module(hlo)
+def _entry_computation(
+        comps: Dict[str, Computation]) -> Optional[Computation]:
     entry = next((c for c in comps.values() if c.is_entry), None)
     if entry is None:
         # scheduled SPMD modules print no ENTRY prefix: the entry is the
@@ -191,6 +196,104 @@ def analyze(hlo: str, depth_trips: List[int]) -> ModuleStats:
             referenced.update(c.conds)
         roots = [c for c in comps.values() if c.name not in referenced]
         entry = max(roots, key=lambda c: len(c.shapes), default=None)
+    return entry
+
+
+def _root_type(rhs: str) -> str:
+    """The result-type prefix of a ROOT line's rhs.
+
+    Either a parenthesized tuple type ``(f32[..]{..}, s32[..])`` or a
+    single shape token before the opcode.
+    """
+    if rhs.startswith("("):
+        depth = 0
+        for i, ch in enumerate(rhs):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    return rhs[:i + 1]
+    return rhs.split(" ", 1)[0]
+
+
+def entry_output_shapes(hlo: str) -> List[Tuple[str, List[int]]]:
+    """(dtype, dims) of every tensor the program returns to the host.
+
+    This is the full device->host transfer surface of a dispatch (plus any
+    mid-program transfer ops, which ``host_transfer_count`` covers): a
+    multi-step decode program must NOT return per-step logits here — only
+    sampled token ids and the carried KV pool.
+    """
+    entry = _entry_computation(parse_module(hlo))
+    if entry is None or not entry.root_rhs:
+        return []
+    ty = _root_type(entry.root_rhs)
+    return [_shape_dims(m.group(0)) for m in _SHAPE_RE.finditer(ty)]
+
+
+def host_transfer_count(hlo: str) -> int:
+    """Mid-program device<->host transfer ops reachable from ENTRY."""
+    comps = parse_module(hlo)
+    entry = _entry_computation(comps)
+    if entry is None:
+        return 0
+    seen: set = set()
+    total = 0
+
+    def visit(comp: Computation):
+        nonlocal total
+        if comp.name in seen:
+            return
+        seen.add(comp.name)
+        total += comp.host_transfers
+        for body, _ in comp.whiles:
+            if body in comps:
+                visit(comps[body])
+        for callee in comp.calls + comp.conds:
+            if callee in comps:
+                visit(comps[callee])
+
+    visit(entry)
+    return total
+
+
+def while_trip_structure(hlo: str) -> List[Tuple[int, Optional[int]]]:
+    """(nesting depth, known trip count) for every while under ENTRY.
+
+    Depth 0 = whiles issued directly by the entry computation (or by
+    fusions/calls it makes).  A K-step fused decode program shows exactly
+    one depth-0 while with trip count K wrapping the depth-1 layer scan —
+    the structural proof that K tokens cost one dispatch.
+    """
+    comps = parse_module(hlo)
+    entry = _entry_computation(comps)
+    if entry is None:
+        return []
+    out: List[Tuple[int, Optional[int]]] = []
+
+    def visit(comp: Computation, depth: int):
+        for body, trips in comp.whiles:
+            out.append((depth, trips))
+            if body in comps:
+                visit(comps[body], depth + 1)
+        for callee in comp.calls:
+            if callee in comps:
+                visit(comps[callee], depth)
+
+    visit(entry, 0)
+    return out
+
+
+def analyze(hlo: str, depth_trips: List[int]) -> ModuleStats:
+    """Walk from ENTRY, assigning execution counts.
+
+    ``depth_trips[d]`` = trip count of while loops at nesting depth d
+    (depth 0 = whiles in ENTRY).  Deeper loops than provided reuse the last
+    entry.  Fusions/calls inherit their caller's count.
+    """
+    comps = parse_module(hlo)
+    entry = _entry_computation(comps)
     if entry is None:
         return ModuleStats(0.0, {}, 0, 0)
 

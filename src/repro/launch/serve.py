@@ -30,6 +30,9 @@ def main(argv: Optional[list] = None) -> None:
     ap.add_argument("--no-lowering", dest="lowering", action="store_false")
     ap.add_argument("--page-budget", type=int, default=8192)
     ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--decode-steps", type=int, default=1,
+                    help="K tokens committed per fused decode dispatch "
+                         "(DESIGN.md §9; host-driven lowering clamps to 1)")
     args = ap.parse_args(argv)
 
     if args.dry_run:
@@ -48,12 +51,14 @@ def main(argv: Optional[list] = None) -> None:
     models = {n: get_smoke_config(n) for n in PAPER_COLOC_SET}
     engine = CrossPoolEngine(
         models, page_budget=args.page_budget, max_batch=4, max_ctx=128,
-        mode=EngineMode(pipeline=args.pipeline, lowering=args.lowering))
+        mode=EngineMode(pipeline=args.pipeline, lowering=args.lowering,
+                        decode_steps_per_dispatch=args.decode_steps))
     reqs = trace_mod.make_requests(
         list(models), rps_per_model=args.rps, horizon_s=args.horizon,
         kind="sharegpt", scale_tokens=0.1, max_new_cap=args.max_new)
     print(f"serving {len(reqs)} requests across {len(models)} cold models "
-          f"(pipeline={args.pipeline}, lowering={args.lowering})")
+          f"(pipeline={args.pipeline}, lowering={args.lowering}, "
+          f"decode_steps={args.decode_steps})")
     stats = engine.run(reqs)
     print(f"tokens out: {stats.tokens_out}  virtual wall: {stats.wall_s:.2f}s "
           f"throughput: {stats.throughput:.1f} tok/s")

@@ -10,10 +10,11 @@ End-to-end path (paper §3/§4), now event-driven (DESIGN.md §7):
            [B, S] StreamingPrefill pass per (model, prompt-bucket) group;
            prompt KV is scattered into the SHARED paged pool pages mapped
            at admission
-        -> decode: one step per active model over the pool
-             lowering=fused : one compiled paged step per model per token
+        -> decode: one dispatch per active model over the pool
+             lowering=fused : one compiled paged step per model committing
+                              K tokens with on-device sampling
                               ("persistent kernel" analogue,
-                              ``PagedFusedStep``)
+                              ``MultiStepFusedStep``; DESIGN.md §9)
              lowering=host  : per-layer attention/FFN dispatches across
                               the disaggregated pools
              pipeline=True  : the active models' batches kept in flight so
@@ -65,10 +66,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ElasticConfig, ModelConfig
+from repro.configs.base import (DEFAULT_DECODE_STEPS_PER_DISPATCH,
+                                ElasticConfig, ModelConfig)
 from repro.core.admission import (AdmissionController, AdmissionStats,
                                   PendingRequest)
-from repro.core.control import (HostDrivenStep, PagedFusedStep,
+from repro.core.control import (HostDrivenStep, MultiStepFusedStep,
                                 StreamingPrefill)
 from repro.core.elastic import ElasticRebalancer
 from repro.core.pipeline import InflightBatch, LayerPipelineScheduler
@@ -89,6 +91,13 @@ from repro.runtime.telemetry import DemandTelemetry
 class EngineMode:
     pipeline: bool = True
     lowering: bool = True          # fused step vs host-driven per-layer
+    # decode tokens committed per host dispatch (persistent multi-step
+    # decode, DESIGN.md §9).  Only the fused lowering can run K>1 — one
+    # ``MultiStepFusedStep`` dispatch samples on device and returns
+    # [K, B] token ids; host-driven mode and fallback families silently
+    # clamp to 1 so the ablation baseline keeps its per-token dispatch
+    # train and both lowering modes still gate parity.
+    decode_steps_per_dispatch: int = DEFAULT_DECODE_STEPS_PER_DISPATCH
 
 
 @dataclass
@@ -158,11 +167,16 @@ class ModelRunner:
             self.view = virt.views[name]
             self.max_pages = max(
                 1, math.ceil(max_ctx / self.view.tokens_per_page))
-            self.fused: Optional[PagedFusedStep] = (
-                PagedFusedStep(pooled, postprocess=sample)
+            # K decode tokens per dispatch; host-driven lowering keeps the
+            # per-token dispatch train, so K>1 is fused-only
+            self.decode_steps = (max(1, int(mode.decode_steps_per_dispatch))
+                                 if mode.lowering else 1)
+            self.fused: Optional[MultiStepFusedStep] = (
+                MultiStepFusedStep(pooled, k=self.decode_steps)
                 if mode.lowering else None)
         else:
             self.params = params
+            self.decode_steps = 1          # dense-cache fallback stays K=1
             mdl = build_model(cfg)
             self.cache = mdl.init_cache(max_batch, max_ctx)
 
@@ -230,7 +244,7 @@ class ModelRunner:
 
     def _commit_group(self, group: PrefillGroup, logits: jax.Array
                       ) -> List[int]:
-        toks = np.asarray(jnp.argmax(logits, axis=-1))
+        toks = np.asarray(sample(logits))
         return [self._commit_prefill(req, int(toks[i]))
                 for i, req in enumerate(group.requests)]
 
@@ -263,7 +277,7 @@ class ModelRunner:
                 self.params, jnp.asarray(ids[None, :]), self.cache,
                 jnp.int32(slot), jnp.int32(req.prompt_tokens))
             slots.append(self._commit_prefill(
-                req, int(jnp.argmax(logits[0]))))
+                req, int(sample(logits)[0])))
         return slots
 
     def make_prefill_batch(self, group: PrefillGroup,
@@ -285,9 +299,20 @@ class ModelRunner:
     # ------------------------------------------------------------------
     # decode: issue (non-blocking dispatch) / commit (block + bookkeeping)
     # ------------------------------------------------------------------
-    def _map_next_token(self) -> List[int]:
-        """Extend every active request's mapping to cover the token this
-        step writes (paged models map BEFORE the step).
+    def _reserve_decode_block(self) -> Tuple[List[int], np.ndarray]:
+        """Pre-map every active request's pages for this dispatch's token
+        block (paged models map BEFORE the step; DESIGN.md §9).
+
+        Per active row the block is ``min(decode_steps, remaining declared
+        output, context headroom)`` tokens — never more than admission
+        reserved, so the PR-5 ``reserve_pages`` pressure accounting still
+        bounds decode-time needs.  Ordering: swapped pages fault back in
+        (``ensure_resident``) FIRST, then the block is reserved, then the
+        batch tables are built — the device program indexes into the
+        pre-extended table, so no host table mutation happens
+        mid-dispatch.  ``req.tokens`` is NOT advanced here: the commit
+        after the dispatch advances it by the tokens actually emitted and
+        returns unused reserved pages.
 
         Atomic across the batch: the total page need is checked up front,
         so a pool exhausted mid-serve raises with NO per-request token
@@ -296,85 +321,125 @@ class ModelRunner:
         unless the budget is under-planned).
         """
         act = self._active_slots()
+        steps = np.zeros(self.max_batch, np.int32)
         for i in act:
             # the swap tier's "next touch": pages a shrink pushed to the
             # host fault back in before this step's tables are built
             self.virt.ensure_resident(self.slots[i].request_id)
+        for i in act:
+            req = self.slots[i]
+            steps[i] = max(1, min(self.decode_steps,
+                                  req.max_new_tokens - req.generated,
+                                  self.max_ctx - int(self.lengths[i])))
         need = sum(self.virt.pages_needed_for_extend(
-            self.slots[i].request_id, 1) for i in act)
+            self.slots[i].request_id, int(steps[i])) for i in act)
         if need > self.virt.free_pages:
             raise OutOfPagesError(
-                f"{self.name}: decode step needs {need} pages, "
+                f"{self.name}: decode block needs {need} pages, "
                 f"{self.virt.free_pages} free — raise page_budget or plan "
                 f"with a higher quantile")
         for i in act:
-            self.virt.extend_request(self.slots[i].request_id, 1)
-        return act
+            self.virt.reserve_decode_block(self.slots[i].request_id,
+                                           int(steps[i]))
+        return act, steps
 
-    def prepare_step(self) -> Tuple[jax.Array, jax.Array, jax.Array, List[int]]:
-        """(tokens, page_tables [L,B,P], lengths, active slots)."""
-        act = self._map_next_token()
+    def prepare_step(self) -> Tuple[jax.Array, jax.Array, jax.Array,
+                                    List[int], np.ndarray]:
+        """(tokens, page_tables [L,B,P], lengths, active slots,
+        per-slot step budget [max_batch])."""
+        act, steps = self._reserve_decode_block()
         rids = [s.request_id if s is not None else None for s in self.slots]
         tables = self.virt.batch_tables(self.name, rids, self.max_pages)
         return (jnp.asarray(self.next_tokens), tables,
-                jnp.asarray(self.lengths), act)
+                jnp.asarray(self.lengths), act, steps)
+
+    def _eos_ids(self) -> np.ndarray:
+        eos = np.full(self.max_batch, -1, np.int32)
+        for i, req in enumerate(self.slots):
+            if req is not None and req.eos_id is not None:
+                eos[i] = req.eos_id
+        return eos
 
     def issue_decode(self, host_step: Optional[HostDrivenStep] = None
-                     ) -> Tuple[jax.Array, List[int]]:
-        """Dispatch one decode step for all slots; returns (tokens, act)
-        with the token array still lazy (not blocked on)."""
+                     ) -> Tuple[jax.Array, List[int], np.ndarray]:
+        """Dispatch one decode block for all slots; returns
+        (token ids [K, B] — still lazy, not blocked on — active slots,
+        per-slot step budgets)."""
         if self.paged:
-            tokens, tables, lengths, act = self.prepare_step()
+            tokens, tables, lengths, act, steps = self.prepare_step()
             if host_step is not None:
+                # ablation baseline: per-layer host dispatches, K=1, with
+                # logits returned to the host and sampled there
                 logits, pool = host_step(tokens, self.virt.pool, tables,
                                          lengths)
-                toks = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                toks = sample(logits)[None, :]
             else:
-                toks, pool = self.fused(tokens, self.virt.pool, tables,
-                                        lengths)
+                toks, pool = self.fused(
+                    tokens, self.virt.pool, tables, lengths,
+                    jnp.asarray(steps), jnp.asarray(self._eos_ids()))
             self.virt.pool = pool
-            return toks, act
+            return toks, act, steps
         act = self._active_slots()
         toks, self.cache = self._decode(
             self.params, jnp.asarray(self.next_tokens), self.cache,
             jnp.asarray(self.lengths))
-        return toks, act
+        steps = np.zeros(self.max_batch, np.int32)
+        steps[act] = 1
+        return toks[None, :], act, steps
 
-    def commit_decode(self, pending: Tuple[jax.Array, List[int]]
-                      ) -> Tuple[np.ndarray, List[int]]:
-        toks_dev, act = pending
-        toks = np.asarray(jax.block_until_ready(toks_dev))
+    def commit_decode(self, pending: Tuple[jax.Array, List[int], np.ndarray]
+                      ) -> Tuple[np.ndarray, np.ndarray, List[int]]:
+        """Block on a dispatched block and commit it: token/length state,
+        page-table commit (unused reserved pages return to the pool).
+        Returns (tokens [B, K], per-slot valid counts, active slots) —
+        valid tokens are a strict prefix of each row; -1 marks the tail
+        of a row frozen early (EOS / per-row budget)."""
+        toks_dev, act, steps = pending
+        toks = np.asarray(jax.block_until_ready(toks_dev)).T   # [B, K]
+        counts = np.zeros(self.max_batch, np.int64)
         for i in act:
-            self.lengths[i] += 1
-            self.next_tokens[i] = toks[i]
-            if not self.paged:
+            row = toks[i]
+            n = int((row >= 0).sum())
+            counts[i] = n
+            if n:
+                self.lengths[i] += n
+                self.next_tokens[i] = row[n - 1]
+            rid = self.slots[i].request_id
+            if self.paged:
+                self.virt.commit_decode_block(rid, n)
+            else:
                 # fallback families: page accounting AFTER the step (their
                 # KV lives in the dense cache; pages track budget only)
-                self.virt.extend_request(self.slots[i].request_id, 1)
-        return toks, act
+                self.virt.extend_request(rid, n)
+        return toks, counts, act
 
     def decode_once(self, host_step: Optional[HostDrivenStep] = None
-                    ) -> Tuple[np.ndarray, List[int]]:
-        """One decode step for all active slots; returns (tokens, slots)."""
+                    ) -> Tuple[np.ndarray, np.ndarray, List[int]]:
+        """One decode dispatch for all active slots; returns
+        (tokens [B, K], valid counts, slots)."""
         return self.commit_decode(self.issue_decode(host_step))
 
     # ------------------------------------------------------------------
     def make_inflight_batch(self, batch_id: int) -> Tuple[InflightBatch, List[int]]:
         """Package this model's slots for the layer-wise scheduler."""
-        tokens, tables, lengths, act = self.prepare_step()
+        tokens, tables, lengths, act, _ = self.prepare_step()
         return InflightBatch(
             batch_id=batch_id, model=self.name, tokens=tokens,
             page_tables=tables, lengths=lengths), act
 
     def apply_pipeline_result(self, batch: InflightBatch, act: List[int]
-                              ) -> Tuple[np.ndarray, List[int]]:
+                              ) -> Tuple[np.ndarray, np.ndarray, List[int]]:
         """Write back an InflightBatch completed by the scheduler (KV is
-        already in the pool; only token/length state lives here)."""
-        toks = np.asarray(jnp.argmax(batch.logits, axis=-1).astype(jnp.int32))
+        already in the pool; only token/length state lives here).  The
+        layer-wise scheduler is host-driven and therefore always K=1."""
+        toks = np.asarray(sample(batch.logits))
+        counts = np.zeros(self.max_batch, np.int64)
         for i in act:
             self.lengths[i] += 1
             self.next_tokens[i] = toks[i]
-        return toks, act
+            counts[i] = 1
+            self.virt.commit_decode_block(self.slots[i].request_id, 1)
+        return toks[:, None], counts, act
 
     def release(self, slot: int) -> Request:
         req = self.slots[slot]
@@ -924,17 +989,33 @@ class CrossPoolEngine:
             handle.on_token(event)
 
     def _book_tokens(self, runner: ModelRunner, toks: np.ndarray,
-                     act: List[int], now: float) -> None:
+                     counts: np.ndarray, act: List[int], start: float,
+                     dt: float) -> None:
+        """Fan one committed decode block out into per-token events.
+
+        ``toks`` is [B, K] with each row's valid tokens a strict prefix
+        of length ``counts[i]``.  The dispatch's wall time ``dt`` is
+        interpolated across a row's tokens (token t of n stamps at
+        ``start + dt*(t+1)/n``) so TBT reflects the amortised per-token
+        cost — at K=1 this degenerates to the seed's ``start + dt``.
+        Streaming callbacks fire per token, preserving the K=1 contract.
+        """
         for i in act:
             req = runner.slots[i]
-            req.generated += 1
-            req.output_ids.append(int(toks[i]))
-            req.token_times.append(now)
-            self.stats.tokens_out += 1
-            self._emit(TokenEvent(
-                request_id=req.request_id, model=req.model,
-                token=int(toks[i]), index=req.generated - 1, time=now,
-                done=req.done))
+            n = int(counts[i])
+            for t in range(n):
+                tok = int(toks[i, t])
+                req.generated += 1
+                req.output_ids.append(tok)
+                when = start + dt * (t + 1) / n
+                req.token_times.append(when)
+                self.stats.tokens_out += 1
+                if req.eos_id is not None and tok == req.eos_id:
+                    req.eos_seen = True
+                self._emit(TokenEvent(
+                    request_id=req.request_id, model=req.model,
+                    token=tok, index=req.generated - 1, time=when,
+                    done=req.done))
 
     def _book_first_token(self, req: Request, now: float) -> None:
         req.first_token_time = now
@@ -1005,12 +1086,11 @@ class CrossPoolEngine:
     def _decode_model(self, name: str, now: float) -> float:
         runner = self.runners[name]
         t0 = time.perf_counter()
-        toks, act = runner.decode_once(self._host_step(name))
+        toks, counts, act = runner.decode_once(self._host_step(name))
         dt = time.perf_counter() - t0
         self._record_step(name, dt)
-        now += dt
-        self._book_tokens(runner, toks, act, now)
-        return now
+        self._book_tokens(runner, toks, counts, act, now, dt)
+        return now + dt
 
     def _decode_pipelined(self, active: List[str], now: float) -> float:
         """Two (or more) models stepped with overlapping execution.
@@ -1027,9 +1107,9 @@ class CrossPoolEngine:
         dt_all = 0.0
         for n, pending in issued:
             runner = self.runners[n]
-            toks, act = runner.commit_decode(pending)
+            toks, counts, act = runner.commit_decode(pending)
             dt_all = time.perf_counter() - t0
-            self._book_tokens(runner, toks, act, now + dt_all)
+            self._book_tokens(runner, toks, counts, act, now, dt_all)
         for n in active:
             self._record_step(n, dt_all / len(active))
         return now + dt_all
@@ -1050,8 +1130,8 @@ class CrossPoolEngine:
         dt_all = time.perf_counter() - t0
         for b in done:
             runner = self.runners[b.model]
-            toks, act = runner.apply_pipeline_result(b, acts[b.model])
-            self._book_tokens(runner, toks, act, now + dt_all)
+            toks, counts, act = runner.apply_pipeline_result(b, acts[b.model])
+            self._book_tokens(runner, toks, counts, act, now, dt_all)
             self._record_step(b.model, dt_all / max(len(paged), 1))
         now += dt_all
         for n in fallback:          # families outside split execution

@@ -23,10 +23,12 @@ class Request:
     max_new_tokens: int
     arrival_time: float
     prompt_ids: Optional[object] = None      # jax/np array when real tokens
+    eos_id: Optional[int] = None             # None disables EOS stopping
     phase: Phase = Phase.QUEUED
     # --- progress -------------------------------------------------------
     generated: int = 0
     output_ids: List[int] = field(default_factory=list)
+    eos_seen: bool = False
     # --- latency bookkeeping ---------------------------------------------
     admit_time: float = 0.0
     first_token_time: float = 0.0
@@ -43,7 +45,7 @@ class Request:
 
     @property
     def done(self) -> bool:
-        return self.generated >= self.max_new_tokens
+        return self.eos_seen or self.generated >= self.max_new_tokens
 
 
 def percentile(values: List[float], q: float) -> float:

@@ -1,4 +1,17 @@
-"""Token sampling: greedy / temperature / top-k, jit-friendly."""
+"""Token sampling: greedy / temperature / top-k, jit-friendly.
+
+This module is the SINGLE sampling entry point for the whole runtime:
+
+* ``sample`` — host-visible path: the engine's prefill first-token pick,
+  the host-driven (lowering=OFF) decode commit and the pipeline
+  scheduler's write-back all route through it, so there is exactly one
+  greedy/temperature implementation to keep bit-exact.
+* ``sample_on_device`` — the fused multi-step decode path: the same
+  policy compiled INTO the device program (``control.MultiStepFusedStep``
+  closes over it), with the inner-step index folded into the PRNG key so
+  the K tokens of one dispatch draw independent samples while staying a
+  pure function of ``(key, step)`` — logits never leave the device.
+"""
 from __future__ import annotations
 
 from typing import Optional
@@ -18,3 +31,22 @@ def sample(logits: jax.Array, key: Optional[jax.Array] = None, *,
         scaled = jnp.where(scaled >= kth, scaled, -jnp.inf)
     assert key is not None, "temperature sampling needs a PRNG key"
     return jax.random.categorical(key, scaled, axis=-1).astype(jnp.int32)
+
+
+def sample_on_device(logits: jax.Array, key: Optional[jax.Array], step,
+                     *, temperature: float = 0.0, top_k: int = 0
+                     ) -> jax.Array:
+    """Jittable in-program sampling for the multi-step fused decode.
+
+    ``step`` is the inner scan index (a traced int32 scalar is fine):
+    it is folded into ``key`` so each of the K inner steps of one
+    dispatch draws an independent sample, deterministically — replaying
+    a dispatch with the same key reproduces the same K tokens.  Greedy
+    (``temperature<=0``) never touches the key, so the fused program
+    can pass a dummy key without tracing any PRNG ops.
+    """
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    assert key is not None, "temperature sampling needs a PRNG key"
+    return sample(logits, jax.random.fold_in(key, step),
+                  temperature=temperature, top_k=top_k)

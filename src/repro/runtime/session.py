@@ -11,7 +11,11 @@ This module holds the request-level objects that API hands out:
   streaming arrives through the handle's ``on_token`` callback.
 * :class:`TokenEvent` — one generated token: which request, which
   position in its stream, at what engine time, and whether it is the
-  first (TTFT) or last (stream-done) token.
+  first (TTFT) or last (stream-done) token.  The event contract is
+  per-token even when the engine commits K tokens per dispatch
+  (DESIGN.md §9): a committed K-block fans out as K events with
+  timestamps interpolated across the block's wall time, so streaming
+  callbacks and TBT accounting never see the block structure.
 * :class:`RebalanceEvent` — one applied elastic boundary move (the
   session-facing view of ``core.elastic.RebalanceDecision``): how many
   device bytes moved between the KV page pool and the weight arena, and

@@ -49,6 +49,10 @@ class SystemPlacement:
     pipelined: bool = False                     # layer-wise pipeline
     lowered: bool = False                       # persistent-kernel control
     ffn_gpus: Dict[str, Tuple[int, ...]] = field(default_factory=dict)
+    # K decode tokens per host dispatch (multi-step fused decode).  Only
+    # meaningful with ``lowered`` — the host-driven path stays K=1, which
+    # mirrors EngineMode.decode_steps_per_dispatch in the real engine.
+    decode_steps: int = 1
 
 
 def _ffn_read_bytes(cfg: ModelConfig, batch: int) -> float:
@@ -78,8 +82,12 @@ def crosspool_stage_times(cfg: ModelConfig, batch: int, sum_ctx: int,
     kv_read = sum_ctx * cfg.kv_bytes_per_token() / (HBM_BW * n_kv)
     ffn_read = _ffn_read_bytes(cfg, batch) / (HBM_BW * n_ffn)
     xfer = 2 * cfg.n_layers * batch * cfg.d_model * 2 / NVLINK_BW
-    control = (PERSISTENT_DISPATCH if placement.lowered
-               else HOST_DISPATCH * 2 * cfg.n_layers)
+    if placement.lowered:
+        # one persistent-kernel dispatch commits K tokens; its launch cost
+        # amortizes to 1/K per token (the stage reads themselves don't)
+        control = PERSISTENT_DISPATCH / max(placement.decode_steps, 1)
+    else:
+        control = HOST_DISPATCH * 2 * cfg.n_layers
     return attn_read + kv_read, xfer, ffn_read, control
 
 
@@ -125,7 +133,7 @@ def prefill_time(cfg: ModelConfig, prompt: int,
 
 def paper_placements(models: Dict[str, ModelConfig],
                      system: str, *, pipelined: bool = True,
-                     lowered: bool = True,
+                     lowered: bool = True, decode_steps: int = 1,
                      hbm_bytes: Optional[float] = None) -> SystemPlacement:
     """The paper's 5-GPU placements (Table 2), parameterized by system.
 
@@ -191,7 +199,8 @@ def paper_placements(models: Dict[str, ModelConfig],
             shared_pool=True,
             kv_gpus={n: kv_gpu for n in names},
             ffn_gpus={n: w_gpus for n in names},
-            pipelined=pipelined, lowered=lowered)
+            pipelined=pipelined, lowered=lowered,
+            decode_steps=decode_steps if lowered else 1)
 
     raise ValueError(system)
 
@@ -342,6 +351,7 @@ class DecodeSimulator:
             "per_model_tbt": per_model_tbt,
             "rejected": len(rejected),
             "finished": sum(1 for r in requests if r.finish_time > 0),
+            "tokens_out": sum(r.generated for r in requests),
         }
 
 

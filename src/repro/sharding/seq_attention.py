@@ -38,11 +38,21 @@ except ImportError:  # pragma: no cover
 NEG_INF = -1e30
 
 
-def _shard_offset(kv_axes: Tuple[str, ...], local_t: int) -> jax.Array:
+def _axis_sizes(mesh: Mesh, kv_axes: Tuple[str, ...]) -> Tuple[int, ...]:
+    """Static mesh extents of the KV shard axes.
+
+    Resolved from the mesh at trace time instead of ``lax.axis_size``
+    (which some jax builds lack inside shard_map) — the sizes are static
+    properties of the mesh, so baking them in changes nothing."""
+    return tuple(int(mesh.shape[ax]) for ax in kv_axes)
+
+
+def _shard_offset(kv_axes: Tuple[str, ...], sizes: Tuple[int, ...],
+                  local_t: int) -> jax.Array:
     """Global token offset of this shard's KV slice (row-major over axes)."""
     idx = jnp.int32(0)
-    for ax in kv_axes:
-        idx = idx * lax.axis_size(ax) + lax.axis_index(ax)
+    for ax, size in zip(kv_axes, sizes):
+        idx = idx * size + lax.axis_index(ax)
     return idx * local_t
 
 
@@ -63,12 +73,13 @@ def make_seq_decode_attn(mesh: Mesh, kv_axes: Tuple[str, ...],
     -> out [B,1,H,D].  ``lengths`` counts valid tokens (incl. current).
     """
     bspec = batch_axes if batch_axes else None
+    sizes = _axis_sizes(mesh, kv_axes)
 
     def local(q, k, v, lengths):
         Bl, _, H, D = q.shape
         Tl, KV = k.shape[1], k.shape[2]
         G = H // KV
-        offset = _shard_offset(kv_axes, Tl)
+        offset = _shard_offset(kv_axes, sizes, Tl)
         qg = q.reshape(Bl, KV, G, D).astype(jnp.float32)
         s = jnp.einsum("bkgd,btkd->bkgt", qg, k.astype(jnp.float32)) * scale
         pos = offset + jnp.arange(Tl)
@@ -100,11 +111,12 @@ def make_seq_mla_decode_attn(mesh: Mesh, kv_axes: Tuple[str, ...],
     is B*H*r — the Type II KV-head-limited case stays communication-light.
     """
     bspec = batch_axes if batch_axes else None
+    sizes = _axis_sizes(mesh, kv_axes)
 
     def local_clean(q_lat, q_rope, latent, rope, lengths):
         Bl, _, H, R = q_lat.shape
         Tl = latent.shape[1]
-        offset = _shard_offset(kv_axes, Tl)
+        offset = _shard_offset(kv_axes, sizes, Tl)
         s = (jnp.einsum("bshr,btr->bhst", q_lat.astype(jnp.float32),
                         latent.astype(jnp.float32))
              + jnp.einsum("bshp,btp->bhst", q_rope.astype(jnp.float32),

@@ -85,3 +85,27 @@ def test_collective_counting_with_loops():
     # IF present it is multiplied by the trip count (payload % trip == 0)
     if stats.collective_total:
         assert stats.collective_total % 5 == 0
+
+
+def test_multistep_structure_helpers():
+    """The DESIGN.md §9 structural analyzers: a K-step scan over a layer
+    scan shows up as a depth-0 while of trip K wrapping a depth-1 while
+    of trip L, with no host transfers, and the entry output is the
+    carried tensor (not per-step intermediates)."""
+    K = 4
+    Ws = jnp.ones((L, D, D))
+    x = jnp.ones((N, D))
+
+    def ksteps(x, Ws):
+        def body(c, _):
+            return _scanned(c, Ws), None
+        y, _ = jax.lax.scan(body, x, None, length=K)
+        return y
+
+    hlo = jax.jit(ksteps).lower(x, Ws).compile().as_text()
+    trips = ha.while_trip_structure(hlo)
+    assert (0, K) in trips, trips
+    assert (1, L) in trips, trips
+    assert ha.host_transfer_count(hlo) == 0
+    outs = ha.entry_output_shapes(hlo)
+    assert ("f32", [N, D]) in outs, outs

@@ -1,0 +1,347 @@
+"""Persistent multi-step decode: the K-tokens-per-dispatch invariants.
+
+* parity: token streams are bit-exact for K in {1, 2, 4} against the K=1
+  seed fixture (the multi-step program is a ``lax.scan`` over the SAME
+  per-step body), and the host-driven lowering clamps to K=1 so both
+  lowering modes keep gating the pre-refactor streams;
+* EOS mid-block: an EOS hit inside a K-block freezes the row on device
+  (done-mask), the host commits only the valid prefix, and the unused
+  reserved pages return at commit;
+* cancel at a dispatch boundary: cancels stay at step boundaries
+  (DESIGN.md §9) and restore pool/arena accounting exactly;
+* forced elastic shrink between dispatches: the swap-out -> shrink ->
+  grow cycle against live K=4 requests is invisible in the streams
+  (``ensure_resident`` faults pages back BEFORE the next block's tables
+  are built);
+* property: ``reserve_decode_block``/``commit_decode_block`` sequences
+  never leak or alias pages, and commit trims the table to exactly
+  ``ceil(tokens / page_tokens)`` entries;
+* HLO proof: K decode tokens cost exactly ONE dispatch — the compiled
+  program is a depth-0 while with trip count K wrapping the layer scan,
+  with zero mid-program host transfers and no logits-shaped tensor in
+  the entry outputs (sampling is fused on device).
+"""
+import json
+import math
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import PAPER_COLOC_SET, get_smoke_config
+from repro.core.control import MultiStepFusedStep, dispatch_count
+from repro.core.pools import build_pools
+from repro.core.virtualizer import KVVirtualizer, OutOfPagesError
+from repro.launch import hlo_analysis as ha
+from repro.models import build_model
+from repro.runtime.engine import CrossPoolEngine, EngineMode
+from repro.runtime.request import Request
+from repro.runtime.session import HandleState
+
+MOE, MLA, MOON = "qwen3-moe-235b-a22b", "minicpm3-4b", "moonshot-v1-16b-a3b"
+FIXTURE = os.path.join(os.path.dirname(__file__), "fixtures",
+                       "pre_refactor_token_streams.json")
+
+
+def _models(names=PAPER_COLOC_SET):
+    return {n: get_smoke_config(n).replace(dtype="float32") for n in names}
+
+
+def _engine(names=PAPER_COLOC_SET, lowering=True, decode_steps=1, **kw):
+    kw.setdefault("page_budget", 2048)
+    kw.setdefault("page_bytes", 4096)
+    kw.setdefault("slab_bytes", 4096)
+    kw.setdefault("max_batch", 2)
+    kw.setdefault("max_ctx", 64)
+    kw.setdefault("seed", 0)
+    return CrossPoolEngine(
+        _models(names),
+        mode=EngineMode(pipeline=True, lowering=lowering,
+                        decode_steps_per_dispatch=decode_steps), **kw)
+
+
+def _trace_fused():
+    return [Request(0, MOE, 6, 3, 0.0), Request(1, MOE, 7, 3, 0.0),
+            Request(2, MOE, 9, 4, 0.0), Request(3, MLA, 5, 3, 0.0),
+            Request(4, MLA, 6, 2, 0.0), Request(5, MOON, 20, 3, 0.0)]
+
+
+def _trace_host():
+    return [Request(0, MOE, 6, 3, 0.0), Request(1, MLA, 5, 2, 0.0),
+            Request(2, MOON, 20, 3, 0.0)]
+
+
+def _streams(reqs):
+    return {str(r.request_id): list(map(int, r.output_ids)) for r in reqs}
+
+
+def _accounting(engine):
+    return {
+        "mapped_pages": engine.virt.mapped_pages,
+        "live_requests": sorted(engine.virt.requests),
+        "pins": dict(engine.arena.pins) if engine.arena is not None else {},
+        "inflight": dict(engine.admission.inflight),
+        "queued": engine.admission.queued_count(),
+    }
+
+
+# ---------------------------------------------------------------------------
+# bit-exact parity with the K=1 seed fixture
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("k", [1, 2, 4])
+def test_fused_streams_bit_exact_vs_k1_fixture(k):
+    """The K-step scan runs the SAME per-step body as K=1, so the token
+    streams captured from the seed driver must reproduce bit for bit —
+    including requests whose max_new is not a multiple of K (done-mask
+    freezes the tail rows) — and every reserved page must come back."""
+    with open(FIXTURE) as f:
+        want = json.load(f)["fused_pipeline"]
+    engine = _engine(decode_steps=k)
+    reqs = _trace_fused()
+    stats = engine.run(reqs)
+    assert _streams(reqs) == want["streams"]
+    assert stats.tokens_out == want["tokens_out"]
+    u = engine.virt.utilization()
+    assert u["mapped_pages"] == 0
+    assert engine.virt.free_pages == engine.virt.page_budget
+
+
+def test_host_mode_clamps_to_k1_and_matches_fixture():
+    """The host-driven lowering stays a per-layer K=1 dispatch train even
+    with the knob set, so it keeps gating the pre-refactor streams."""
+    with open(FIXTURE) as f:
+        want = json.load(f)["host_pipeline"]
+    engine = _engine(lowering=False, decode_steps=4)
+    assert all(r.decode_steps == 1 for r in engine.runners.values())
+    reqs = _trace_host()
+    stats = engine.run(reqs)
+    assert _streams(reqs) == want["streams"]
+    assert stats.tokens_out == want["tokens_out"]
+
+
+def test_streaming_callbacks_fan_out_per_token():
+    """One K=4 dispatch commits a block, but the callback contract is
+    per token: events fire in stream order with first/done marks and
+    strictly increasing (interpolated) timestamps."""
+    engine = _engine(names=(MOE, MLA), decode_steps=4)
+    seen = []
+    h = engine.submit(Request(0, MOE, 6, 6, 0.0),
+                      on_token=lambda e: seen.append(e))
+    steps = 0
+    while not h.done:
+        engine.step()
+        steps += 1
+        assert steps < 20
+    assert [e.token for e in seen] == h.tokens and len(h.tokens) == 6
+    assert [e.index for e in seen] == list(range(6))
+    assert seen[0].first and not seen[0].done
+    assert seen[-1].done and not seen[-1].first
+    assert [e.time for e in seen] == h.request.token_times
+    times = h.request.token_times
+    assert all(b > a for a, b in zip(times, times[1:]))
+
+
+# ---------------------------------------------------------------------------
+# EOS mid-block
+# ---------------------------------------------------------------------------
+
+def test_eos_mid_block_freezes_row_and_returns_pages():
+    """EOS hitting inside a K=4 block stops the stream at the EOS token
+    (the device freezes the row; the host commits the valid prefix),
+    identically to K=1, and all pages return at release."""
+    probe = _engine(names=(MOE, MLA))
+    hp = probe.submit(Request(0, MOE, 6, 8, 0.0))
+    probe.drain()
+    assert len(hp.tokens) == 8
+    # an EOS value that first appears mid-stream (index >= 1): at K=4 it
+    # lands inside the first decode block
+    idx = next(i for i in range(1, 8) if hp.tokens[i] not in hp.tokens[:i])
+    eos = hp.tokens[idx]
+
+    streams = {}
+    for k in (1, 4):
+        engine = _engine(names=(MOE, MLA), decode_steps=k)
+        baseline = _accounting(engine)
+        h = engine.submit(Request(0, MOE, 6, 8, 0.0, eos_id=eos))
+        engine.drain()
+        assert h.request.eos_seen and h.request.done
+        assert h.tokens == hp.tokens[:idx + 1]
+        assert h.state is HandleState.FINISHED
+        assert _accounting(engine) == baseline
+        streams[k] = h.tokens
+    assert streams[1] == streams[4]
+
+
+# ---------------------------------------------------------------------------
+# cancel at a dispatch boundary
+# ---------------------------------------------------------------------------
+
+def test_cancel_at_dispatch_boundary_restores_accounting():
+    """Cancels stay at dispatch boundaries: after a K-block commits, a
+    cancel tears down atomically (including the block's reserved pages)
+    and the co-resident request keeps serving."""
+    engine = _engine(names=(MOE, MLA), decode_steps=4)
+    baseline = _accounting(engine)
+    h1 = engine.submit(Request(1, MOE, 6, 50, 0.0))
+    h2 = engine.submit(Request(2, MLA, 5, 3, 0.0))
+    engine.step()
+    engine.step()
+    assert h1.state is HandleState.DECODING
+    assert len(h1.tokens) >= 5            # prefill token + >= one K-block
+    assert engine.cancel(h1)
+    stats = engine.drain()
+    assert h1.state is HandleState.CANCELLED
+    assert h2.state is HandleState.FINISHED
+    assert len(h2.tokens) == 3
+    assert _accounting(engine) == baseline
+    assert stats.cancelled == 1
+
+
+# ---------------------------------------------------------------------------
+# forced elastic shrink between dispatches
+# ---------------------------------------------------------------------------
+
+def test_forced_shrink_between_dispatches_bit_exact():
+    """Mid-serve, force the full elastic cycle against the live K=4
+    requests (swap out, shrink+compact, grow back).  The next dispatch's
+    reserve path faults everything back in BEFORE building tables
+    (DESIGN.md §9 ordering), so the streams must equal the unperturbed
+    run bit for bit."""
+    ref_engine = _engine(decode_steps=4)
+    ref_reqs = _trace_fused()
+    ref_engine.run(ref_reqs)
+
+    engine = _engine(decode_steps=4)
+    reqs = _trace_fused()
+    handles = [engine.submit(r) for r in reqs]
+    engine.step()                          # prefill + first decode blocks
+    virt = engine.virt
+    live = sorted(virt.requests)
+    assert live, "nothing survived the first step to perturb"
+    swapped = sum(virt.swap_out(rid) for rid in live)
+    assert swapped > 0
+    virt.resize(max(virt.mapped_pages + 2, 8))
+    assert virt.page_budget < 2048
+    virt.resize(2048)
+    steps = 0
+    while any(not h.done for h in handles):
+        engine.step()
+        steps += 1
+        assert steps < 100
+    assert _streams(reqs) == _streams(ref_reqs)
+    assert engine.virt.free_pages == engine.virt.page_budget
+
+
+# ---------------------------------------------------------------------------
+# property: reserve/commit never leaks or aliases pages
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(ops=st.lists(
+    st.tuples(st.sampled_from(["register", "reserve", "commit", "release"]),
+              st.sampled_from(list(PAPER_COLOC_SET)),
+              st.integers(1, 8)),
+    min_size=1, max_size=40))
+def test_property_reserve_commit_no_leak_no_alias(ops):
+    """Random register/reserve/commit/release interleavings (including
+    OutOfPagesError mid-sequence): no page leaks, no double mapping, and
+    a commit always trims the table to ceil(tokens / page_tokens)."""
+    budget = 64
+    virt = KVVirtualizer({n: get_smoke_config(n) for n in PAPER_COLOC_SET},
+                         page_budget=budget, page_bytes=4096,
+                         allocate_device_pool=False)
+    reserved = {}                          # rid -> outstanding reserve k
+    next_id = 0
+    for op, model, arg in ops:
+        try:
+            if op == "register" or not reserved:
+                virt.register_request(next_id, model, arg)
+                reserved[next_id] = 0
+                next_id += 1
+            elif op == "reserve":
+                rid = next(iter(reserved))
+                virt.reserve_decode_block(rid, arg)
+                reserved[rid] = max(reserved[rid], arg)
+            elif op == "commit":
+                rid = next(iter(reserved))
+                n = min(arg, reserved[rid])    # never beyond the reserve
+                virt.commit_decode_block(rid, n)
+                reserved[rid] = 0
+                req = virt.requests[rid]
+                view = virt.views[req.model]
+                if view.n_kv_layers:
+                    keep = math.ceil(max(req.tokens, 1)
+                                     / view.tokens_per_page)
+                    assert len(req.tables[0]) == keep, \
+                        "commit did not trim to the exact page count"
+            else:
+                rid = next(iter(reserved))
+                virt.release_request(rid)
+                del reserved[rid]
+        except OutOfPagesError:
+            pass
+        mapped = [p for r in virt.requests.values()
+                  for t in r.tables for p in t]
+        mapped += [p for r in virt.requests.values() for p in r.state_pages]
+        assert len(mapped) == len(set(mapped)), "double-mapped page"
+        assert len(mapped) + virt.free_pages == budget, "page leak"
+        for r in virt.requests.values():
+            assert len({len(t) for t in r.tables} | {0}) <= 2, \
+                "unequal layer tables"
+    for rid in list(reserved):
+        virt.release_request(rid)
+    assert virt.free_pages == budget
+
+
+# ---------------------------------------------------------------------------
+# HLO proof: K tokens, one dispatch, logits never leave the device
+# ---------------------------------------------------------------------------
+
+def test_k_tokens_cost_one_dispatch_and_no_logit_transfer():
+    """Structural proof on the compiled HLO: the K-step program is ONE
+    dispatch (a depth-0 while with known trip count K wrapping the layer
+    scan), makes zero mid-program host transfers, and its only host-
+    visible outputs are the [K, B] sampled token ids plus the carried KV
+    pool — no [*, vocab] float tensor (logits are consumed on device)."""
+    name, K, B, seq = MOE, 4, 2, 8
+    cfg = get_smoke_config(name).replace(dtype="float32")
+    models = {name: cfg}
+    model = build_model(cfg)
+    params = {name: model.init(jax.random.PRNGKey(0))}
+    kv_pool, _, pooled = build_pools(models, params, page_budget=256,
+                                     page_bytes=4096,
+                                     pool_dtype=jnp.float32)
+    virt = kv_pool.virtualizer
+    for b in range(B):
+        virt.register_request(b, name, seq)
+        virt.reserve_decode_block(b, K)
+    view = virt.views[name]
+    max_pages = max(1, math.ceil((seq + K) / view.tokens_per_page))
+    tables = virt.batch_tables(name, [0, 1], max_pages)
+    step = MultiStepFusedStep(pooled[name], k=K)
+    abuf, slot_table = pooled[name].arena.acquire(name)
+    hlo = step._step.lower(
+        step._p_kv, abuf, slot_table, jnp.zeros((B,), jnp.int32), virt.pool,
+        tables, jnp.full((B,), seq, jnp.int32), jnp.full((B,), K, jnp.int32),
+        jnp.full((B,), -1, jnp.int32),
+        jax.random.PRNGKey(0)).compile().as_text()
+
+    # one host dispatch commits the whole K-token block; the host-driven
+    # baseline pays its per-layer dispatch train K times over
+    assert dispatch_count(cfg.n_layers, fused=True, decode_steps=K) == 1
+    assert dispatch_count(cfg.n_layers, fused=False, decode_steps=K) == \
+        (2 + cfg.n_layers * 5) * K
+    trips = ha.while_trip_structure(hlo)
+    assert (0, K) in trips, f"no depth-0 while with trip {K}: {trips}"
+    assert (1, cfg.n_layers) in trips, \
+        f"no depth-1 layer scan with trip {cfg.n_layers}: {trips}"
+    assert ha.host_transfer_count(hlo) == 0
+    outs = ha.entry_output_shapes(hlo)
+    assert ("s32", [K, B]) in outs, f"token block missing from {outs}"
+    assert not any(dims and dims[-1] == cfg.vocab_size
+                   and dt.startswith("f") for dt, dims in outs), \
+        f"logits-shaped tensor leaves the device: {outs}"
