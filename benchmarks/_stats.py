@@ -1,0 +1,18 @@
+"""Shared quantile helpers for every benchmark.
+
+One implementation: ``repro.runtime.observe.percentile`` — the same
+``np.percentile`` the metrics histograms expose — so every benchmark,
+the serving report, and the exported metrics compute quantiles
+identically (ISSUE 7 satellite).
+"""
+from repro.runtime.observe import percentile, summarize  # noqa: F401
+
+__all__ = ["percentile", "summarize", "p50", "p99"]
+
+
+def p50(values) -> float:
+    return percentile(values, 50)
+
+
+def p99(values) -> float:
+    return percentile(values, 99)

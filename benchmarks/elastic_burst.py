@@ -27,9 +27,11 @@ from __future__ import annotations
 
 import numpy as np
 
+from benchmarks._stats import percentile
 from repro.configs import ElasticConfig, PAPER_COLOC_SET, get_smoke_config
 from repro.runtime.engine import CrossPoolEngine, EngineMode
-from repro.runtime.request import Request, percentile
+from repro.runtime.observe import EngineObserver
+from repro.runtime.request import Request
 
 #: the serving target (MLA, dense FFN) and the burst shape
 TARGET = "minicpm3-4b"
@@ -47,11 +49,15 @@ def _models():
 
 
 def _engine(elastic: bool, decode_steps: int = 1) -> CrossPoolEngine:
+    # every engine carries an observer: the TBT tail below is read from
+    # the shared latency histograms (ISSUE 7), and the observer is pure
+    # bookkeeping, so the guarded integer ratio is unaffected
     return CrossPoolEngine(
         _models(), page_budget=PAGE_BUDGET, page_bytes=PAGE_BYTES,
         slab_bytes=SLAB_BYTES, max_batch=8, max_ctx=64,
         mode=EngineMode(pipeline=True, lowering=True,
                         decode_steps_per_dispatch=decode_steps), seed=0,
+        observer=EngineObserver(),
         # one-jump growth (max_step_fraction >> 1): every resize changes
         # the pool SHAPE and recompiles the fused step, so a burst response
         # wants one large aligned move, not eight geometric ones
@@ -172,8 +178,12 @@ def run(csv=print) -> dict:
     assert peak_e4 > peak_s, (peak_e4, peak_s)
 
     q99_s, q99_e = percentile(qw_s, 99), percentile(qw_e, 99)
-    tbt99_s = percentile(stats_s.tbt, 99)
-    tbt99_e = percentile(stats_e.tbt, 99)
+    # TBT tail from the shared observer histograms; they must hold exactly
+    # the window the EngineStats lists recorded
+    assert sorted(eng_s.observer.tbt.all_samples()) == sorted(stats_s.tbt)
+    assert sorted(eng_e.observer.tbt.all_samples()) == sorted(stats_e.tbt)
+    tbt99_s = eng_s.observer.tbt.percentile(99)
+    tbt99_e = eng_e.observer.tbt.percentile(99)
     swap = eng_e.virt.utilization()
     csv(f"elastic_burst,peak_admitted_static={peak_s},"
         f"peak_admitted_elastic={peak_e}")

@@ -8,6 +8,7 @@ from __future__ import annotations
 
 import numpy as np
 
+from benchmarks._stats import percentile
 from repro.configs import get_config
 from repro.core.planner import WorkloadSpec, active_kv_timeline
 
@@ -32,7 +33,7 @@ def run(csv=print) -> dict:
         peaks[name] = u.max()
     agg = sum(timelines.values())
     sum_peaks = sum(peaks.values())
-    agg_p99 = float(np.quantile(agg, 0.99))
+    agg_p99 = percentile(agg, 99)
     agg_peak = float(agg.max())
     for name in MODELS:
         csv(f"fig1b,{name}_peak_gib,{peaks[name] / 2 ** 30:.3f}")

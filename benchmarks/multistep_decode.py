@@ -33,9 +33,10 @@ import time
 import jax
 import numpy as np
 
+from benchmarks._stats import percentile
 from repro.configs import PAPER_COLOC_SET, get_smoke_config
 from repro.runtime.engine import CrossPoolEngine, EngineMode
-from repro.runtime.request import Request, percentile
+from repro.runtime.request import Request
 
 PROMPT = 8
 MAX_NEW = 24                  # decode-heavy: 1 token of prompt per 3 decoded

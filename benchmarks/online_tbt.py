@@ -27,10 +27,12 @@ dispatches, lost coalescing) still trips it.
 """
 from __future__ import annotations
 
+from benchmarks._stats import percentile
 from repro.configs import PAPER_COLOC_SET, get_smoke_config
 from repro.runtime import trace as trace_mod
 from repro.runtime.engine import CrossPoolEngine, EngineMode
-from repro.runtime.request import Request, percentile
+from repro.runtime.observe import EngineObserver
+from repro.runtime.request import Request
 
 
 def _models():
@@ -39,10 +41,12 @@ def _models():
 
 
 def _engine():
+    # both engines carry an observer, so the latency histograms are the
+    # measurement source and any observer overhead cancels in the ratio
     return CrossPoolEngine(_models(), page_budget=4096, page_bytes=4096,
                            slab_bytes=4096, max_batch=2, max_ctx=64,
                            mode=EngineMode(pipeline=True, lowering=True),
-                           seed=0)
+                           seed=0, observer=EngineObserver())
 
 
 def _trace():
@@ -116,9 +120,15 @@ def _measure(engine, online: bool):
         assert streamed == stats.tokens_out, "callback stream lost tokens"
     else:
         stats = engine.run(reqs)
-    tbt = [t for r in reqs for t in r.tbt_samples()]
-    ttft = [r.first_token_time - r.arrival_time
-            for r in reqs if r.first_token_time]
+    # the P50/P99 sources are the SHARED observer histograms (ISSUE 7);
+    # they must hold exactly the samples the per-request lists reconstruct
+    tbt = engine.observer.tbt.all_samples()
+    ttft = engine.observer.ttft.all_samples()
+    assert sorted(tbt) == sorted(t for r in reqs for t in r.tbt_samples()), \
+        "observer TBT histogram disagrees with per-request token times"
+    assert sorted(ttft) == sorted(r.first_token_time - r.arrival_time
+                                  for r in reqs if r.first_token_time), \
+        "observer TTFT histogram disagrees with per-request arrival clocks"
     return stats, tbt, ttft, reqs
 
 

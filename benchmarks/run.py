@@ -77,9 +77,21 @@ def main(argv=None) -> None:
              f"(known: {','.join(BENCHES)})")
     ap.add_argument("--summary", default="BENCH_summary.json",
                     help="machine-readable per-benchmark results file")
+    ap.add_argument("--merge", action="store_true",
+                    help="update the existing summary file instead of "
+                         "rewriting it — lets timing-sensitive benchmarks "
+                         "run in their own fresh process (CI runs "
+                         "multistep this way: a long-lived process's "
+                         "heap/compile-cache state perturbs its P99s)")
     args = ap.parse_args(argv)
     todo = _parse_only(args.only)
     summary = {}
+    if args.merge:
+        try:
+            with open(args.summary) as f:
+                summary = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            pass
     failures = 0
     for name, fn in todo.items():
         print(f"\n# === {name} ===")

@@ -22,7 +22,7 @@ from repro.core.planner import (WorkloadSpec, plan_pool, split_device_budget,
 from repro.core.weight_pool import slabs_for_config
 from repro.runtime import trace as trace_mod
 from repro.runtime.engine import CrossPoolEngine, EngineMode
-from repro.runtime.request import percentile
+from repro.runtime.observe import EngineObserver, percentile
 
 
 def serve_online(engine, reqs):
@@ -70,7 +70,14 @@ def main():
                     help="enable the online KV<->weights boundary "
                          "rebalancer (windowed re-plan + host KV swap "
                          "tier; DESIGN.md §8)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write Prometheus-text metrics here after the run")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Chrome trace-event JSON here after the "
+                         "run (open in Perfetto / chrome://tracing)")
     args = ap.parse_args()
+    observer = (EngineObserver()
+                if args.metrics_out or args.trace_out else None)
 
     models = {n: get_smoke_config(n) for n in PAPER_COLOC_SET}
 
@@ -119,7 +126,8 @@ def main():
         slab_bytes=slab_bytes, max_batch=4, max_ctx=64,
         mode=EngineMode(pipeline=True, lowering=True),
         elastic=ElasticConfig(window_s=max(args.horizon, 4.0))
-        if args.elastic else None)
+        if args.elastic else None,
+        observer=observer)
     reqs = trace_mod.make_requests(
         list(models), rps_per_model=args.rps, horizon_s=args.horizon,
         kind="sharegpt", scale_tokens=0.05, max_new_cap=args.max_new)
@@ -167,6 +175,14 @@ def main():
     assert all(r.params is None for r in engine.runners.values() if r.paged), \
         "a paged runner still holds a full param tree"
     assert stats.tokens_out > 0
+    if observer is not None:
+        if args.metrics_out:
+            observer.metrics.write(args.metrics_out)
+            print(f"metrics -> {args.metrics_out}")
+        if args.trace_out:
+            observer.tracer.write(args.trace_out)
+            print(f"trace -> {args.trace_out} "
+                  f"({len(observer.tracer.events)} events)")
     print("serve_multi_model OK")
 
 

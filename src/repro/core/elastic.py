@@ -85,6 +85,9 @@ class ElasticRebalancer:
         self.skipped_cooldown = 0
         self.skipped_no_signal = 0
         self.aborted = 0
+        # optional observability sink (core.hooks.CoreHooks); fires once
+        # per APPLIED decision, after both pools finished resizing
+        self.hooks = None
 
     # ------------------------------------------------------------------
     # floors and clamps
@@ -266,6 +269,8 @@ class ElasticRebalancer:
             reason="kv_demand" if new_pages > cur_pages
             else "weight_demand")
         self.events.append(decision)
+        if self.hooks is not None:
+            self.hooks.rebalance(decision)
         return decision
 
     # ------------------------------------------------------------------

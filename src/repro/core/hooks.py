@@ -1,0 +1,69 @@
+"""Observability hook points for the core pool layer (DESIGN.md §10).
+
+The pools (``virtualizer``, ``weight_pool``), the admission controller
+and the elastic rebalancer each hold an optional ``hooks`` attribute.
+When it is ``None`` (the default) every hook site is a single
+``is not None`` check — the disabled path does no calls and no
+allocations.  When a :class:`CoreHooks` implementation is attached
+(``runtime.observe.EngineObserver`` is the canonical one), the core
+layer reports its state transitions WITHOUT importing anything from the
+runtime layer — this module is the whole dependency surface.
+
+Hook ordering guarantees (what an implementation may rely on):
+
+  * hooks fire AFTER the state change they describe has fully applied
+    (counters read through the owning object are already consistent);
+  * hooks fire on the engine host thread, never from inside a jitted
+    program — implementations may allocate and may raise only at the
+    cost of aborting the step;
+  * a hook is never invoked with a zero-sized change (``kv_swap_out(0)``
+    etc. are elided at the call site).
+"""
+from __future__ import annotations
+
+
+class CoreHooks:
+    """No-op base: every method is a hook point, override what you need."""
+
+    # --- KV virtualizer (swap tier + reserve/commit + live resize) -----
+    def kv_swap_out(self, pages: int) -> None:
+        """``pages`` page rows moved device -> host swap tier."""
+
+    def kv_swap_in(self, pages: int) -> None:
+        """``pages`` page rows faulted host -> device (``ensure_resident``)."""
+
+    def kv_reserved(self, pages: int) -> None:
+        """``pages`` pre-mapped for a decode block (``reserve_decode_block``)."""
+
+    def kv_trimmed(self, pages: int) -> None:
+        """Unused reserved ``pages`` returned (``commit_decode_block``)."""
+
+    def kv_resize(self, old_pages: int, new_pages: int,
+                  swapped_out: int, moved: int) -> None:
+        """The page pool was live-resized (elastic boundary move)."""
+
+    # --- weights arena -------------------------------------------------
+    def arena_activate(self, model: str, slabs: int) -> None:
+        """A cold model's ``slabs`` were mapped into the arena."""
+
+    def arena_evict(self, model: str, slabs: int) -> None:
+        """A resident model's ``slabs`` were returned to the free list."""
+
+    def arena_upload(self, model: str, slabs: int) -> None:
+        """``slabs`` slab rows were uploaded host -> device."""
+
+    def arena_resize(self, old_slots: int, new_slots: int,
+                     evicted: int, moved: int) -> None:
+        """The arena was live-resized (elastic boundary move)."""
+
+    # --- admission front door ------------------------------------------
+    def admission(self, model: str, outcome: str, blocker: str) -> None:
+        """One admission verdict: ``outcome`` in admitted/queued/rejected,
+        ``blocker`` in ''/'pages'/'weights' (what deferred a queue)."""
+
+    def admission_wait(self, model: str, seconds: float) -> None:
+        """A queued request drained after ``seconds`` at the front door."""
+
+    # --- elastic rebalancer --------------------------------------------
+    def rebalance(self, decision) -> None:
+        """One applied boundary move (a ``RebalanceDecision``)."""

@@ -231,6 +231,9 @@ class KVVirtualizer:
         self.swap_in_pages = 0
         self.resizes = 0
         self.swapped_now = 0           # entries currently in the host tier
+        # optional observability sink (core.hooks.CoreHooks); every hook
+        # fires AFTER the matching stat counter above has been updated
+        self.hooks = None
 
     # ------------------------------------------------------------------
     # accounting
@@ -375,6 +378,8 @@ class KVVirtualizer:
             tab.extend(pages[layer * delta:(layer + 1) * delta])
         req.rev = self._next_rev()
         self.touch(request_id)
+        if self.hooks is not None:
+            self.hooks.kv_reserved(len(pages))
         return len(pages)
 
     def commit_decode_block(self, request_id: int, n_committed: int) -> int:
@@ -415,6 +420,8 @@ class KVVirtualizer:
         self.unmap_events += trimmed
         req.rev = self._next_rev()
         self.touch(request_id)
+        if self.hooks is not None and trimmed:
+            self.hooks.kv_trimmed(trimmed)
         return trimmed
 
     def release_request(self, request_id: int) -> None:
@@ -490,6 +497,8 @@ class KVVirtualizer:
         req.n_swapped += len(victims)
         self.swapped_now += len(victims)
         self.swap_out_pages += len(victims)
+        if self.hooks is not None:
+            self.hooks.kv_swap_out(len(victims))
         return len(victims)
 
     def ensure_resident(self, request_id: int) -> int:
@@ -519,6 +528,8 @@ class KVVirtualizer:
         self.swapped_now -= len(entries)
         self.swap_in_pages += len(entries)
         self.touch(request_id)
+        if self.hooks is not None:
+            self.hooks.kv_swap_in(len(entries))
         return len(entries)
 
     def swap_out_idle(self, need: int, protected=()) -> int:
@@ -567,6 +578,8 @@ class KVVirtualizer:
                 + self.free_list
             self.page_budget = new_budget
             self.resizes += 1
+            if self.hooks is not None:
+                self.hooks.kv_resize(old_budget, new_budget, 0, 0)
             return {"page_budget": new_budget, "swapped_out": 0, "moved": 0}
 
         # --- shrink ----------------------------------------------------
@@ -601,6 +614,8 @@ class KVVirtualizer:
         self.free_list = list(range(new_budget - 1, k - 1, -1))
         self.page_budget = new_budget
         self.resizes += 1
+        if self.hooks is not None:
+            self.hooks.kv_resize(old_budget, new_budget, swapped, k)
         return {"page_budget": new_budget, "swapped_out": swapped,
                 "moved": k}
 

@@ -311,6 +311,9 @@ class WeightArena:
         self.evictions = 0
         self.layer_uploads = 0
         self.resizes = 0
+        # optional observability sink (core.hooks.CoreHooks); every hook
+        # fires AFTER the matching stat counter above has been updated
+        self.hooks = None
 
     # ------------------------------------------------------------------
     # registration / allocation
@@ -470,6 +473,8 @@ class WeightArena:
         self.residency[name] = res
         self.activations += 1
         self.touch(name)
+        if self.hooks is not None:
+            self.hooks.arena_activate(name, view.total_slabs)
         if upload:
             self.ensure_model_uploaded(name)
         return res
@@ -486,6 +491,8 @@ class WeightArena:
         self.free_list.extend(int(s) for s in res.slots.ravel())
         self._table_cache.pop(name, None)
         self.evictions += 1
+        if self.hooks is not None:
+            self.hooks.arena_evict(name, res.slots.size)
 
     # ------------------------------------------------------------------
     # elastic boundary: live resize (DESIGN.md §8)
@@ -518,6 +525,8 @@ class WeightArena:
                 + self.free_list
             self.slot_budget = new_budget
             self.resizes += 1
+            if self.hooks is not None:
+                self.hooks.arena_resize(old_budget, new_budget, 0, 0)
             return {"slot_budget": new_budget, "evicted": 0, "moved": 0}
 
         # --- shrink: evict idle LRU until the survivors fit -------------
@@ -555,6 +564,8 @@ class WeightArena:
         self.free_list = list(range(new_budget - 1, k - 1, -1))
         self.slot_budget = new_budget
         self.resizes += 1
+        if self.hooks is not None:
+            self.hooks.arena_resize(old_budget, new_budget, evicted, k)
         return {"slot_budget": new_budget, "evicted": evicted, "moved": k}
 
     # ------------------------------------------------------------------
@@ -569,6 +580,9 @@ class WeightArena:
                                         jnp.asarray(rows))
         res.uploaded[layers] = True
         self.layer_uploads += len(layers)
+        if self.hooks is not None:
+            self.hooks.arena_upload(
+                name, len(layers) * self.views[name].slabs_per_layer)
 
     def prefetch_layer(self, name: str, layer: int) -> None:
         """Issue (async) the upload of one layer's slabs; no-op if already

@@ -5,7 +5,10 @@
 
 Host-scale runs colocate the paper's model trio at smoke scale and report
 decode TBT percentiles + pool statistics; --dry-run lowers the production
-serve_step for an (arch x shape) cell instead.
+serve_step for an (arch x shape) cell instead.  ``--metrics-out`` /
+``--trace-out`` attach an :class:`~repro.runtime.observe.EngineObserver`
+and write Prometheus metrics / a Perfetto-loadable Chrome trace
+(DESIGN.md §10) — CI's observability smoke step runs exactly that.
 """
 from __future__ import annotations
 
@@ -33,6 +36,12 @@ def main(argv: Optional[list] = None) -> None:
     ap.add_argument("--decode-steps", type=int, default=1,
                     help="K tokens committed per fused decode dispatch "
                          "(DESIGN.md §9; host-driven lowering clamps to 1)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write Prometheus-text metrics here after serving "
+                         "(DESIGN.md §10)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write Chrome trace-event JSON here after serving "
+                         "(open in Perfetto / chrome://tracing)")
     args = ap.parse_args(argv)
 
     if args.dry_run:
@@ -46,13 +55,16 @@ def main(argv: Optional[list] = None) -> None:
     from repro.configs import PAPER_COLOC_SET, get_smoke_config
     from repro.runtime import trace as trace_mod
     from repro.runtime.engine import CrossPoolEngine, EngineMode
-    from repro.runtime.request import percentile
+    from repro.runtime.observe import EngineObserver, percentile
 
+    observer = (EngineObserver()
+                if args.metrics_out or args.trace_out else None)
     models = {n: get_smoke_config(n) for n in PAPER_COLOC_SET}
     engine = CrossPoolEngine(
         models, page_budget=args.page_budget, max_batch=4, max_ctx=128,
         mode=EngineMode(pipeline=args.pipeline, lowering=args.lowering,
-                        decode_steps_per_dispatch=args.decode_steps))
+                        decode_steps_per_dispatch=args.decode_steps),
+        observer=observer)
     reqs = trace_mod.make_requests(
         list(models), rps_per_model=args.rps, horizon_s=args.horizon,
         kind="sharegpt", scale_tokens=0.1, max_new_cap=args.max_new)
@@ -68,6 +80,14 @@ def main(argv: Optional[list] = None) -> None:
     print(f"admission: {engine.admission.stats}")
     print(f"pool: {engine.virt.utilization()}")
     print(f"straggler steps flagged: {stats.slow_steps}")
+    if observer is not None:
+        if args.metrics_out:
+            observer.metrics.write(args.metrics_out)
+            print(f"metrics -> {args.metrics_out}")
+        if args.trace_out:
+            observer.tracer.write(args.trace_out)
+            print(f"trace -> {args.trace_out} "
+                  f"({len(observer.tracer.events)} events)")
 
 
 if __name__ == "__main__":

@@ -80,6 +80,7 @@ from repro.core.virtualizer import (DEFAULT_PAGE_BYTES, KVVirtualizer,
                                     OutOfPagesError)
 from repro.core.weight_pool import DEFAULT_SLAB_BYTES, OutOfSlabsError
 from repro.models import build_model
+from repro.runtime.observe import EngineObserver, MetricsRegistry
 from repro.runtime.request import Phase, Request
 from repro.runtime.sampler import sample
 from repro.runtime.session import (HandleState, PrefillBatcher, PrefillGroup,
@@ -462,7 +463,8 @@ class CrossPoolEngine:
                  max_batch: int = 4, max_ctx: int = 256,
                  mode: Optional[EngineMode] = None, seed: int = 0,
                  slow_step_factor: float = 4.0,
-                 elastic: Optional[ElasticConfig] = None):
+                 elastic: Optional[ElasticConfig] = None,
+                 observer: Optional[EngineObserver] = None):
         self.models = models
         self.mode = mode or EngineMode()
         self.rng = np.random.default_rng(seed)
@@ -497,6 +499,20 @@ class CrossPoolEngine:
         # arena-aware admission: cold-model bursts queue at the front door
         # instead of thrashing the arena LRU between admitted models
         self.admission = AdmissionController(self.virt, arena=self.arena)
+        # observability (DESIGN.md §10): the observer is OPTIONAL — every
+        # step-loop site is guarded by ``observer is not None`` so the
+        # disabled path allocates and calls nothing — but a lightweight
+        # metrics registry is always on (it backs ``report()``'s
+        # structured-event lines); with an observer the engine shares its
+        # registry, so /metrics and report() read the same counters.
+        self.observer = observer
+        self.metrics = (observer.metrics if observer is not None
+                        else MetricsRegistry())
+        if observer is not None:
+            self.virt.hooks = observer
+            if self.arena is not None:
+                self.arena.hooks = observer
+            self.admission.hooks = observer
         # elastic boundary (DESIGN.md §8): windowed demand telemetry +
         # step-boundary KV<->weights repartitioning.  Telemetry observes
         # even with rebalancing disabled IF a config is passed; both stay
@@ -504,10 +520,13 @@ class CrossPoolEngine:
         self.telemetry: Optional[DemandTelemetry] = None
         self.rebalancer: Optional[ElasticRebalancer] = None
         if elastic is not None and self.arena is not None:
-            self.telemetry = DemandTelemetry(models, elastic)
+            self.telemetry = DemandTelemetry(models, elastic,
+                                             gauges=observer)
             self.rebalancer = ElasticRebalancer(
                 self.virt, self.arena, admission=self.admission,
                 telemetry=self.telemetry, cfg=elastic, seed=seed)
+            if observer is not None:
+                self.rebalancer.hooks = observer
 
         self.host_steps = None
         self.scheduler = None
@@ -549,7 +568,7 @@ class CrossPoolEngine:
 
         # --- session state -------------------------------------------------
         self.now = 0.0
-        self.batcher = PrefillBatcher()
+        self.batcher = PrefillBatcher(observer=observer)
         self.handles: Dict[int, RequestHandle] = {}
         self.waiting: List[Request] = []     # admitted, no batch slot yet
         self._submitted: Dict[int, Request] = {}
@@ -590,6 +609,8 @@ class CrossPoolEngine:
         handle = RequestHandle(request=req, admission=outcome, state=state,
                                on_token=on_token, _engine=self)
         self.handles[req.request_id] = handle
+        if self.observer is not None:
+            self.observer.request_submitted(req, outcome)
         return handle
 
     def step(self, now: Optional[float] = None) -> List[TokenEvent]:
@@ -600,9 +621,14 @@ class CrossPoolEngine:
             self.now = max(self.now, float(now))
         self._events = []
         self._in_step = True
+        obs = self.observer
+        if obs is not None:
+            obs.step_begin(self.now)
         try:
             self._step_phases()
         finally:
+            if obs is not None:
+                obs.step_end()
             self._in_step = False
             deferred, self._deferred_cancels = self._deferred_cancels, []
             for handle in deferred:     # reentrant cancels, now safe
@@ -610,21 +636,36 @@ class CrossPoolEngine:
         return self._events
 
     def _drain_front_door(self) -> None:
+        obs = self.observer
         for p in self.admission.drain(self.now):
             req = self._submitted[p.request_id]
             req.admit_time = self.now
             self.handles[req.request_id].state = HandleState.ADMITTED
             self.waiting.append(req)
+            if obs is not None:
+                obs.request_admitted(req)
 
     def _step_phases(self) -> None:
+        obs = self.observer
         # --- drain the front-door queue (resources freed last step) ------
+        if obs is not None:
+            obs.phase_begin("admission_drain")
         self._drain_front_door()
+        if obs is not None:
+            obs.phase_end("admission_drain")
+            obs.phase_begin("batcher")
 
         # --- prefill: coalesce admitted arrivals into [B, S] groups ------
         groups, self.waiting = self.batcher.plan(
             self.waiting, self.runners, self.rng, self._try_activate)
+        if obs is not None:
+            obs.phase_end("batcher")
         if groups:
+            if obs is not None:
+                obs.phase_begin("prefill")
             self.now = self._prefill_groups(groups, self.now)
+            if obs is not None:
+                obs.phase_end("prefill")
 
         # --- decode: one step per active model ---------------------------
         active = [n for n, r in self.runners.items() if r.active]
@@ -635,20 +676,32 @@ class CrossPoolEngine:
                 self.now = self._decode_model(n, self.now)
 
         # --- completions -------------------------------------------------
+        if obs is not None:
+            obs.phase_begin("completions")
         for n, runner in self.runners.items():
             for slot, req in enumerate(runner.slots):
                 if req is not None and req.done:
                     runner.release(slot)
                     self._finish(req, self.now)
+        if obs is not None:
+            obs.phase_end("completions")
+            obs.phase_begin("rebalance")
 
         # --- elastic boundary (step-boundary ONLY: no batch is in flight,
         #     so page tables and slot tables can remap atomically) --------
         self._observe_and_rebalance()
+        if obs is not None:
+            obs.phase_end("rebalance")
 
     def _observe_and_rebalance(self) -> None:
         """Fold this step into the telemetry window and let the
         rebalancer repartition the device-byte boundary if the windowed
         Eq. (1)-(2) estimate says so (DESIGN.md §8)."""
+        if self.observer is not None:
+            # gauges refresh BEFORE telemetry folds its EWMAs, so the
+            # gauge-fed fold sees THIS step's occupancy/queue values
+            self.observer.sample(self.virt, self.arena, self.admission,
+                                 len(self.waiting))
         if self.telemetry is None:
             return
         self.telemetry.observe(self.now, self.virt, self.arena,
@@ -691,6 +744,17 @@ class CrossPoolEngine:
             # a grow that frees room for queued-only load would be
             # followed by the loop breaking before its next drain)
             self._drain_front_door()
+            # the registry's bounded event log is report()'s ONLY source
+            # for move lines, so text report and exported metrics agree
+            self.metrics.log_event(
+                "rebalance", step=decision.step, time=decision.now,
+                page_budget=(decision.old_page_budget,
+                             decision.new_page_budget),
+                slot_budget=(decision.old_slot_budget,
+                             decision.new_slot_budget),
+                swapped_out=decision.swapped_out,
+                evicted_models=decision.evicted_models,
+                reason=decision.reason)
             self.stats.rebalance_events.append(RebalanceEvent(
                 step=decision.step, time=decision.now,
                 page_budget=(decision.old_page_budget,
@@ -751,6 +815,8 @@ class CrossPoolEngine:
         req.finish_time = self.now
         handle.state = HandleState.CANCELLED
         self.stats.cancelled += 1
+        if self.observer is not None:
+            self.observer.request_cancelled(req)
         return True
 
     def drain(self, *, max_steps: int = 10_000) -> EngineStats:
@@ -799,6 +865,8 @@ class CrossPoolEngine:
                 del self.handles[rid]
                 del self._submitted[rid]
         self._window.clear()
+        if self.observer is not None:
+            self.observer.reset_window()
         return self.stats
 
     # ------------------------------------------------------------------
@@ -902,6 +970,8 @@ class CrossPoolEngine:
         handle = self.handles.get(req.request_id)
         if handle is not None:
             handle.state = HandleState.FINISHED
+        if self.observer is not None:
+            self.observer.request_finished(req)
 
     # ------------------------------------------------------------------
     def report(self) -> str:
@@ -950,13 +1020,16 @@ class CrossPoolEngine:
                     f"aborted {int(r['aborted'])}); live split "
                     f"{int(r['page_budget'])} pages / "
                     f"{int(r['slot_budget'])} slabs")
-                for e in self.stats.rebalance_events[-3:]:
+                # rendered from the registry's event log (NOT EngineStats
+                # lists), so this text can never disagree with /metrics
+                for e in self.metrics.recent_events("rebalance", 3):
                     lines.append(
-                        f"  move @step {e.step}: pages "
-                        f"{e.page_budget[0]}->{e.page_budget[1]}, slabs "
-                        f"{e.slot_budget[0]}->{e.slot_budget[1]} "
-                        f"({e.reason}, swapped {e.swapped_out}, "
-                        f"evicted {e.evicted_models})")
+                        f"  move @step {e['step']}: pages "
+                        f"{e['page_budget'][0]}->{e['page_budget'][1]}, "
+                        f"slabs {e['slot_budget'][0]}->"
+                        f"{e['slot_budget'][1]} "
+                        f"({e['reason']}, swapped {e['swapped_out']}, "
+                        f"evicted {e['evicted_models']})")
         if self.arena is not None:
             w = self.arena.utilization()
             lines.append(
@@ -976,6 +1049,10 @@ class CrossPoolEngine:
         if len(log) > 8 and dt > np.median(log) * 4.0:
             self.stats.slow_steps += 1     # straggler flag
         log.append(dt)
+        if self.observer is not None:
+            # same per-model attribution as step_times, so the exported
+            # dispatch histogram mirrors the stats log exactly
+            self.observer.decode_dispatch(name, dt)
 
     def _host_step(self, name: str) -> Optional[HostDrivenStep]:
         if self.host_steps is None:
@@ -1000,14 +1077,22 @@ class CrossPoolEngine:
         cost — at K=1 this degenerates to the seed's ``start + dt``.
         Streaming callbacks fire per token, preserving the K=1 contract.
         """
+        obs = self.observer
         for i in act:
             req = runner.slots[i]
             n = int(counts[i])
+            if obs is not None and n:
+                obs.decode_block(req, n, dt)
             for t in range(n):
                 tok = int(toks[i, t])
                 req.generated += 1
                 req.output_ids.append(tok)
                 when = start + dt * (t + 1) / n
+                if obs is not None:
+                    # the same pairwise gap tbt_samples() reconstructs —
+                    # the shared TBT histogram and EngineStats.tbt hold
+                    # identical values
+                    obs.token(req, when - req.token_times[-1])
                 req.token_times.append(when)
                 self.stats.tokens_out += 1
                 if req.eos_id is not None and tok == req.eos_id:
@@ -1023,6 +1108,8 @@ class CrossPoolEngine:
         req.generated += 1
         self.stats.tokens_out += 1
         self.stats.ttft.append(now - req.arrival_time)
+        if self.observer is not None:
+            self.observer.first_token(req, now - req.arrival_time)
         handle = self.handles.get(req.request_id)
         if handle is not None:
             handle.state = HandleState.DECODING
@@ -1057,7 +1144,10 @@ class CrossPoolEngine:
             runner = self.runners[g.model]
             t0 = time.perf_counter()
             runner.prefill_group(g)
-            now += time.perf_counter() - t0
+            dt = time.perf_counter() - t0
+            now += dt
+            if self.observer is not None:
+                self.observer.prefill(g.model, g.batch_size, dt)
             for req in g.requests:
                 self._book_first_token(req, now)
         return now
@@ -1071,11 +1161,14 @@ class CrossPoolEngine:
         done, pool = self.scheduler.run(batches, self.virt.pool,
                                         max_inflight=2)
         self.virt.pool = pool
-        now += time.perf_counter() - t0
+        dt = time.perf_counter() - t0
+        now += dt
         by_model = {g.model: g for g in groups}
         for b in done:
             g = by_model[b.model]
             self.runners[b.model].apply_prefill_result(b, g)
+            if self.observer is not None:
+                self.observer.prefill(g.model, g.batch_size, dt)
             for req in g.requests:
                 self._book_first_token(req, now)
         return now
@@ -1085,8 +1178,17 @@ class CrossPoolEngine:
     # ------------------------------------------------------------------
     def _decode_model(self, name: str, now: float) -> float:
         runner = self.runners[name]
+        obs = self.observer
         t0 = time.perf_counter()
-        toks, counts, act = runner.decode_once(self._host_step(name))
+        if obs is not None:
+            obs.phase_begin("dispatch")
+        pending = runner.issue_decode(self._host_step(name))
+        if obs is not None:
+            obs.phase_end("dispatch")
+            obs.phase_begin("commit")
+        toks, counts, act = runner.commit_decode(pending)
+        if obs is not None:
+            obs.phase_end("commit")
         dt = time.perf_counter() - t0
         self._record_step(name, dt)
         self._book_tokens(runner, toks, counts, act, now, dt)
@@ -1102,21 +1204,32 @@ class CrossPoolEngine:
         models' attention/FFN stages across the two pools (paper Fig. 4)."""
         if not self.mode.lowering:
             return self._decode_pipelined_host(active, now)
+        obs = self.observer
         t0 = time.perf_counter()
+        if obs is not None:
+            obs.phase_begin("dispatch")
         issued = [(n, self.runners[n].issue_decode(None)) for n in active]
+        if obs is not None:
+            obs.phase_end("dispatch")
+            obs.phase_begin("commit")
         dt_all = 0.0
         for n, pending in issued:
             runner = self.runners[n]
             toks, counts, act = runner.commit_decode(pending)
             dt_all = time.perf_counter() - t0
             self._book_tokens(runner, toks, counts, act, now, dt_all)
+        if obs is not None:
+            obs.phase_end("commit")
         for n in active:
             self._record_step(n, dt_all / len(active))
         return now + dt_all
 
     def _decode_pipelined_host(self, active: List[str], now: float) -> float:
         """Layer-wise two-batch pipeline over the disaggregated pools."""
+        obs = self.observer
         t0 = time.perf_counter()
+        if obs is not None:
+            obs.phase_begin("dispatch")
         paged = [n for n in active if self.runners[n].paged]
         fallback = [n for n in active if not self.runners[n].paged]
         batches, acts = [], {}
@@ -1128,11 +1241,16 @@ class CrossPoolEngine:
                                         max_inflight=2)
         self.virt.pool = pool
         dt_all = time.perf_counter() - t0
+        if obs is not None:
+            obs.phase_end("dispatch")
+            obs.phase_begin("commit")
         for b in done:
             runner = self.runners[b.model]
             toks, counts, act = runner.apply_pipeline_result(b, acts[b.model])
             self._book_tokens(runner, toks, counts, act, now, dt_all)
             self._record_step(b.model, dt_all / max(len(paged), 1))
+        if obs is not None:
+            obs.phase_end("commit")
         now += dt_all
         for n in fallback:          # families outside split execution
             now = self._decode_model(n, now)

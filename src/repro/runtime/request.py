@@ -48,8 +48,7 @@ class Request:
         return self.eos_seen or self.generated >= self.max_new_tokens
 
 
-def percentile(values: List[float], q: float) -> float:
-    if not values:
-        return float("nan")
-    import numpy as np
-    return float(np.percentile(np.asarray(values), q))
+# canonical quantile lives in runtime.observe (one implementation for
+# benchmarks, reports and the metrics histograms); re-exported here for
+# the many existing ``from repro.runtime.request import percentile`` sites
+from repro.runtime.observe import percentile  # noqa: E402,F401

@@ -191,6 +191,12 @@ class PrefillBatcher:
     batched, or interleaved through the pipeline scheduler).
     """
 
+    def __init__(self, observer=None):
+        # optional runtime.observe.EngineObserver: counts WHY a waiting
+        # request was deferred this step (batch slots full vs. residency
+        # gate) — None is the zero-overhead default
+        self.observer = observer
+
     def plan(self, waiting: List[Request], runners: Dict[str, object],
              rng: np.random.Generator,
              try_activate: Callable[[Request], bool]
@@ -204,14 +210,19 @@ class PrefillBatcher:
         groups: Dict[Tuple[str, int], PrefillGroup] = {}
         still: List[Request] = []
         taken: Dict[str, int] = {}
+        obs = self.observer
         for req in waiting:
             runner = runners[req.model]
             free = sum(1 for s in runner.slots if s is None)
             if free == 0 or taken.get(req.model, 0) >= free:
                 still.append(req)
+                if obs is not None:
+                    obs.batcher_deferral(req.model, "slots")
                 continue
             if not try_activate(req):
                 still.append(req)
+                if obs is not None:
+                    obs.batcher_deferral(req.model, "residency")
                 continue
             taken[req.model] = taken.get(req.model, 0) + 1
             bucket = prompt_bucket(req.prompt_tokens, runner.max_ctx)
