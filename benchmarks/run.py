@@ -20,7 +20,8 @@ import numpy as np
 from benchmarks import (elastic_burst, fig1b_kv_accumulation,
                         fig2_kv_availability, fig6_context_scalability,
                         fig7_tbt, kernels_bench, multistep_decode,
-                        online_tbt, table1_weight_breakdown, table3_ablation)
+                        multiturn_cache, online_tbt,
+                        table1_weight_breakdown, table3_ablation)
 
 BENCHES = {
     "fig1b": fig1b_kv_accumulation.run,
@@ -33,6 +34,7 @@ BENCHES = {
     "online": online_tbt.run,
     "elastic": elastic_burst.run,
     "multistep": multistep_decode.run,
+    "multiturn": multiturn_cache.run,
 }
 
 

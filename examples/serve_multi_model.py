@@ -16,7 +16,8 @@ import argparse
 
 import numpy as np
 
-from repro.configs import ElasticConfig, PAPER_COLOC_SET, get_smoke_config
+from repro.configs import (ElasticConfig, EngineConfig, PAPER_COLOC_SET,
+                           get_smoke_config)
 from repro.core.planner import (WorkloadSpec, plan_pool, split_device_budget,
                                 worst_case_pages, worst_case_weight_bytes)
 from repro.core.weight_pool import slabs_for_config
@@ -124,9 +125,10 @@ def main():
         models, page_budget=page_budget,
         page_bytes=4096, slot_budget=dev_plan.slot_budget,
         slab_bytes=slab_bytes, max_batch=4, max_ctx=64,
-        mode=EngineMode(pipeline=True, lowering=True),
-        elastic=ElasticConfig(window_s=max(args.horizon, 4.0))
-        if args.elastic else None,
+        config=EngineConfig(
+            mode=EngineMode(pipeline=True, lowering=True),
+            elastic=ElasticConfig(window_s=max(args.horizon, 4.0))
+            if args.elastic else None),
         observer=observer)
     reqs = trace_mod.make_requests(
         list(models), rps_per_model=args.rps, horizon_s=args.horizon,

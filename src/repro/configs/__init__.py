@@ -10,7 +10,9 @@ from typing import Dict, Tuple
 
 from repro.configs.base import (  # noqa: F401  (re-export)
     DEFAULT_DECODE_STEPS_PER_DISPATCH,
+    CacheConfig,
     ElasticConfig,
+    EngineConfig,
     MLAConfig,
     ModelConfig,
     SHAPES,

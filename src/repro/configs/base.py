@@ -346,6 +346,54 @@ class ElasticConfig:
 
 
 # ---------------------------------------------------------------------------
+# Prefix caching (DESIGN.md §11)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class CacheConfig:
+    """Knobs for the radix-tree prefix cache over the shared KV pool.
+
+    Pure data, interpreted by ``repro.core.prefix_cache`` and the engine.
+    Disabled by default: with ``enabled=False`` the engine is byte-for-byte
+    the pre-cache engine (no tree, no refcounts, no extra device work).
+
+    ``max_pages_fraction`` bounds the DEVICE pages the tree may retain
+    beyond live requests (as a fraction of the live page budget); inserts
+    past the bound evict LRU leaves first.  ``second_chance`` reuses the
+    elastic host swap tier as a second-chance cache tier: pages evicted
+    from the device are swapped out instead of dropped, and a later match
+    faults them back bit-exactly instead of re-prefilling.
+    """
+
+    enabled: bool = False
+    max_pages_fraction: float = 0.5
+    second_chance: bool = True
+
+
+# ---------------------------------------------------------------------------
+# Unified engine construction surface
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class EngineConfig:
+    """One bundle for ``CrossPoolEngine(config=...)`` — the canonical
+    construction surface (the loose ``mode=`` / ``elastic=`` kwargs that
+    accreted across PRs 4-7 remain as deprecated aliases for one release).
+
+    ``mode`` is the engine's ``EngineMode`` (held loosely typed here so the
+    config layer stays import-free of the runtime); ``elastic`` enables the
+    online KV<->weights rebalancer; ``cache`` configures the radix-tree
+    prefix cache.  ``None`` fields mean "engine default".
+    """
+
+    mode: Optional[object] = None            # runtime.engine.EngineMode
+    elastic: Optional[ElasticConfig] = None
+    cache: Optional[CacheConfig] = None
+
+
+# ---------------------------------------------------------------------------
 # Input shapes (assigned shape set)
 # ---------------------------------------------------------------------------
 

@@ -17,7 +17,9 @@ from __future__ import annotations
 
 import collections
 from dataclasses import dataclass, field
-from typing import Deque, Dict, List
+from typing import Deque, Dict, List, Optional
+
+import numpy as np
 
 from repro.core.virtualizer import KVVirtualizer
 from repro.core.weight_pool import OutOfSlabsError
@@ -31,6 +33,18 @@ class PendingRequest:
     expected_output: int
     arrival_time: float
     enqueue_time: float = 0.0
+    # prefix-cache admission inputs (DESIGN.md §11): the engine fills
+    # ``prompt_ids`` (real token content — synthetic prompts stay None and
+    # are silently cache-cold), ``cache`` (the request's opt-out) and
+    # ``bucket`` (the prompt's prefill bucket, the cache key's shape half)
+    prompt_ids: Optional[np.ndarray] = None
+    cache: bool = True
+    bucket: int = 0
+    # prefix-cache admission OUTPUTS (set by ``try_admit`` on success):
+    # the fork point (cached tokens mapped from the tree) and the cached
+    # prefix's captured per-token MoE routing [fork, L, k] (None = dense)
+    cached_tokens: int = 0
+    prefix_routes: Optional[np.ndarray] = None
 
 
 @dataclass
@@ -88,6 +102,11 @@ class AdmissionController:
         # reservation).  Verdicts always read the LIVE budgets — the pool
         # objects are resized in place — and this reserve on top of them.
         self.reserve_pages: int = 0
+        # prefix cache (core.prefix_cache.PrefixCache) — when attached,
+        # ``try_admit`` becomes cache-aware: cached tokens cost zero new
+        # pages, cached-but-swapped tokens cost fault-in pages, and the
+        # verdict still honors ``reserve_pages``
+        self.cache = None
         self.stats = AdmissionStats()
         # optional observability sink (core.hooks.CoreHooks); hook calls
         # mirror the ``stats.bump`` sites one-for-one, so the exported
@@ -161,18 +180,88 @@ class AdmissionController:
         Admission takes the request's arena PIN (released by ``finish``),
         so from this moment the model's weights can never be picked as an
         LRU eviction victim — including the window between admission and
-        the prefill that makes the model resident."""
+        the prefill that makes the model resident.
+
+        With a prefix cache attached, a cache-eligible request first
+        probes the tree: the matched prefix's device-resident full
+        chunks become a page-count DISCOUNT (they map read-only, costing
+        zero new pages), swapped chunks keep their cold cost (fault-in
+        takes a fresh page each) and a swapped copy-on-write SOURCE adds
+        a surcharge on top.  Only after the discounted verdict AND the
+        weights check pass does the request fault swapped chunks in and
+        register with the shared mapping."""
         expect = req.expected_output if self.reserve_output else 0
-        if not self.virt.can_admit(req.model, req.prompt_tokens, expect,
-                                   reserve=self.reserve_pages):
+        cache = self.cache
+        view = self.virt.views.get(req.model)
+        eligible = (cache is not None and req.cache
+                    and req.prompt_ids is not None
+                    and view is not None and view.n_kv_layers > 0
+                    and 0 < req.prompt_tokens <= req.bucket)
+        fork, nodes, n_full, rem, discount = 0, [], 0, 0, 0
+        if eligible:
+            matched, nodes = cache.match_prefix(req.model, req.bucket,
+                                                req.prompt_ids)
+            # keep at least one uncached token: the suffix pass is what
+            # produces the first output logits
+            fork = min(matched, req.prompt_tokens - 1)
+            if fork > 0 and self.virt.configs[req.model].is_moe and any(
+                    n.routes is None for n in nodes):
+                fork = 0      # MoE needs the routing to replay exactly
+            if fork > 0:
+                L = view.n_kv_layers
+                tpp = view.tokens_per_page
+                n_full, rem = fork // tpp, fork % tpp
+
+        def _discount() -> int:
+            if fork == 0:
+                return 0
+            resident_full = sum(
+                1 for n in nodes[:n_full] if not n.swapped)
+            cow_swapped = rem and nodes[n_full].swapped
+            return view.n_kv_layers * resident_full \
+                - (view.n_kv_layers if cow_swapped else 0)
+
+        discount = _discount()
+        deficit = self.virt.admission_deficit(
+            req.model, req.prompt_tokens, expect,
+            reserve=self.reserve_pages, discount_pages=discount)
+        if deficit > 0 and cache is not None:
+            # the tree's refcount-0 LRU pages are reclaimable capacity:
+            # shed them (to the second-chance swap tier when enabled)
+            # before letting cache retention queue a request the
+            # cache-off engine would have admitted.  Shedding may swap
+            # chunks this very match relies on, so the discount is
+            # recomputed from the nodes' live state before the re-check.
+            cache.shed(deficit)
+            discount = _discount()
+            deficit = self.virt.admission_deficit(
+                req.model, req.prompt_tokens, expect,
+                reserve=self.reserve_pages, discount_pages=discount)
+        if deficit > 0:
             self._last_block = "pages"
             return False
         if not self._weights_pressure_ok(req.model):
             self._last_block = "weights"
             return False
         self._last_block = ""
-        self.virt.register_request(req.request_id, req.model,
-                                   req.prompt_tokens)
+        if fork > 0:
+            used = nodes[:n_full + (1 if rem else 0)]
+            cache.fault_chunks(used)
+            self.virt.register_request_with_prefix(
+                req.request_id, req.model, req.prompt_tokens,
+                [n.pages for n in nodes[:n_full]],
+                nodes[n_full].pages if rem else None)
+            routes = [n.routes for n in used]
+            if routes and all(r is not None for r in routes):
+                req.prefix_routes = np.concatenate(routes, axis=0)[:fork]
+        else:
+            self.virt.register_request(req.request_id, req.model,
+                                       req.prompt_tokens)
+        req.cached_tokens = fork
+        if eligible:
+            # fires once per successful registration — queued-retry
+            # probes that fail the budget never double-count
+            cache.record_admission(req.model, req.prompt_tokens, fork)
         self.inflight[req.model] += 1
         if self.arena is not None and req.model in self.arena.views:
             self.arena.pin(req.model)

@@ -164,8 +164,24 @@ class StreamingPrefill:
             self._ffn = jax.jit(fns.ffn_stage)
             self._combine = jax.jit(fns.combine)
             self._logits = jax.jit(fns.prefill_logits)
+        # prefix-cache programs (DESIGN.md §11) are StreamingPrefill-local
+        # in BOTH lowering modes: suffix shapes depend on the fork point,
+        # never on the decode lowering, so there is nothing to share
+        fns = pooled.stage_fns
+        self._suffix_attn = None
+        self._suffix_ffn = None
+        self._route = None
+        if getattr(fns, "suffix_attn", None) is not None:
+            self._suffix_attn = jax.jit(fns.suffix_attn, static_argnums=(5,))
+            self._suffix_ffn = jax.jit(fns.suffix_ffn, static_argnums=(5,))
+        if getattr(fns, "prefill_route", None) is not None:
+            self._route = jax.jit(fns.prefill_route)
+        #: per-layer routing of the last captured prompt pass:
+        #: np.ndarray [S, L, k] (None when not captured / dense)
+        self.captured_routes = None
 
-    def __call__(self, tokens, true_len, pool, writer=None
+    def __call__(self, tokens, true_len, pool, writer=None, *,
+                 capture_routes: bool = False
                  ) -> Tuple[jax.Array, jax.Array]:
         """tokens [B,S] prompt ids; ``true_len`` the unpadded length whose
         last position's logits are returned — a host int shared by every
@@ -179,6 +195,9 @@ class StreamingPrefill:
         p_kv = self.pooled.kv_params
         arena.activate(name, upload=False)
         arena.prefetch_layer(name, 0)        # first FFN never stalls
+        captured = [] if (capture_routes and self._route is not None) \
+            else None
+        self.captured_routes = None
         x = self._embed(p_kv, tokens)
         for layer in range(fns.n_layers):
             x, ffn_in, layer_kv = self._attn(p_kv, x, layer)
@@ -189,12 +208,82 @@ class StreamingPrefill:
                 pool = writer(layer, layer_kv, pool)
             if self.w_device is not None:
                 ffn_in = transfer(ffn_in, self.w_device)     # A-to-F
+            if captured is not None:
+                captured.append(self._route(
+                    arena.arena, arena.slot_table(name), ffn_in, layer))
             ffn_out = self._ffn(arena.arena, arena.slot_table(name),
                                 ffn_in, layer)
             if self.kv_device is not None:
                 ffn_out = transfer(ffn_out, self.kv_device)  # F-to-A
             x = self._combine(x, ffn_out)
+        if captured is not None:
+            # [L][B=1,S,k] -> [S, L, k] (the prefix tree's per-token axis);
+            # ONE device_get at the end — a per-layer np.asarray would
+            # sync the dispatch pipeline once per layer
+            self.captured_routes = np.stack(
+                [c[0] for c in jax.device_get(captured)], axis=1)
         return self._logits(p_kv, x, logit_index(true_len)), pool
+
+    def suffix(self, tokens, true_suffix_len, fork, kv_extent, prefix_rows,
+               pool, writer=None, slot_offsets=None, capacity: int = 0,
+               capture_routes: bool = False) -> Tuple[jax.Array, jax.Array]:
+        """Prefill ONLY the uncached suffix of a prompt (DESIGN.md §11).
+
+        tokens: [1, S_suf] suffix ids zero-padded to the suffix bucket;
+        ``true_suffix_len`` the unpadded suffix length (logits row);
+        ``fork`` the cached-prefix length; ``kv_extent`` the PRODUCING
+        pass's prefill bucket — the static KV reduction extent;
+        ``prefix_rows``: the ``[n_kv_layers, fork, *kv_shape]`` device
+        stack from ``KVVirtualizer.gather_prompt_rows`` (per-layer rows
+        are sliced inside the jitted attention stage);
+        ``writer(layer, layer_kv, pool)`` scatters suffix KV starting at
+        token offset ``fork``; ``slot_offsets`` ([L, E] int32) the
+        prefix's per-layer routed-pair counts and ``capacity`` the
+        producing pass's expert capacity (MoE only).  Suffix groups are
+        B=1 singletons.  Returns (logits [1, V], pool).
+
+        The host loop is kept dispatch-lean on purpose — warm-turn TTFT
+        is this loop: prefix rows and slot offsets upload ONCE (layer
+        extraction happens in-program) and captured routes come back in
+        one ``device_get`` at the end.
+        """
+        assert self._suffix_attn is not None, "model has no suffix path"
+        name = self.pooled.cfg.name
+        arena = self.pooled.arena
+        fns = self.pooled.stage_fns
+        p_kv = self.pooled.kv_params
+        arena.activate(name, upload=False)
+        arena.prefetch_layer(name, 0)
+        B, S_suf = tokens.shape
+        positions = jnp.broadcast_to(
+            jnp.arange(S_suf, dtype=jnp.int32)[None, :] + jnp.int32(fork),
+            (B, S_suf))
+        off_all = None if slot_offsets is None else \
+            jnp.asarray(np.asarray(slot_offsets, np.int32))
+        captured = [] if (capture_routes and self._route is not None) \
+            else None
+        self.captured_routes = None
+        x = self._embed(p_kv, tokens)
+        for layer in range(fns.n_layers):
+            x, ffn_in, layer_kv = self._suffix_attn(
+                p_kv, x, prefix_rows, positions, layer, int(kv_extent))
+            arena.prefetch_layer(name, layer + 1)
+            if writer is not None:
+                pool = writer(layer, layer_kv, pool)
+            if self.w_device is not None:
+                ffn_in = transfer(ffn_in, self.w_device)
+            if captured is not None:
+                captured.append(self._route(
+                    arena.arena, arena.slot_table(name), ffn_in, layer))
+            ffn_out = self._suffix_ffn(arena.arena, arena.slot_table(name),
+                                       ffn_in, layer, off_all, int(capacity))
+            if self.kv_device is not None:
+                ffn_out = transfer(ffn_out, self.kv_device)
+            x = self._combine(x, ffn_out)
+        if captured is not None:
+            self.captured_routes = np.stack(
+                [c[0] for c in jax.device_get(captured)], axis=1)
+        return self._logits(p_kv, x, logit_index(true_suffix_len)), pool
 
 
 class PagedFusedStep:

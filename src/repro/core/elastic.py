@@ -88,6 +88,11 @@ class ElasticRebalancer:
         # optional observability sink (core.hooks.CoreHooks); fires once
         # per APPLIED decision, after both pools finished resizing
         self.hooks = None
+        # optional prefix cache (core.prefix_cache.PrefixCache): its
+        # hit-token fraction discounts the re-plan's KV demand — cached
+        # prompt tokens map shared tree pages at zero marginal cost
+        # (DESIGN.md §11)
+        self.cache = None
 
     # ------------------------------------------------------------------
     # floors and clamps
@@ -204,11 +209,15 @@ class ElasticRebalancer:
             self.skipped_no_signal += 1
             return None
         try:
+            cached_frac = 0.0
+            if self.cache is not None and self.cache.prompt_tokens_seen:
+                cached_frac = (self.cache.hit_tokens
+                               / self.cache.prompt_tokens_seen)
             plan = replan_split(
                 specs, self.total_bytes, page_bytes=self.virt.page_bytes,
                 slab_bytes=self.arena.slab_bytes if self.arena else 0,
                 quantile=cfg.quantile, window_s=cfg.window_s,
-                seed=self.seed)
+                seed=self.seed, cached_token_fraction=cached_frac)
         except (ValueError, ZeroDivisionError):
             self.skipped_no_signal += 1
             return None

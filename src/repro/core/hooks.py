@@ -64,6 +64,22 @@ class CoreHooks:
     def admission_wait(self, model: str, seconds: float) -> None:
         """A queued request drained after ``seconds`` at the front door."""
 
+    # --- prefix cache (DESIGN.md §11) ----------------------------------
+    def cache_hit(self, model: str, tokens: int) -> None:
+        """A cache-eligible admission reused ``tokens`` cached prompt
+        tokens (fires once per admitted request with a non-empty match)."""
+
+    def cache_miss(self, model: str) -> None:
+        """A cache-eligible admission found no reusable prefix."""
+
+    def cache_evict(self, pages: int) -> None:
+        """``pages`` device pages left the tree's hold (LRU eviction, or
+        a shed to the second-chance swap tier)."""
+
+    def cache_fault(self, pages: int) -> None:
+        """``pages`` shed pages faulted back from the swap tier on a
+        second-chance hit."""
+
     # --- elastic rebalancer --------------------------------------------
     def rebalance(self, decision) -> None:
         """One applied boundary move (a ``RebalanceDecision``)."""

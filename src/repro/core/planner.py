@@ -17,6 +17,7 @@ paper's stated reason for Monte Carlo over closed forms).
 """
 from __future__ import annotations
 
+import dataclasses
 import math
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence
@@ -272,7 +273,8 @@ def replan_split(specs: Sequence[WorkloadSpec], total_bytes: int, *,
                  slab_bytes: int = DEFAULT_SLAB_BYTES,
                  quantile: float = 0.95, window_s: float = 30.0,
                  residency_s: Optional[float] = None,
-                 coresident: int = 1, seed: int = 0) -> DeviceBytesPlan:
+                 coresident: int = 1, seed: int = 0,
+                 cached_token_fraction: float = 0.0) -> DeviceBytesPlan:
     """Windowed ONLINE re-run of the Eq. (1)-(2) split (DESIGN.md §8).
 
     Same machinery as :func:`split_device_budget`, parameterized for the
@@ -284,8 +286,20 @@ def replan_split(specs: Sequence[WorkloadSpec], total_bytes: int, *,
     extra estimator variance.  Deterministic for a fixed ``seed`` and
     fixed specs, which is what makes rebalance decisions replayable on a
     recorded trace.
+
+    ``cached_token_fraction`` makes the re-plan prefix-cache aware
+    (DESIGN.md §11): that fraction of observed prompt tokens was served
+    from SHARED radix-tree pages at zero marginal page cost, so each
+    spec's prompt demand is scaled down by it before the split — a
+    cache-heavy window frees device bytes for the weights side instead
+    of re-reserving KV the tree already holds once.
     """
     horizon = max(4.0 * window_s, 20.0)
+    f = min(max(cached_token_fraction, 0.0), 0.95)
+    if f > 0.0:
+        specs = [dataclasses.replace(
+            s, prompt_tokens=np.maximum(s.prompt_tokens * (1.0 - f), 1.0))
+            for s in specs]
     return split_device_budget(
         specs, total_bytes, page_bytes=page_bytes, slab_bytes=slab_bytes,
         quantile=quantile, horizon_s=horizon,

@@ -1,0 +1,419 @@
+"""Radix-tree prefix cache over the shared KV pool (DESIGN.md §11).
+
+The sglang ``match_prefix`` / ``prefix_indices`` idiom applied to the
+CrossPool virtualizer: committed prompt KV stays in the tree after the
+producing request finishes, keyed by token content, and a later request
+with the same prefix maps those pages READ-ONLY instead of re-prefilling
+them.  The tree is the MemServe "context caching over an elastic memory
+pool" layer on top of the PR-5 swap tier.
+
+Layout:
+
+  * one trie per ``(model, prefill bucket)``.  The bucket is part of the
+    key because the prefill program's shapes — attention reduction
+    extent AND MoE expert capacity — are bucket-determined; only a
+    same-bucket consumer reproduces the producer's prefix KV and routing
+    bit-for-bit (the suffix pass pads its KV extent back to the bucket,
+    see ``split_exec``).
+  * a node is exactly ``tokens_per_page`` tokens (ONE chunk: the same
+    page of every layer), keyed by its token tuple; each node also
+    carries PARTIAL tail leaves (< tokens_per_page tokens) for prompts
+    that end mid-page.  Node payload: per-layer page ids, the captured
+    MoE routing of its tokens (consumers rebuild full-pass expert-slot
+    offsets from it), an LRU stamp, and the swapped/resident state
+    implied by the page-id encoding.
+  * sharing is by refcount: ``insert`` RETAINS the producing request's
+    pages (``KVVirtualizer.retain_page``); a matching consumer retains
+    full chunks read-only and copies the boundary chunk (copy-on-write
+    at the fork point, ``register_request_with_prefix``).  Pages free
+    only at refcount 0 — eviction of a leaf whose pages a live request
+    still maps just drops the tree's hold.
+  * eviction is LRU-by-leaf.  With ``second_chance`` on, a shed leaf's
+    pages move to the host swap tier instead of being dropped — the
+    PR-5 tier doubling as a second-chance cache — and a later match
+    faults them back bit-exactly (``fault_chunks``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.configs.base import CacheConfig
+from repro.core.virtualizer import _SWAP_BASE, KVVirtualizer
+
+
+@dataclass
+class _Chunk:
+    """One radix-tree node: a page-granular run of prompt tokens."""
+
+    tokens: Tuple[int, ...]
+    pages: List[int] = field(default_factory=list)   # [layer] id / swap-enc
+    routes: Optional[np.ndarray] = None              # [n_tokens, L, k] int32
+    children: Dict[Tuple[int, ...], "_Chunk"] = field(default_factory=dict)
+    partials: List["_Chunk"] = field(default_factory=list)
+    parent: Optional["_Chunk"] = None
+    last_touch: int = 0
+
+    @property
+    def n_tokens(self) -> int:
+        return len(self.tokens)
+
+    @property
+    def swapped(self) -> bool:
+        return bool(self.pages) and self.pages[0] <= _SWAP_BASE
+
+    @property
+    def is_leaf(self) -> bool:
+        return not self.children and not self.partials
+
+
+def _lcp(a: Sequence[int], b: Sequence[int]) -> int:
+    n = min(len(a), len(b))
+    for i in range(n):
+        if a[i] != b[i]:
+            return i
+    return n
+
+
+class PrefixCache:
+    """The engine-owned prefix index; registers itself as the
+    virtualizer's ``cache_provider`` so shrink-compaction and idle swap
+    see tree-held pages."""
+
+    def __init__(self, virt: KVVirtualizer, cfg: Optional[CacheConfig] = None,
+                 models: Optional[Sequence[str]] = None):
+        self.virt = virt
+        self.cfg = cfg or CacheConfig()
+        # cacheable = split-execution models only (their prompt KV lives
+        # in pool pages); fallback families always miss
+        self.models = set(models if models is not None else virt.views)
+        self._roots: Dict[Tuple[str, int], _Chunk] = {}
+        # device page ids the tree currently holds (kept in lockstep with
+        # node.pages): the compaction provider view and the cap metric
+        self._device_pages: set = set()
+        self._clock = 0
+        # stats (report + benchmark)
+        self.hits = 0
+        self.misses = 0
+        self.hit_tokens = 0
+        self.prompt_tokens_seen = 0
+        self.inserted_chunks = 0
+        self.evicted_pages = 0
+        self.shed_pages = 0
+        self.faulted_pages = 0
+        # optional observability sink (core.hooks.CoreHooks)
+        self.hooks = None
+        virt.cache_provider = self
+
+    # ------------------------------------------------------------------
+    # provider protocol (KVVirtualizer.cache_provider)
+    # ------------------------------------------------------------------
+    def device_pages(self) -> List[int]:
+        """Tree-held device page ids, deterministic order (compaction)."""
+        return sorted(self._device_pages)
+
+    def remap(self, mapping: Dict[int, int]) -> None:
+        """Apply a shrink-compaction's old->new page renumbering."""
+        for node in self._walk():
+            node.pages = [mapping[p] if p >= 0 else p for p in node.pages]
+        self._device_pages = {mapping[p] for p in self._device_pages}
+
+    def shed(self, need: int) -> int:
+        """Free ``need`` device pages by retiring refcount-0 LRU leaves
+        first (then older interior runs): with ``second_chance`` their
+        pages move to the host swap tier and the nodes stay matchable;
+        otherwise they are evicted outright.  Returns pages freed."""
+        freed = 0
+        for node in self._lru_candidates():
+            if freed >= need:
+                break
+            if node.swapped or not node.pages:
+                continue
+            if any(self.virt.page_refs(p) > 1 for p in node.pages):
+                continue            # a live request still maps this chunk
+            n = len(node.pages)
+            if self.cfg.second_chance:
+                self._device_pages.difference_update(node.pages)
+                node.pages = self.virt.swap_pages_out(node.pages)
+                self.shed_pages += n
+            else:
+                if not node.is_leaf:
+                    continue
+                self._drop_node(node)
+                self.evicted_pages += n
+            freed += n
+            if self.hooks is not None:
+                self.hooks.cache_evict(n)
+        return freed
+
+    # ------------------------------------------------------------------
+    # match / fault / insert / evict
+    # ------------------------------------------------------------------
+    def match_prefix(self, model: str, bucket: int, ids: np.ndarray
+                     ) -> Tuple[int, List[_Chunk]]:
+        """Longest cached prefix of ``ids`` under ``(model, bucket)``:
+        (matched token count, the chunk nodes covering it in order).
+        The last chunk may cover the match only partially (its page
+        becomes the consumer's copy-on-write source).  Does NOT fault
+        swapped chunks — the caller decides after its budget check."""
+        root = self._roots.get((model, bucket))
+        if root is None or model not in self.models:
+            return 0, []
+        tpp = self.virt.views[model].tokens_per_page
+        ids = [int(t) for t in np.asarray(ids).reshape(-1)]
+        node, matched, out = root, 0, []
+        while len(ids) - matched >= tpp:
+            key = tuple(ids[matched:matched + tpp])
+            child = node.children.get(key)
+            if child is None:
+                break
+            out.append(child)
+            matched += tpp
+            self._touch(child)
+            node = child
+        # best partial continuation: an exact-prefix partial tail OR the
+        # leading slots of a diverging full chunk (both CoW sources)
+        rest = ids[matched:matched + tpp]
+        best, best_node = 0, None
+        for key, child in node.children.items():
+            l = _lcp(key, rest)
+            if l > best:
+                best, best_node = l, child
+        for p in node.partials:
+            l = _lcp(p.tokens, rest)
+            if l > best:
+                best, best_node = l, p
+        if best_node is not None:
+            out.append(best_node)
+            matched += best
+            self._touch(best_node)
+        return matched, out
+
+    def fault_chunks(self, chunks: Sequence[_Chunk]) -> int:
+        """Fault any swapped chunks' pages back onto the device (the
+        second-chance hit path); returns pages faulted.  Atomic per
+        chunk (one ``fault_pages_in`` each, which raises before mutating
+        on page exhaustion)."""
+        n = 0
+        for node in chunks:
+            if not node.swapped:
+                continue
+            node.pages = self.virt.fault_pages_in(node.pages)
+            self._device_pages.update(node.pages)
+            n += len(node.pages)
+        if n:
+            self.faulted_pages += n
+            if self.hooks is not None:
+                self.hooks.cache_fault(n)
+        return n
+
+    def record_admission(self, model: str, prompt_tokens: int,
+                         cached_tokens: int) -> None:
+        """Count one cache-eligible admission (fired AFTER registration
+        succeeded, so queued-retry probes never double-count)."""
+        self.prompt_tokens_seen += prompt_tokens
+        if cached_tokens > 0:
+            self.hits += 1
+            self.hit_tokens += cached_tokens
+            if self.hooks is not None:
+                self.hooks.cache_hit(model, cached_tokens)
+        else:
+            self.misses += 1
+            if self.hooks is not None:
+                self.hooks.cache_miss(model)
+
+    def insert(self, model: str, bucket: int, ids: np.ndarray,
+               chunk_pages: Sequence[Sequence[int]],
+               routes: Optional[np.ndarray] = None) -> int:
+        """Index a committed prompt: walk/create full-chunk nodes over
+        ``ids`` and retain the producing request's pages for every NEW
+        node (the request keeps its own hold; pages free when the last
+        holder lets go).  ``chunk_pages[c][layer]`` is the request's
+        page-table entry for chunk ``c``; ``routes`` is the captured
+        per-token MoE routing ``[len(ids), L, k]`` (None for dense).
+
+        A sub-page tail becomes a partial leaf: it REPLACES an existing
+        partial that is a strict prefix of it (superset wins), is
+        skipped when an existing partial already covers it, and
+        coexists with diverging partials.  Returns new chunks created.
+        """
+        if model not in self.models or len(ids) == 0:
+            return 0
+        tpp = self.virt.views[model].tokens_per_page
+        ids = [int(t) for t in np.asarray(ids).reshape(-1)]
+        root = self._roots.setdefault((model, bucket), _Chunk(tokens=()))
+        n_full, rem = len(ids) // tpp, len(ids) % tpp
+        node, created, path = root, 0, []
+        for c in range(n_full):
+            key = tuple(ids[c * tpp:(c + 1) * tpp])
+            child = node.children.get(key)
+            if child is None:
+                child = _Chunk(
+                    tokens=key, pages=list(chunk_pages[c]),
+                    routes=None if routes is None
+                    else np.asarray(routes[c * tpp:(c + 1) * tpp]),
+                    parent=node)
+                for p in child.pages:
+                    self.virt.retain_page(p)
+                self._device_pages.update(child.pages)
+                node.children[key] = child
+                created += 1
+            self._touch(child)
+            path.append(child)
+            node = child
+        if rem:
+            tail = tuple(ids[n_full * tpp:])
+            covered = None
+            for p in node.partials:
+                if p.n_tokens >= rem and p.tokens[:rem] == tail:
+                    covered = p
+                    break
+            if covered is not None:
+                self._touch(covered)
+                path.append(covered)
+            else:
+                # superset wins: drop any existing partial this tail
+                # strictly extends (its pages stay with live holders)
+                for p in list(node.partials):
+                    if p.n_tokens < rem and tail[:p.n_tokens] == p.tokens:
+                        self._release_node_pages(p)
+                        node.partials.remove(p)
+                leaf = _Chunk(
+                    tokens=tail, pages=list(chunk_pages[n_full]),
+                    routes=None if routes is None
+                    else np.asarray(routes[n_full * tpp:]),
+                    parent=node)
+                for p in leaf.pages:
+                    self.virt.retain_page(p)
+                self._device_pages.update(leaf.pages)
+                node.partials.append(leaf)
+                created += 1
+                self._touch(leaf)
+                path.append(leaf)
+        self.inserted_chunks += created
+        self._enforce_cap(protect=set(id(n) for n in path))
+        return created
+
+    def evict(self, need_pages: int, protect: Optional[set] = None) -> int:
+        """Drop LRU leaves outright until ``need_pages`` device pages
+        left the tree's hold (refcount-0 pages actually free; shared
+        ones survive with their requests).  Returns pages released."""
+        protect = protect or set()
+        dropped = 0
+        progress = True
+        while dropped < need_pages and progress:
+            progress = False
+            for node in self._lru_candidates(leaves_only=True):
+                if dropped >= need_pages:
+                    break
+                if id(node) in protect:
+                    continue
+                n_dev = sum(1 for p in node.pages if p >= 0)
+                self._drop_node(node)
+                dropped += n_dev
+                self.evicted_pages += n_dev
+                if n_dev and self.hooks is not None:
+                    self.hooks.cache_evict(n_dev)
+                progress = True
+        return dropped
+
+    # ------------------------------------------------------------------
+    @property
+    def device_pages_held(self) -> int:
+        return len(self._device_pages)
+
+    def snapshot(self) -> Dict[str, float]:
+        return {
+            "hits": float(self.hits),
+            "misses": float(self.misses),
+            "hit_tokens": float(self.hit_tokens),
+            "prompt_tokens_seen": float(self.prompt_tokens_seen),
+            "hit_token_fraction": (
+                self.hit_tokens / self.prompt_tokens_seen
+                if self.prompt_tokens_seen else 0.0),
+            "inserted_chunks": float(self.inserted_chunks),
+            "device_pages_held": float(self.device_pages_held),
+            "evicted_pages": float(self.evicted_pages),
+            "shed_pages": float(self.shed_pages),
+            "faulted_pages": float(self.faulted_pages),
+        }
+
+    # ------------------------------------------------------------------
+    # internals
+    # ------------------------------------------------------------------
+    def _touch(self, node: _Chunk) -> None:
+        self._clock += 1
+        node.last_touch = self._clock
+
+    def _walk(self) -> List[_Chunk]:
+        out: List[_Chunk] = []
+        stack = list(self._roots.values())
+        while stack:
+            n = stack.pop()
+            if n.tokens:
+                out.append(n)
+            stack.extend(n.children.values())
+            stack.extend(n.partials)
+        return out
+
+    def _lru_candidates(self, leaves_only: bool = False) -> List[_Chunk]:
+        """Nodes in retirement order: LRU leaves first, then LRU interior
+        nodes (an interior chunk is only shed after everything below it)."""
+        nodes = self._walk()
+        leaves = sorted((n for n in nodes if n.is_leaf),
+                        key=lambda n: n.last_touch)
+        if leaves_only:
+            return leaves
+        inner = sorted((n for n in nodes if not n.is_leaf),
+                       key=lambda n: n.last_touch)
+        return leaves + inner
+
+    def _release_node_pages(self, node: _Chunk) -> None:
+        for p in node.pages:
+            if p >= 0:
+                self._device_pages.discard(p)
+            self.virt.release_cached_page(p)
+        node.pages = []
+
+    def _drop_node(self, node: _Chunk) -> None:
+        """Remove a LEAF node from the tree, releasing its page holds."""
+        assert node.is_leaf, "only leaves are evictable"
+        self._release_node_pages(node)
+        parent = node.parent
+        if parent is not None:
+            parent.children.pop(node.tokens, None)
+            if node in parent.partials:
+                parent.partials.remove(node)
+
+    def _enforce_cap(self, protect: set) -> None:
+        """Keep tree-held DEVICE pages under ``max_pages_fraction`` of the
+        live page budget: shed (second-chance) or evict LRU leaves,
+        never touching the path just inserted."""
+        cap = int(self.cfg.max_pages_fraction * self.virt.page_budget)
+        guard = 0
+        while self.device_pages_held > cap and guard < 10_000:
+            guard += 1
+            before = self.device_pages_held
+            for node in self._lru_candidates():
+                if self.device_pages_held <= cap:
+                    break
+                if id(node) in protect or node.swapped or not node.pages:
+                    continue
+                if any(self.virt.page_refs(p) > 1 for p in node.pages):
+                    continue
+                n = len(node.pages)
+                if self.cfg.second_chance:
+                    self._device_pages.difference_update(node.pages)
+                    node.pages = self.virt.swap_pages_out(node.pages)
+                    self.shed_pages += n
+                else:
+                    if not node.is_leaf:
+                        continue
+                    self._drop_node(node)
+                    self.evicted_pages += n
+                if self.hooks is not None:
+                    self.hooks.cache_evict(n)
+            if self.device_pages_held == before:
+                break               # everything left is shared or protected

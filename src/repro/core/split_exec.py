@@ -27,7 +27,7 @@ paper's serving targets.
 """
 from __future__ import annotations
 
-from typing import Callable, Dict, NamedTuple, Tuple
+from typing import Callable, Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -60,6 +60,21 @@ class StageFns(NamedTuple):
     prefill_logits: Callable  # (params, x [B,S,D],
     #                           logit_index scalar | [B])      -> [B,V]
     n_layers: int
+    # prefix-cache suffix prefill (DESIGN.md §11): attention over
+    # (cached prefix KV ++ fresh suffix KV) at the producing pass's
+    # reduction extent, and the FFN with the producing pass's expert
+    # capacity + the prefix's routed-pair slot offsets
+    suffix_attn: Optional[Callable] = None
+    # (params, x [B,S_suf,D], prefix_rows [L, fork, *kv_shape],
+    #  positions [B,S_suf], layer, kv_extent static)
+    #                              -> (x_resid, ffn_input, layer_kv)
+    suffix_ffn: Optional[Callable] = None
+    # (arena, slot_table, ffn_input, layer, slot_offsets [L,E]|None,
+    #  capacity static)            -> ffn_out
+    prefill_route: Optional[Callable] = None
+    # (arena, slot_table, ffn_input, layer) -> experts [B,S,k]
+    #  (MoE only; recomputes the router's top-k choice so the prompt's
+    #   routing can be captured without touching the FFN program)
 
 
 def _layer_params(params: Dict, layer) -> Dict:
@@ -179,9 +194,71 @@ def make_stage_fns(cfg: ModelConfig, view: ModelView,
         x_last = layers.rms_norm(x_last, params["final_norm"], cfg.norm_eps)
         return layers.unembed(params["embed"], x_last)[:, 0]
 
+    # ---- prefix-cache suffix prefill (DESIGN.md §11) ---------------------
+    # Attention concatenates the cached prefix KV (gathered from the pool)
+    # with the suffix's fresh KV and pins the reduction extent to the
+    # PRODUCING pass's bucket; the FFN reuses the producing capacity with
+    # the prefix's routed-pair counts as slot offsets — together the
+    # suffix rows reproduce the full-prompt pass bit-for-bit at every
+    # consumed position.
+
+    def suffix_attn(params, x, prefix_rows, positions, layer, kv_extent):
+        # ``prefix_rows`` is the [L, fork, *kv_shape] stack from
+        # ``gather_prompt_rows``: the layer extraction and the K/V (or
+        # MLA latent/rope) split happen here, inside the compiled stage,
+        # so the host loop dispatches no eager slices per layer
+        p_l = _layer_params(params, layer)
+        rows = jax.lax.dynamic_index_in_dim(prefix_rows, layer, 0,
+                                            keepdims=False)
+        if cfg.attention == "mla":
+            r = cfg.mla.kv_lora_rank
+            prefix_a, prefix_b = rows[None, :, :r], rows[None, :, r:]
+        else:
+            prefix_a, prefix_b = rows[None, :, 0], rows[None, :, 1]
+        h = layers.rms_norm(x, p_l["ln1"], cfg.norm_eps)
+        if cfg.attention == "mla":
+            out, layer_kv = attn.mla_suffix(p_l["attn"], cfg, h, positions,
+                                            prefix_a, prefix_b, kv_extent)
+        else:
+            out, layer_kv = attn.gqa_suffix(p_l["attn"], cfg, h, positions,
+                                            prefix_a, prefix_b, kv_extent)
+        x = x + out
+        ffn_in = layers.rms_norm(x, p_l["ln2"], cfg.norm_eps)
+        return x, ffn_in, layer_kv
+
+    def suffix_ffn(arena, slot_table, ffn_in, layer, slot_offsets, capacity):
+        row = jax.lax.dynamic_index_in_dim(slot_table, layer, 0,
+                                           keepdims=False)
+        p_l = w_view.unpack_layer(arena, row)
+        if cfg.is_moe:
+            # suffix groups are B=1 singletons, so the plain (non-vmapped)
+            # dispatch is the bit-exact counterpart of the producing pass;
+            # slot_offsets is the [L, E] stack, sliced in-program
+            offset = None if slot_offsets is None else \
+                jax.lax.dynamic_index_in_dim(slot_offsets, layer, 0,
+                                             keepdims=False)
+            out, _ = moe_mod.apply_moe(p_l["moe"], ffn_in, cfg,
+                                       capacity=capacity,
+                                       slot_offset=offset)
+        else:
+            out = layers.apply_mlp(p_l["mlp"], ffn_in, cfg.mlp_kind)
+        return out
+
+    if cfg.is_moe:
+        def prefill_route(arena, slot_table, ffn_in, layer):
+            row = jax.lax.dynamic_index_in_dim(slot_table, layer, 0,
+                                               keepdims=False)
+            p_l = w_view.unpack_layer(arena, row)
+            B, S, d = ffn_in.shape
+            _, experts, _ = moe_mod.route(p_l["moe"], ffn_in.reshape(-1, d),
+                                          cfg)
+            return experts.reshape(B, S, cfg.experts_per_token)
+    else:
+        prefill_route = None
+
     return StageFns(embed, attn_stage, ffn_stage, combine, logits,
                     prefill_embed, prefill_attn, prefill_logits,
-                    cfg.n_layers)
+                    cfg.n_layers, suffix_attn, suffix_ffn, prefill_route)
 
 
 def split_params(params: Dict, cfg: ModelConfig) -> Tuple[Dict, Dict]:

@@ -174,6 +174,34 @@ def _pool_scatter(pool, kv_flat, pages, slots):
     return _POOL_SCATTER(pool, kv_flat, pages, slots)
 
 
+_PAIR_SCATTER = None
+
+
+def _pool_pair_scatter(pool, a, b, pages, slots, *, n_tokens, batch_index,
+                       mla):
+    """Slice one batch row out of a layer's ``(a, b)`` KV pair, pack it to
+    token rows, and scatter — ONE jitted dispatch with the pool donated.
+
+    The packing (slice to ``n_tokens``, MLA concat / GQA stack, flatten)
+    used to run as eager ops before the scatter; on the prefill path that
+    is several host dispatches PER LAYER, which is exactly the fixed
+    per-turn cost a cache-hit suffix prefill is trying to shed."""
+    global _PAIR_SCATTER
+    if _PAIR_SCATTER is None:
+        def _pack_write(pool, a, b, pages, slots, n_tokens, batch_index,
+                        mla):
+            a = a[batch_index, :n_tokens]
+            b = b[batch_index, :n_tokens]
+            kv = (jnp.concatenate([a, b], axis=-1) if mla
+                  else jnp.stack([a, b], axis=1))
+            return paged_kv_write(pool, kv.reshape(n_tokens, -1),
+                                  pages, slots)
+        _PAIR_SCATTER = jax.jit(_pack_write, static_argnums=(5, 6, 7),
+                                donate_argnums=donate_argnums(0))
+    return _PAIR_SCATTER(pool, a, b, pages, slots, n_tokens, batch_index,
+                         mla)
+
+
 def _pool_row_scatter(pool, ids, rows):
     """Scatter whole page rows (fault-in from the host swap tier)."""
     global _ROW_SCATTER
@@ -231,6 +259,15 @@ class KVVirtualizer:
         self.swap_in_pages = 0
         self.resizes = 0
         self.swapped_now = 0           # entries currently in the host tier
+        # per-page share counts for prefix-cached pages (DESIGN.md §11).
+        # Absent = refcount 1 (sole owner, the common case): the dict only
+        # holds pages currently shared between holders (requests and/or
+        # the prefix tree), so the cache-off path never touches it.
+        self._refs: Dict[int, int] = {}
+        # prefix-cache provider (core.prefix_cache.PrefixCache): owns
+        # device pages outside any request table, so shrink-compaction and
+        # idle swap must consult it (``device_pages``/``remap``/``shed``)
+        self.cache_provider = None
         # optional observability sink (core.hooks.CoreHooks); every hook
         # fires AFTER the matching stat counter above has been updated
         self.hooks = None
@@ -247,16 +284,62 @@ class KVVirtualizer:
         return len(self.free_list)
 
     def can_admit(self, model: str, prompt_tokens: int,
-                  expected_output: int = 0, reserve: int = 0) -> bool:
+                  expected_output: int = 0, reserve: int = 0,
+                  discount_pages: int = 0) -> bool:
         """``reserve`` pages are held back from admission — the elastic
         rebalancer's pressure signal (pages promised to a pending shrink
-        or kept as fault-in headroom for the swap tier)."""
+        or kept as fault-in headroom for the swap tier).
+
+        ``discount_pages`` is the prefix cache's net credit: pages the
+        request will map read-only from DEVICE-RESIDENT cached chunks
+        instead of taking from the free list.  Cached-but-swapped chunks
+        get no credit — their fault-in takes a fresh page each, exactly
+        like a cold chunk — and a swapped copy-on-write SOURCE makes the
+        value negative (its fault pages are on top of the cold-path
+        need), so the verdict still honors ``reserve``."""
+        return self.admission_deficit(model, prompt_tokens, expected_output,
+                                      reserve, discount_pages) == 0
+
+    def admission_deficit(self, model: str, prompt_tokens: int,
+                          expected_output: int = 0, reserve: int = 0,
+                          discount_pages: int = 0) -> int:
+        """Pages MISSING for this admission (0 = admissible).  The
+        admission controller uses the deficit as the prefix cache's shed
+        target: reclaiming that many refcount-0 tree pages makes the
+        request fit without touching any live request."""
         view = self.views[model]
         cfg = self.configs[model]
         need = view.pages_for(prompt_tokens + expected_output) if view.n_kv_layers \
             else 0
+        need = max(need - discount_pages, 0)
         need += math.ceil(cfg.state_bytes_per_request() / self.page_bytes)
-        return need <= self.free_pages - max(reserve, 0)
+        return max(need - (self.free_pages - max(reserve, 0)), 0)
+
+    # ------------------------------------------------------------------
+    # per-page refcounts (prefix sharing, DESIGN.md §11)
+    # ------------------------------------------------------------------
+    def page_refs(self, page: int) -> int:
+        return self._refs.get(page, 1)
+
+    def retain_page(self, page: int) -> None:
+        """Add one holder to a device page (prefix tree or a sharing
+        request); freshly ``_take``n pages carry an implicit refcount 1."""
+        assert page >= 0, f"cannot retain non-device entry {page}"
+        self._refs[page] = self._refs.get(page, 1) + 1
+
+    def _unref(self, page: int) -> bool:
+        """Drop one holder; True when the page is fully released (the
+        caller returns it to the free list) — a page is only ever freed
+        at refcount 0, never while another holder maps it."""
+        c = self._refs.get(page, 1) - 1
+        if c == 0:
+            self._refs.pop(page, None)
+            return True
+        if c == 1:
+            self._refs.pop(page, None)   # back to implicit sole owner
+        else:
+            self._refs[page] = c
+        return False
 
     # ------------------------------------------------------------------
     # slow path: map / unmap
@@ -300,6 +383,84 @@ class KVVirtualizer:
         self.requests[request_id] = req
         self.touch(request_id)
         return req
+
+    def register_request_with_prefix(
+            self, request_id: int, model: str, prompt_tokens: int,
+            shared_chunks: Sequence[Sequence[int]],
+            cow_chunk: Optional[Sequence[int]] = None) -> RequestPages:
+        """Map a request whose leading prompt chunks are already cached.
+
+        ``shared_chunks[c][layer]`` are device page ids of cached FULL
+        chunks mapped read-only (refcount +1 each); ``cow_chunk[layer]``
+        is the source of the partially-reused boundary chunk, copied
+        page-for-page into fresh pages (copy-on-write at the fork point:
+        the request appends suffix KV into its private copy while the
+        cached original stays immutable).  All ids must be
+        device-resident — the caller faults swapped chunks first.
+
+        Atomic like ``register_request``: all fresh pages (suffix chunks,
+        the CoW destination, SSM state) come from ONE ``_take``, and the
+        retains/copies happen only after it succeeds.
+        """
+        view = self.views[model]
+        cfg = self.configs[model]
+        L = view.n_kv_layers
+        chunks = math.ceil(max(prompt_tokens, 1) / view.tokens_per_page) \
+            if L else 0
+        n_shared = len(shared_chunks)
+        assert n_shared + (1 if cow_chunk is not None else 0) <= chunks, (
+            n_shared, chunks)
+        state_pages = math.ceil(cfg.state_bytes_per_request() / self.page_bytes)
+        fresh_per_layer = chunks - n_shared
+        pages = self._take(fresh_per_layer * L + state_pages)
+        req = RequestPages(request_id, model)
+        for layer in range(L):
+            fresh = pages[layer * fresh_per_layer:
+                          (layer + 1) * fresh_per_layer]
+            req.tables.append(
+                [shared_chunks[c][layer] for c in range(n_shared)] + fresh)
+        if state_pages:
+            req.state_pages = pages[L * fresh_per_layer:]
+        for c in range(n_shared):
+            for layer in range(L):
+                self.retain_page(shared_chunks[c][layer])
+        if cow_chunk is not None:
+            # chunk ``n_shared`` of every layer is the private boundary
+            # copy: one vectorized device row copy, byte-exact
+            srcs = [int(cow_chunk[layer]) for layer in range(L)]
+            dsts = [req.tables[layer][n_shared] for layer in range(L)]
+            assert all(s >= 0 for s in srcs), srcs
+            if self.pool is not None:
+                rows = _pool_row_gather(self.pool,
+                                        jnp.asarray(np.asarray(srcs, np.int32)))
+                self.pool = _pool_row_scatter(
+                    self.pool, jnp.asarray(np.asarray(dsts, np.int32)), rows)
+        req.tokens = prompt_tokens
+        req.rev = self._next_rev()
+        self.requests[request_id] = req
+        self.touch(request_id)
+        return req
+
+    def gather_prompt_rows(self, model: str, request_id: int,
+                           n_tokens: int) -> jax.Array:
+        """KV rows of tokens ``[0, n_tokens)`` for EVERY layer, read
+        through the request's own page table and stacked into one
+        ``[n_kv_layers, n_tokens, *kv_shape]`` device array.  One gather
+        for all layers: the suffix prefill is host-dispatch-bound, and
+        the per-layer rows are sliced INSIDE its jitted attention stage.
+        Shared pages are read in place (never copied)."""
+        view = self.views[model]
+        req = self.requests[request_id]
+        assert req.n_swapped == 0, (
+            f"request {request_id} has swapped pages; call ensure_resident "
+            f"before gathering prefix KV")
+        typed = self.typed_pages(model)
+        toks = np.arange(n_tokens)
+        chunk = toks // view.tokens_per_page
+        slots = (toks % view.tokens_per_page).astype(np.int32)
+        pages = np.stack([np.asarray(req.tables[layer], np.int32)[chunk]
+                          for layer in range(view.n_kv_layers)])
+        return typed[jnp.asarray(pages), jnp.asarray(slots)[None, :]]
 
     def pages_needed_for_extend(self, request_id: int,
                                 new_tokens: int = 1) -> int:
@@ -428,7 +589,10 @@ class KVVirtualizer:
         req = self.requests.pop(request_id)
         n = 0
         for _, _, page in req.device_entries():
-            self.free_list.append(page)
+            # prefix-shared pages survive until their LAST holder (other
+            # sharing requests or the prefix tree) drops them
+            if self._unref(page):
+                self.free_list.append(page)
             n += 1
         for _, _, slot in req.swapped_entries():
             self.swap_free.append(slot)
@@ -475,9 +639,11 @@ class KVVirtualizer:
         # first, so partial swaps shed the coldest KV across layers evenly
         for c in range(chunks):
             for layer in range(view.n_kv_layers):
-                if req.tables[layer][c] >= 0:
-                    victims.append((req.tables[layer], c,
-                                    req.tables[layer][c]))
+                p = req.tables[layer][c]
+                # prefix-shared pages never swap through a request: the
+                # other holders (tree / sharing requests) still read them
+                if p >= 0 and self.page_refs(p) == 1:
+                    victims.append((req.tables[layer], c, p))
         for i, p in enumerate(req.state_pages):
             if p >= 0:
                 victims.append((req.state_pages, i, p))
@@ -532,12 +698,76 @@ class KVVirtualizer:
             self.hooks.kv_swap_in(len(entries))
         return len(entries)
 
+    def swap_pages_out(self, pages: Sequence[int]) -> List[int]:
+        """Move table-less device pages (prefix-tree leaves) to the host
+        tier; returns their swapped encodings in order.
+
+        The caller guarantees every page is SOLE-owned by it (refcount 1
+        and in no request table) — the second-chance cache tier's shed
+        path.  Contents move with the page, so a later fault-in is
+        bit-exact."""
+        if not pages:
+            return []
+        assert all(p >= 0 and self.page_refs(p) == 1 for p in pages), pages
+        slots = self._swap_slots(len(pages))
+        if self.pool is not None:
+            ids = jnp.asarray(np.asarray(list(pages), np.int32))
+            rows = np.asarray(_pool_row_gather(self.pool, ids))
+            self.swap_buffer[np.asarray(slots)] = rows
+        for p in pages:
+            self.free_list.append(p)
+        self.swapped_now += len(pages)
+        self.swap_out_pages += len(pages)
+        if self.hooks is not None:
+            self.hooks.kv_swap_out(len(pages))
+        return [_swap_encode(s) for s in slots]
+
+    def fault_pages_in(self, encoded: Sequence[int]) -> List[int]:
+        """Fault host-tier pages back onto the device (second-chance
+        cache hit); returns the fresh device ids in order.  Atomic: ONE
+        ``_take``, so ``OutOfPagesError`` leaves the swap tier intact."""
+        if not encoded:
+            return []
+        assert all(e <= _SWAP_BASE for e in encoded), encoded
+        slots = [_swap_decode(e) for e in encoded]
+        pages = self._take(len(slots))
+        if self.pool is not None:
+            rows = self.swap_buffer[np.asarray(slots)].copy()
+            self.pool = _pool_row_scatter(
+                self.pool, jnp.asarray(np.asarray(pages, np.int32)),
+                jnp.asarray(rows))
+        self.swap_free.extend(slots)
+        self.swapped_now -= len(slots)
+        self.swap_in_pages += len(slots)
+        if self.hooks is not None:
+            self.hooks.kv_swap_in(len(slots))
+        return pages
+
+    def release_cached_page(self, entry: int) -> bool:
+        """Drop the prefix tree's hold on one table entry (device id or
+        swapped encoding); True when a DEVICE page was actually freed."""
+        if entry <= _SWAP_BASE:
+            self.swap_free.append(_swap_decode(entry))
+            self.swapped_now -= 1
+            return False
+        if self._unref(entry):
+            self.free_list.append(entry)
+            self.unmap_events += 1
+            return True
+        return False
+
     def swap_out_idle(self, need: int, protected=()) -> int:
         """Free ``need`` device pages by swapping the coldest pages of the
         longest-idle requests (skipping ``protected`` ids); returns how
-        many were actually freed."""
-        protected = set(protected)
+        many were actually freed.
+
+        The prefix cache sheds FIRST: its refcount-0 LRU leaves hold no
+        in-flight work, so an elastic shrink reclaims them (to the
+        second-chance swap tier) before touching any live request."""
         freed = 0
+        if self.cache_provider is not None and need > 0:
+            freed = self.cache_provider.shed(need)
+        protected = set(protected)
         order = sorted(self.requests.values(), key=lambda r: r.last_touch)
         for req in order:
             if freed >= need:
@@ -593,21 +823,35 @@ class KVVirtualizer:
                 f"still mapped after swapping {swapped} (protected "
                 f"requests hold too many pages)")
         # compact survivors into [0, new_budget): deterministic order —
-        # requests by id, then layer-major table order
+        # requests by id, then layer-major table order, then cache-held
+        # pages not in any table.  A prefix-shared page appears in many
+        # tables but moves ONCE (one new id for all holders).
         old_ids: List[int] = []
-        entries: List[Tuple[List[int], int]] = []
+        mapping: Dict[int, int] = {}
+        entries: List[Tuple[List[int], int, int]] = []
         for rid in sorted(self.requests):
             req = self.requests[rid]
             for tab, i, page in req.device_entries():
-                entries.append((tab, i))
-                old_ids.append(page)
+                entries.append((tab, i, page))
+                if page not in mapping:
+                    mapping[page] = len(old_ids)
+                    old_ids.append(page)
+        if self.cache_provider is not None:
+            for page in self.cache_provider.device_pages():
+                if page not in mapping:
+                    mapping[page] = len(old_ids)
+                    old_ids.append(page)
         k = len(old_ids)
         perm = np.zeros(new_budget, np.int32)
         perm[:k] = np.asarray(old_ids, np.int32) if k else []
         if self.pool is not None:
             self.pool = _pool_row_gather(self.pool, jnp.asarray(perm))
-        for new_id, (tab, i) in enumerate(entries):
-            tab[i] = new_id
+        for tab, i, page in entries:
+            tab[i] = mapping[page]
+        self._refs = {mapping[p]: c for p, c in self._refs.items()
+                      if p in mapping}
+        if self.cache_provider is not None:
+            self.cache_provider.remap(mapping)
         for req in self.requests.values():
             req.rev = self._next_rev()
         self._batch_cache.clear()
@@ -731,7 +975,8 @@ class KVVirtualizer:
 
     def write_prompt_layer(self, pool: jax.Array, model: str,
                            request_id: int, layer: int, layer_kv,
-                           n_tokens: int, batch_index: int = 0) -> jax.Array:
+                           n_tokens: int, batch_index: int = 0,
+                           start: int = 0) -> jax.Array:
         """Seed ONE layer's prompt KV from full-sequence attention outputs.
 
         ``layer_kv`` is the per-layer pair a streaming (layer-at-a-time)
@@ -743,21 +988,21 @@ class KVVirtualizer:
         Pure with respect to the pool: takes and returns the (donated)
         buffer instead of touching ``self.pool``, so a pipeline scheduler
         can thread it through interleaved prefill/decode stages.
+
+        ``start`` offsets the destination tokens: a cache-hit suffix
+        prefill computes KV only for tokens ``[fork, true_len)`` and
+        writes them at absolute positions starting at the fork
+        (DESIGN.md §11) — rows of ``layer_kv`` stay 0-based.
         """
         view = self.views[model]
         req = self.requests[request_id]
         a, b = layer_kv
-        if len(view.kv_shape) == 1:     # MLA: latent ++ rope on the last axis
-            kv = jnp.concatenate([a[batch_index, :n_tokens],
-                                  b[batch_index, :n_tokens]], axis=-1)
-        else:                           # GQA: [n, 2, KV, hd]
-            kv = jnp.stack([a[batch_index, :n_tokens],
-                            b[batch_index, :n_tokens]], axis=1)
-        flat = kv.reshape(n_tokens, view.per_token_elems)
-        toks = np.arange(n_tokens)
+        toks = np.arange(start, start + n_tokens)
         pages, slots = self._token_coords(req, view, toks, layer)
-        return _pool_scatter(pool, flat, jnp.asarray(pages),
-                             jnp.asarray(slots))
+        return _pool_pair_scatter(pool, a, b, jnp.asarray(pages),
+                                  jnp.asarray(slots), n_tokens=n_tokens,
+                                  batch_index=batch_index,
+                                  mla=len(view.kv_shape) == 1)
 
     def write_prompt_from_cache(self, model: str, request_id: int,
                                 cache: Dict, n_tokens: int,

@@ -15,6 +15,8 @@ from __future__ import annotations
 import argparse
 from typing import Optional
 
+import numpy as np
+
 
 def main(argv: Optional[list] = None) -> None:
     ap = argparse.ArgumentParser()
@@ -36,6 +38,11 @@ def main(argv: Optional[list] = None) -> None:
     ap.add_argument("--decode-steps", type=int, default=1,
                     help="K tokens committed per fused decode dispatch "
                          "(DESIGN.md §9; host-driven lowering clamps to 1)")
+    ap.add_argument("--cache", action="store_true",
+                    help="enable radix-tree prefix caching over the KV "
+                         "pool (DESIGN.md §11): trace requests get real "
+                         "prompt ids sharing a per-model system prefix, "
+                         "and the cache snapshot is reported")
     ap.add_argument("--metrics-out", default=None, metavar="PATH",
                     help="write Prometheus-text metrics here after serving "
                          "(DESIGN.md §10)")
@@ -53,6 +60,7 @@ def main(argv: Optional[list] = None) -> None:
         raise SystemExit(0 if rec.get("ok") else 1)
 
     from repro.configs import PAPER_COLOC_SET, get_smoke_config
+    from repro.configs.base import CacheConfig, EngineConfig
     from repro.runtime import trace as trace_mod
     from repro.runtime.engine import CrossPoolEngine, EngineMode
     from repro.runtime.observe import EngineObserver, percentile
@@ -62,12 +70,26 @@ def main(argv: Optional[list] = None) -> None:
     models = {n: get_smoke_config(n) for n in PAPER_COLOC_SET}
     engine = CrossPoolEngine(
         models, page_budget=args.page_budget, max_batch=4, max_ctx=128,
-        mode=EngineMode(pipeline=args.pipeline, lowering=args.lowering,
-                        decode_steps_per_dispatch=args.decode_steps),
+        config=EngineConfig(
+            mode=EngineMode(pipeline=args.pipeline, lowering=args.lowering,
+                            decode_steps_per_dispatch=args.decode_steps),
+            cache=CacheConfig(enabled=args.cache)),
         observer=observer)
     reqs = trace_mod.make_requests(
         list(models), rps_per_model=args.rps, horizon_s=args.horizon,
         kind="sharegpt", scale_tokens=0.1, max_new_cap=args.max_new)
+    if args.cache:
+        # synthetic trace counts are cache-ineligible by design; give each
+        # request REAL ids whose head is a per-model "system prompt" so
+        # same-bucket requests share a cacheable prefix
+        rng = np.random.default_rng(0)
+        system = {n: rng.integers(0, models[n].vocab_size, 64)
+                  .astype(np.int32) for n in models}
+        for r in reqs:
+            n = r.prompt_tokens
+            ids = np.concatenate([system[r.model][:n], rng.integers(
+                0, models[r.model].vocab_size, max(0, n - 64))])
+            r.prompt_ids = ids[:n].astype(np.int32)
     print(f"serving {len(reqs)} requests across {len(models)} cold models "
           f"(pipeline={args.pipeline}, lowering={args.lowering}, "
           f"decode_steps={args.decode_steps})")
@@ -79,6 +101,8 @@ def main(argv: Optional[list] = None) -> None:
           f"{percentile(stats.tbt, 99) * 1e3:.1f} ms")
     print(f"admission: {engine.admission.stats}")
     print(f"pool: {engine.virt.utilization()}")
+    if engine.cache is not None:
+        print(f"prefix cache: {engine.cache.snapshot()}")
     print(f"straggler steps flagged: {stats.slow_steps}")
     if observer is not None:
         if args.metrics_out:

@@ -132,6 +132,64 @@ def gqa_full(p: Dict, cfg: ModelConfig, x: jax.Array, positions: jax.Array,
     return hooks.attn_out(out @ p["wo"]), (k, v)
 
 
+def _pad_to_extent(arr: jax.Array, extent: int) -> jax.Array:
+    """Zero-pad or truncate axis 1 to exactly ``extent`` rows.
+
+    The suffix-prefill paths pin their KV reduction extent to the
+    PRODUCING pass's bucket so softmax sums run over the identical span:
+    padded rows are masked to ``NEG_INF`` (exact 0.0 softmax weight) and
+    truncated rows are pad rows no real query attends.
+    """
+    T = arr.shape[1]
+    if T == extent:
+        return arr
+    if T > extent:
+        return arr[:, :extent]
+    pad = [(0, 0)] * arr.ndim
+    pad[1] = (0, extent - T)
+    return jnp.pad(arr, pad)
+
+
+def gqa_suffix(p: Dict, cfg: ModelConfig, x: jax.Array, positions: jax.Array,
+               prefix_k: jax.Array, prefix_v: jax.Array, kv_extent: int,
+               *, hooks: Hooks = IDENTITY_HOOKS,
+               ) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """Suffix-only prefill attention against a cached prompt prefix.
+
+    x: [B,S_suf,D] post-norm hidden of the UNCACHED suffix tokens;
+    positions: [B,S_suf] absolute positions (``fork + i``); prefix_k /
+    prefix_v: [B,fork,KV,hd] gathered from the pool (post-RoPE, exactly
+    the full pass's rows); ``kv_extent``: static KV length = the
+    producing pass's prefill bucket.
+
+    Bit-exactness with the full-prompt pass, for every row whose output
+    is consumed (absolute position < true prompt length): the suffix
+    K/V at those rows reproduce the full pass's (same inputs, same
+    per-row math), the concatenated KV is truncated/zero-padded to the
+    full pass's reduction extent, and the causal mask over absolute
+    positions makes every pad/truncated disagreement masked to the same
+    ``NEG_INF`` both sides of the comparison.
+    Returns (out [B,S_suf,D_model], (k_suf, v_suf) for pool writing).
+    """
+    q, k, v = _project_qkv(p, cfg, x)
+    if cfg.rope_theta > 0:
+        sin, cos = layers.rope_sin_cos(positions, cfg.head_dim, cfg.rope_theta)
+        q = layers.apply_rope(q, sin, cos)
+        k = layers.apply_rope(k, sin, cos)
+    q = hooks.attn_q(q)
+    k, v = hooks.kv(k), hooks.kv(v)
+    k_all = _pad_to_extent(
+        jnp.concatenate([prefix_k.astype(k.dtype), k], axis=1), kv_extent)
+    v_all = _pad_to_extent(
+        jnp.concatenate([prefix_v.astype(v.dtype), v], axis=1), kv_extent)
+    kv_pos = jnp.arange(kv_extent)[None, :]
+    mask = causal_mask(positions, kv_pos)[:, None, None, :, :]
+    out = attention_core(q, k_all, v_all, mask, cfg.head_dim ** -0.5)
+    B, S = x.shape[:2]
+    out = out.reshape(B, S, cfg.n_heads * cfg.head_dim)
+    return hooks.attn_out(out @ p["wo"]), (k, v)
+
+
 def write_kv_cache(cache_k: jax.Array, cache_v: jax.Array,
                    k_new: jax.Array, v_new: jax.Array,
                    lengths) -> Tuple[jax.Array, jax.Array]:
@@ -388,6 +446,48 @@ def mla_full(p: Dict, cfg: ModelConfig, x: jax.Array, positions: jax.Array,
     k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
                                                   (B, S, H, m.qk_rope_head_dim))],
                         axis=-1)
+    out = attention_core(q, k, v, mask, scale)
+    out = out.reshape(B, S, H * m.v_head_dim)
+    return hooks.attn_out(out @ p["wo"]), (latent, k_rope)
+
+
+def mla_suffix(p: Dict, cfg: ModelConfig, x: jax.Array, positions: jax.Array,
+               prefix_latent: jax.Array, prefix_rope: jax.Array,
+               kv_extent: int, *, hooks: Hooks = IDENTITY_HOOKS,
+               ) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """Suffix-only expanded-form MLA against a cached prompt prefix.
+
+    x: [B,S_suf,D] suffix hidden; positions: [B,S_suf] absolute;
+    prefix_latent: [B,fork,r] / prefix_rope: [B,fork,rope] — the pool's
+    compressed rows (post-norm latent, post-RoPE key) for the cached
+    prefix; ``kv_extent``: the producing pass's bucket.  Same exactness
+    argument as :func:`gqa_suffix` — the ``latent @ wuk`` / ``@ wuv``
+    expansions are per-row, so padded latent rows only produce masked
+    scores.  Returns (out, (latent_suf, rope_suf) for pool writing).
+    """
+    m = cfg.mla
+    B, S = x.shape[:2]
+    H = cfg.n_heads
+    q_nope, q_rope = _mla_queries(p, cfg, x, positions)
+    latent, k_rope = _mla_latent(p, cfg, x, positions)
+    latent, k_rope = hooks.kv(latent), hooks.kv(k_rope)
+    latent_all = _pad_to_extent(
+        jnp.concatenate([prefix_latent.astype(latent.dtype), latent], axis=1),
+        kv_extent)
+    rope_all = _pad_to_extent(
+        jnp.concatenate([prefix_rope.astype(k_rope.dtype), k_rope], axis=1),
+        kv_extent)
+    k_nope = (latent_all @ p["wuk"]).reshape(B, kv_extent, H,
+                                             m.qk_nope_head_dim)
+    v = (latent_all @ p["wuv"]).reshape(B, kv_extent, H, m.v_head_dim)
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    kv_pos = jnp.arange(kv_extent)[None, :]
+    mask = causal_mask(positions, kv_pos)[:, None, None, :, :]
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(rope_all[:, :, None, :],
+                                  (B, kv_extent, H, m.qk_rope_head_dim))],
+        axis=-1)
     out = attention_core(q, k, v, mask, scale)
     out = out.reshape(B, S, H * m.v_head_dim)
     return hooks.attn_out(out @ p["wo"]), (latent, k_rope)

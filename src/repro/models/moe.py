@@ -66,7 +66,8 @@ def route(p: Dict, x: jax.Array, cfg: ModelConfig
     return gates, experts, probs
 
 
-def dispatch_indices(experts: jax.Array, n_experts: int, capacity: int
+def dispatch_indices(experts: jax.Array, n_experts: int, capacity: int,
+                     offset: Optional[jax.Array] = None,
                      ) -> Tuple[jax.Array, jax.Array]:
     """Compute each (token, k) pair's slot within its expert.
 
@@ -74,12 +75,20 @@ def dispatch_indices(experts: jax.Array, n_experts: int, capacity: int
     keep [N,k] bool — False when over capacity).
     Pure cumsum formulation: position of pair (n,j) within expert e equals
     the number of *earlier* pairs routed to e (row-major (n,j) order).
+
+    ``offset`` ([E] int32) pre-counts pairs routed to each expert by tokens
+    that come BEFORE this call's tokens in the same logical sequence —
+    the suffix-prefill path passes the cached prefix's routed-pair counts
+    so the suffix's slots (and hence capacity drops) land exactly where a
+    full-prompt pass would have put them.
     """
     N, k = experts.shape
     flat = experts.reshape(-1)                               # [N*k]
     onehot = jax.nn.one_hot(flat, n_experts, dtype=jnp.int32)  # [N*k, E]
     pos = jnp.cumsum(onehot, axis=0) - onehot                # exclusive cumsum
     slot = jnp.take_along_axis(pos, flat[:, None], axis=1)[:, 0]
+    if offset is not None:
+        slot = slot + jnp.take(offset.astype(slot.dtype), flat)
     keep = slot < capacity
     return slot.reshape(N, k), keep.reshape(N, k)
 
@@ -87,11 +96,17 @@ def dispatch_indices(experts: jax.Array, n_experts: int, capacity: int
 def apply_moe(p: Dict, x: jax.Array, cfg: ModelConfig, *,
               hooks: Hooks = IDENTITY_HOOKS,
               capacity: Optional[int] = None,
+              slot_offset: Optional[jax.Array] = None,
               ) -> Tuple[jax.Array, jax.Array]:
     """Routed expert FFN.
 
     x: [B,S,D] (or [N,D]).  Returns (out same shape, aux_loss scalar —
     the Switch load-balance loss, used by the training substrate).
+
+    ``slot_offset`` ([E]) shifts each expert's dispatch slots as if that
+    many pairs were already routed there (see :func:`dispatch_indices`);
+    pair it with the producing pass's ``capacity`` for prefix-cached
+    suffix prefill.
     """
     orig_shape = x.shape
     d = cfg.d_model
@@ -101,7 +116,7 @@ def apply_moe(p: Dict, x: jax.Array, cfg: ModelConfig, *,
     C = capacity or expert_capacity(N, cfg)
 
     gates, experts, probs = route(p, xf, cfg)                # [N,k]x2, [N,E]
-    slot, keep = dispatch_indices(experts, E, C)
+    slot, keep = dispatch_indices(experts, E, C, offset=slot_offset)
 
     # ---- dispatch: scatter tokens into [E, C, D] ---------------------------
     flat_expert = experts.reshape(-1)                        # [N*k]

@@ -59,6 +59,7 @@ from __future__ import annotations
 
 import math
 import time
+import warnings
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple, Union
 
@@ -67,7 +68,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import (DEFAULT_DECODE_STEPS_PER_DISPATCH,
-                                ElasticConfig, ModelConfig)
+                                CacheConfig, ElasticConfig, EngineConfig,
+                                ModelConfig)
 from repro.core.admission import (AdmissionController, AdmissionStats,
                                   PendingRequest)
 from repro.core.control import (HostDrivenStep, MultiStepFusedStep,
@@ -76,15 +78,18 @@ from repro.core.elastic import ElasticRebalancer
 from repro.core.pipeline import InflightBatch, LayerPipelineScheduler
 from repro.core import split_exec
 from repro.core.pools import build_pools
+from repro.core.prefix_cache import PrefixCache
 from repro.core.virtualizer import (DEFAULT_PAGE_BYTES, KVVirtualizer,
                                     OutOfPagesError)
 from repro.core.weight_pool import DEFAULT_SLAB_BYTES, OutOfSlabsError
 from repro.models import build_model
+from repro.models.moe import expert_capacity
 from repro.runtime.observe import EngineObserver, MetricsRegistry
 from repro.runtime.request import Phase, Request
 from repro.runtime.sampler import sample
 from repro.runtime.session import (HandleState, PrefillBatcher, PrefillGroup,
-                                   RebalanceEvent, RequestHandle, TokenEvent)
+                                   RebalanceEvent, RequestHandle, TokenEvent,
+                                   prompt_bucket)
 from repro.runtime.telemetry import DemandTelemetry
 
 
@@ -158,6 +163,13 @@ class ModelRunner:
         self.lengths = np.zeros(max_batch, np.int32)
         self.slots: List[Optional[Request]] = [None] * max_batch
         self.next_tokens = np.zeros(max_batch, np.int32)
+        # prefix cache wiring (DESIGN.md §11), set by the engine after
+        # construction: the shared tree and the engine's live
+        # request_id -> (fork, prefix_routes) admission outcomes.
+        # NOT named ``cache``: that attribute is the dense-KV fallback
+        # slot, and its absence is the paged path's acceptance gate
+        self.prefix_cache: Optional[PrefixCache] = None
+        self.prefix_info: Dict[int, Tuple[int, Optional[np.ndarray]]] = {}
 
         if self.paged:
             assert params is None, \
@@ -221,14 +233,16 @@ class ModelRunner:
     def _group_writer(self, group: PrefillGroup):
         """Per-layer pool writer scattering EVERY row's prompt KV to its
         own request's pages (the writer threads the donated pool buffer
-        through B scatters per layer)."""
+        through B scatters per layer).  A suffix group's rows land at
+        absolute positions starting at the fork (``group.fork`` is 0 for
+        full-prompt groups)."""
 
         def writer(layer, layer_kv, pool):
             for i, (req, n_w) in enumerate(zip(group.requests,
                                                group.n_writes)):
                 pool = self.virt.write_prompt_layer(
                     pool, self.name, req.request_id, layer, layer_kv, n_w,
-                    batch_index=i)
+                    batch_index=i, start=group.fork)
             return pool
 
         return writer
@@ -249,6 +263,82 @@ class ModelRunner:
         return [self._commit_prefill(req, int(toks[i]))
                 for i, req in enumerate(group.requests)]
 
+    def cache_insert_candidate(self, group: PrefillGroup) -> bool:
+        """Whether this group's committed prompt should be indexed in the
+        prefix tree.  Insertion is restricted to B=1 streaming groups with
+        REAL untruncated prompt ids: coalesced rows run under a vmapped
+        MoE whose captured routing is not guaranteed bit-identical to the
+        B=1 replay, and synthetic prompts are silently cache-cold."""
+        cache = self.prefix_cache
+        if cache is None or self.name not in cache.models:
+            return False
+        if group.batch_size != 1:
+            return False
+        req = group.requests[0]
+        return (req.cache and req.prompt_ids is not None
+                and 0 < req.prompt_tokens <= group.bucket)
+
+    def _prefill_suffix(self, group: PrefillGroup, capture: bool):
+        """Run the uncached-suffix pass of a prefix-cache hit: the cached
+        KV rows are gathered through the request's (shared) page table and
+        the suffix executes at absolute positions ``[fork, prompt)`` with
+        the producing pass's KV extent and (MoE) expert-capacity slots, so
+        every written row is bit-exact with a cold full pass."""
+        req = group.requests[0]
+        fork = group.fork
+        prefix_rows = self.virt.gather_prompt_rows(
+            self.name, req.request_id, fork)
+        slot_offsets, capacity = None, 0
+        if self.cfg.is_moe:
+            routes = self.prefix_info.get(req.request_id, (0, None))[1]
+            assert routes is not None and len(routes) >= fork, \
+                "MoE suffix prefill needs the prefix's captured routing"
+            E = self.cfg.n_experts
+            # per-layer routed-pair counts of the prefix tokens: the
+            # suffix tokens' dispatch slots start BEHIND them, exactly
+            # where the producing full pass's cumsum placed them
+            slot_offsets = np.stack([
+                np.bincount(np.asarray(routes[:fork, l, :],
+                                       np.int64).ravel(),
+                            minlength=E).astype(np.int32)
+                for l in range(self.cfg.n_layers)])
+            capacity = expert_capacity(group.bucket, self.cfg)
+        return self.prefill_step.suffix(
+            jnp.asarray(group.tokens()), group.true_lens(), fork,
+            group.bucket, prefix_rows, self.virt.pool,
+            self._group_writer(group), slot_offsets, capacity,
+            capture_routes=capture)
+
+    def _cache_insert(self, group: PrefillGroup) -> None:
+        """Index a just-committed prompt in the prefix tree: the request's
+        page-table entries become shared chunk pages (refcount +1 each via
+        ``insert``), with the captured MoE routing attached so later
+        suffix passes can replay dispatch exactly."""
+        req = group.requests[0]
+        routes = None
+        if self.cfg.is_moe:
+            cap = self.prefill_step.captured_routes
+            if cap is None:
+                return
+            if group.fork > 0:
+                pre = self.prefix_info.get(req.request_id, (0, None))[1]
+                if pre is None:
+                    return
+                routes = np.concatenate(
+                    [np.asarray(pre[:group.fork]),
+                     cap[:req.prompt_tokens - group.fork]], axis=0)
+            else:
+                routes = cap[:req.prompt_tokens]
+        ids = np.asarray(req.prompt_ids,
+                         np.int32).reshape(-1)[:req.prompt_tokens]
+        rp = self.virt.requests[req.request_id]
+        L = self.view.n_kv_layers
+        n_chunks = math.ceil(req.prompt_tokens / self.view.tokens_per_page)
+        chunk_pages = [[rp.tables[layer][c] for layer in range(L)]
+                       for c in range(n_chunks)]
+        self.prefix_cache.insert(self.name, group.bucket, ids, chunk_pages,
+                                 routes)
+
     def prefill_group(self, group: PrefillGroup) -> List[int]:
         """Execute one coalesced prompt pass and commit each row to a
         batch slot; returns the slots in row order."""
@@ -262,12 +352,21 @@ class ModelRunner:
                 # request waited for a slot; prompt-KV scatters need them
                 # device-resident (their contents are still unwritten)
                 self.virt.ensure_resident(req.request_id)
-            # streaming prompt phase: per-layer attention with the next
-            # layer's arena slabs uploading behind it; every row's prompt
-            # KV is scattered into pool pages as each layer completes
-            logits, self.virt.pool = self.prefill_step(
-                jnp.asarray(group.tokens()), group.true_lens(),
-                self.virt.pool, self._group_writer(group))
+            insert = self.cache_insert_candidate(group)
+            if group.fork > 0:
+                # prefix-cache hit: prefill ONLY the uncached suffix
+                logits, self.virt.pool = self._prefill_suffix(group, insert)
+            else:
+                # streaming prompt phase: per-layer attention with the next
+                # layer's arena slabs uploading behind it; every row's
+                # prompt KV is scattered into pool pages as each layer
+                # completes
+                logits, self.virt.pool = self.prefill_step(
+                    jnp.asarray(group.tokens()), group.true_lens(),
+                    self.virt.pool, self._group_writer(group),
+                    capture_routes=insert)
+            if insert:
+                self._cache_insert(group)
             return self._commit_group(group, logits)
         # fallback families: per-slot dense prefill, one row at a time
         slots = []
@@ -461,12 +560,32 @@ class CrossPoolEngine:
                  slot_budget: Optional[int] = None,
                  slab_bytes: int = DEFAULT_SLAB_BYTES,
                  max_batch: int = 4, max_ctx: int = 256,
+                 config: Optional[EngineConfig] = None,
                  mode: Optional[EngineMode] = None, seed: int = 0,
                  slow_step_factor: float = 4.0,
                  elastic: Optional[ElasticConfig] = None,
                  observer: Optional[EngineObserver] = None):
+        # ``config=EngineConfig(...)`` is the canonical construction
+        # surface; the loose ``mode=`` / ``elastic=`` kwargs that accreted
+        # across PRs remain as deprecated aliases for one release
+        cache_cfg: Optional[CacheConfig] = None
+        if config is not None:
+            if mode is not None or elastic is not None:
+                raise TypeError(
+                    "pass mode/elastic inside config=EngineConfig(...); "
+                    "the loose kwargs are aliases, not overrides")
+            mode = config.mode
+            elastic = config.elastic
+            cache_cfg = config.cache
+        elif mode is not None or elastic is not None:
+            warnings.warn(
+                "CrossPoolEngine(mode=..., elastic=...) is deprecated; "
+                "pass config=EngineConfig(mode=..., elastic=..., "
+                "cache=...) instead",
+                DeprecationWarning, stacklevel=2)
         self.models = models
         self.mode = mode or EngineMode()
+        self.max_ctx = max_ctx
         self.rng = np.random.default_rng(seed)
         devs = jax.devices()
         self.kv_device, self.w_device = devs[0], devs[-1]
@@ -499,6 +618,18 @@ class CrossPoolEngine:
         # arena-aware admission: cold-model bursts queue at the front door
         # instead of thrashing the arena LRU between admitted models
         self.admission = AdmissionController(self.virt, arena=self.arena)
+        # radix-tree prefix cache over the shared pool (DESIGN.md §11) —
+        # OFF by default; cacheable models are the split-execution subset
+        # (fallback families' pool pages are accounting-only, there is no
+        # KV to share).  The tree registers itself as the virtualizer's
+        # cache_provider so elastic shrink/compaction see its pages.
+        self.cache: Optional[PrefixCache] = None
+        if cache_cfg is not None and cache_cfg.enabled and any_split:
+            cacheable = [n for n in models
+                         if self.pooled[n].stage_fns is not None]
+            self.cache = PrefixCache(self.virt, cache_cfg,
+                                     models=cacheable)
+            self.admission.cache = self.cache
         # observability (DESIGN.md §10): the observer is OPTIONAL — every
         # step-loop site is guarded by ``observer is not None`` so the
         # disabled path allocates and calls nothing — but a lightweight
@@ -513,6 +644,8 @@ class CrossPoolEngine:
             if self.arena is not None:
                 self.arena.hooks = observer
             self.admission.hooks = observer
+            if self.cache is not None:
+                self.cache.hooks = observer
         # elastic boundary (DESIGN.md §8): windowed demand telemetry +
         # step-boundary KV<->weights repartitioning.  Telemetry observes
         # even with rebalancing disabled IF a config is passed; both stay
@@ -525,6 +658,9 @@ class CrossPoolEngine:
             self.rebalancer = ElasticRebalancer(
                 self.virt, self.arena, admission=self.admission,
                 telemetry=self.telemetry, cfg=elastic, seed=seed)
+            # cache-aware re-plan: the tree's hit-token fraction
+            # discounts windowed KV demand (shared pages map free)
+            self.rebalancer.cache = self.cache
             if observer is not None:
                 self.rebalancer.hooks = observer
 
@@ -565,6 +701,13 @@ class CrossPoolEngine:
         }
         self.stats = EngineStats(step_times={n: [] for n in models},
                                  admission=self.admission.stats)
+        # admission-time prefix-cache outcomes for live requests:
+        # request_id -> (fork, captured prefix routes) — the batcher's
+        # fork map and the suffix pass's dispatch replay read this
+        self._prefix_info: Dict[int, Tuple[int, Optional[np.ndarray]]] = {}
+        for r in self.runners.values():
+            r.prefix_cache = self.cache
+            r.prefix_info = self._prefix_info
 
         # --- session state -------------------------------------------------
         self.now = 0.0
@@ -606,8 +749,12 @@ class CrossPoolEngine:
             state = HandleState.QUEUED
         else:
             state = HandleState.REJECTED
+        info = self._prefix_info.get(req.request_id)
         handle = RequestHandle(request=req, admission=outcome, state=state,
-                               on_token=on_token, _engine=self)
+                               on_token=on_token,
+                               cached_tokens=info[0] if info else 0,
+                               cache_hit=bool(info and info[0] > 0),
+                               _engine=self)
         self.handles[req.request_id] = handle
         if self.observer is not None:
             self.observer.request_submitted(req, outcome)
@@ -640,7 +787,13 @@ class CrossPoolEngine:
         for p in self.admission.drain(self.now):
             req = self._submitted[p.request_id]
             req.admit_time = self.now
-            self.handles[req.request_id].state = HandleState.ADMITTED
+            handle = self.handles[req.request_id]
+            handle.state = HandleState.ADMITTED
+            if self.cache is not None:
+                self._prefix_info[p.request_id] = (p.cached_tokens,
+                                                   p.prefix_routes)
+                handle.cached_tokens = p.cached_tokens
+                handle.cache_hit = p.cached_tokens > 0
             self.waiting.append(req)
             if obs is not None:
                 obs.request_admitted(req)
@@ -656,8 +809,12 @@ class CrossPoolEngine:
             obs.phase_begin("batcher")
 
         # --- prefill: coalesce admitted arrivals into [B, S] groups ------
+        forks = None
+        if self.cache is not None:
+            forks = {rid: info[0] for rid, info in self._prefix_info.items()
+                     if info[0] > 0}
         groups, self.waiting = self.batcher.plan(
-            self.waiting, self.runners, self.rng, self._try_activate)
+            self.waiting, self.runners, self.rng, self._try_activate, forks)
         if obs is not None:
             obs.phase_end("batcher")
         if groups:
@@ -811,6 +968,7 @@ class CrossPoolEngine:
             # no window in which a cancelled request still holds memory
             self.virt.release_request(req.request_id)
             self.admission.finish(req.model)
+            self._prefix_info.pop(req.request_id, None)
         req.phase = Phase.CANCELLED
         req.finish_time = self.now
         handle.state = HandleState.CANCELLED
@@ -952,7 +1110,16 @@ class CrossPoolEngine:
     def _admit(self, req: Request, now: float) -> str:
         pending = PendingRequest(req.request_id, req.model,
                                  req.prompt_tokens, req.max_new_tokens, now)
+        if self.cache is not None:
+            if req.prompt_ids is not None:
+                pending.prompt_ids = np.asarray(req.prompt_ids,
+                                                np.int32).reshape(-1)
+            pending.cache = req.cache
+            pending.bucket = prompt_bucket(req.prompt_tokens, self.max_ctx)
         outcome = self.admission.offer(pending, now)
+        if outcome == "admitted" and self.cache is not None:
+            self._prefix_info[req.request_id] = (pending.cached_tokens,
+                                                 pending.prefix_routes)
         if outcome == "rejected":
             req.phase = Phase.REJECTED
         return outcome
@@ -967,6 +1134,7 @@ class CrossPoolEngine:
         self.virt.release_request(req.request_id)
         # drops the admission-time pin too: idle models become evictable
         self.admission.finish(req.model)
+        self._prefix_info.pop(req.request_id, None)
         handle = self.handles.get(req.request_id)
         if handle is not None:
             handle.state = HandleState.FINISHED
@@ -1004,6 +1172,15 @@ class CrossPoolEngine:
                      f"{u['swap_in_pages']} in "
                      f"({u['swapped_pages']} held), "
                      f"{u['resizes']} resizes")
+        if self.cache is not None:
+            c = self.cache.snapshot()
+            lines.append(
+                f"prefix cache: {int(c['hits'])} hits / "
+                f"{int(c['misses'])} misses "
+                f"({c['hit_token_fraction']:.1%} of prompt tokens cached), "
+                f"{int(c['device_pages_held'])} pages held, "
+                f"{int(c['shed_pages'])} shed / {int(c['faulted_pages'])} "
+                f"re-faulted, {int(c['evicted_pages'])} evicted")
         if self.telemetry is not None:
             t = self.telemetry.snapshot()
             lines.append(
@@ -1133,7 +1310,12 @@ class CrossPoolEngine:
             first: Dict[str, PrefillGroup] = {}
             rest: List[PrefillGroup] = []
             for g in groups:
-                if self.runners[g.model].paged and g.model not in first:
+                runner = self.runners[g.model]
+                # suffix groups and tree-insert candidates stay on the
+                # sequential streaming path: the scheduler has no suffix
+                # stage and no route capture
+                if (runner.paged and g.model not in first and g.fork == 0
+                        and not runner.cache_insert_candidate(g)):
                     first[g.model] = g
                 else:
                     rest.append(g)

@@ -473,6 +473,19 @@ class EngineObserver(CoreHooks):
         self._arena_upload = m.counter(
             "crosspool_arena_uploaded_slabs_total",
             "slabs uploaded host->device", ("model",))
+        # prefix cache (DESIGN.md §11)
+        self._cache_lookups = m.counter(
+            "crosspool_prefix_cache_lookups_total",
+            "cache-eligible admissions by outcome", ("model", "outcome"))
+        self._cache_hit_tokens = m.counter(
+            "crosspool_prefix_cache_hit_tokens_total",
+            "prompt tokens served from the radix tree", ("model",))
+        self._cache_evicted = m.counter(
+            "crosspool_prefix_cache_evicted_pages_total",
+            "device pages shed/evicted from the tree")
+        self._cache_faulted = m.counter(
+            "crosspool_prefix_cache_faulted_pages_total",
+            "shed pages faulted back on a second-chance hit")
         # rebalancer
         self._rebalance = m.counter("crosspool_rebalance_total",
                                     "applied boundary moves", ("reason",))
@@ -719,6 +732,23 @@ class EngineObserver(CoreHooks):
 
     def admission_wait(self, model: str, seconds: float) -> None:
         self._adm_wait.labels(model).observe(seconds)
+
+    def cache_hit(self, model: str, tokens: int) -> None:
+        self._cache_lookups.labels(model, "hit").inc()
+        self._cache_hit_tokens.labels(model).inc(tokens)
+        self.tracer.instant("pool/cache", "hit", cat="cache",
+                            model=model, tokens=tokens)
+
+    def cache_miss(self, model: str) -> None:
+        self._cache_lookups.labels(model, "miss").inc()
+
+    def cache_evict(self, pages: int) -> None:
+        self._cache_evicted.inc(pages)
+        self.tracer.instant("pool/cache", "evict", cat="cache", pages=pages)
+
+    def cache_fault(self, pages: int) -> None:
+        self._cache_faulted.inc(pages)
+        self.tracer.instant("pool/cache", "fault", cat="cache", pages=pages)
 
     def rebalance(self, decision) -> None:
         self._rebalance.labels(decision.reason).inc()

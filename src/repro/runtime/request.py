@@ -24,6 +24,10 @@ class Request:
     arrival_time: float
     prompt_ids: Optional[object] = None      # jax/np array when real tokens
     eos_id: Optional[int] = None             # None disables EOS stopping
+    # prefix-cache opt-out (DESIGN.md §11): True lets the engine reuse /
+    # index this prompt's KV.  Only requests with real ``prompt_ids`` ever
+    # participate — synthetic prompts are silently cache-cold.
+    cache: bool = True
     phase: Phase = Phase.QUEUED
     # --- progress -------------------------------------------------------
     generated: int = 0
@@ -46,9 +50,3 @@ class Request:
     @property
     def done(self) -> bool:
         return self.eos_seen or self.generated >= self.max_new_tokens
-
-
-# canonical quantile lives in runtime.observe (one implementation for
-# benchmarks, reports and the metrics histograms); re-exported here for
-# the many existing ``from repro.runtime.request import percentile`` sites
-from repro.runtime.observe import percentile  # noqa: E402,F401

@@ -106,6 +106,11 @@ class RequestHandle:
     admission: str
     state: HandleState
     on_token: Optional[Callable[[TokenEvent], None]] = None
+    # prefix-cache outcome, set at admission (DESIGN.md §11): how many
+    # leading prompt tokens were served from the radix tree (0 for
+    # cache-off, cache-ineligible — synthetic prompts — or a cold miss)
+    cached_tokens: int = 0
+    cache_hit: bool = False
     _engine: object = field(default=None, repr=False)
 
     @property
@@ -161,6 +166,13 @@ class PrefillGroup:
     requests: List[Request] = field(default_factory=list)
     ids: List[np.ndarray] = field(default_factory=list)
     n_writes: List[int] = field(default_factory=list)
+    # prefix-cache suffix group (DESIGN.md §11): ``fork`` > 0 marks a B=1
+    # group whose first ``fork`` prompt tokens are mapped from the radix
+    # tree — ``ids[0]`` then holds only the SUFFIX, padded to
+    # ``suffix_bucket``, while ``bucket`` stays the FULL prompt's bucket
+    # (the cache key and the suffix pass's KV reduction extent)
+    fork: int = 0
+    suffix_bucket: int = 0
 
     @property
     def batch_size(self) -> int:
@@ -199,15 +211,21 @@ class PrefillBatcher:
 
     def plan(self, waiting: List[Request], runners: Dict[str, object],
              rng: np.random.Generator,
-             try_activate: Callable[[Request], bool]
+             try_activate: Callable[[Request], bool],
+             forks: Optional[Dict[int, int]] = None,
              ) -> Tuple[List[PrefillGroup], List[Request]]:
         """Returns (groups in first-seen order, still-waiting requests).
 
         ``try_activate(request)`` is the engine's residency gate: weight
         slabs mapped for the model AND any host-swapped KV pages faulted
         back in for the request — False keeps the request waiting (pins
-        drop and pages free as other requests finish)."""
-        groups: Dict[Tuple[str, int], PrefillGroup] = {}
+        drop and pages free as other requests finish).
+
+        ``forks`` maps request_id -> cached-prefix length for prefix-cache
+        hits: such a request becomes its own B=1 SUFFIX group (keyed by
+        its id so it never coalesces — its shapes are fork-specific) whose
+        ids cover only the uncached tail, padded to the tail's bucket."""
+        groups: Dict[Tuple, PrefillGroup] = {}
         still: List[Request] = []
         taken: Dict[str, int] = {}
         obs = self.observer
@@ -226,6 +244,20 @@ class PrefillBatcher:
                 continue
             taken[req.model] = taken.get(req.model, 0) + 1
             bucket = prompt_bucket(req.prompt_tokens, runner.max_ctx)
+            fork = (forks or {}).get(req.request_id, 0)
+            if fork > 0:
+                real = np.asarray(req.prompt_ids, np.int32).reshape(-1)
+                n_suf = req.prompt_tokens - fork
+                s_bucket = prompt_bucket(n_suf, runner.max_ctx)
+                ids = np.zeros(s_bucket, np.int32)
+                ids[:n_suf] = real[fork:req.prompt_tokens]
+                g = PrefillGroup(req.model, bucket, fork=fork,
+                                 suffix_bucket=s_bucket)
+                groups[(req.model, bucket, req.request_id)] = g
+                g.requests.append(req)
+                g.ids.append(ids)
+                g.n_writes.append(n_suf)
+                continue
             ids, n_write = self._prompt_ids(req, runner.cfg, bucket, rng)
             key = (req.model, bucket)
             g = groups.get(key)

@@ -1,0 +1,299 @@
+"""Prefix-cache tests (DESIGN.md §11).
+
+Two layers:
+
+* accounting properties — random insert / share / shed / fault / release
+  interleavings over the radix tree + virtualizer NEVER leak a page,
+  alias a freed page, or leave a refcount out of sync with the actual
+  holder set (hypothesis-driven; the fallback sweep runs hermetically);
+* end-to-end parity — a multi-turn conversation served with the cache ON
+  produces bit-identical token streams to the same conversation with the
+  cache OFF, in BOTH lowering modes, including after the cached prefix
+  was forcibly shed to the host swap tier and faulted back.
+"""
+import collections
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_smoke_config
+from repro.configs.base import CacheConfig, EngineConfig
+from repro.core.prefix_cache import PrefixCache
+from repro.core.virtualizer import KVVirtualizer, OutOfPagesError
+from repro.runtime.engine import CrossPoolEngine, EngineMode
+from repro.runtime.request import Request
+
+MOE = "qwen3-moe-235b-a22b"
+MLA = "minicpm3-4b"
+
+
+# ---------------------------------------------------------------------------
+# accounting properties (host-side only: no device pool)
+# ---------------------------------------------------------------------------
+
+def _models():
+    return {n: get_smoke_config(n) for n in (MOE, MLA)}
+
+
+def _check_invariants(virt: KVVirtualizer, cache: PrefixCache) -> None:
+    """No leak, no alias, refcounts == holder counts, page conservation."""
+    held = collections.Counter()
+    tree_dev = set()
+    for node in cache._walk():
+        for p in node.pages:
+            if p >= 0:
+                held[p] += 1
+                tree_dev.add(p)
+    # the tree's device-page set is exactly its nodes' device entries
+    assert tree_dev == cache._device_pages
+    for rp in virt.requests.values():
+        for tab in rp.tables:
+            for p in tab:
+                if p >= 0:
+                    held[p] += 1
+        for p in rp.state_pages:
+            held[p] += 1
+    free = virt.free_list
+    assert len(set(free)) == len(free), "duplicate free-list entry"
+    assert not (set(free) & set(held)), "freed page still held"
+    # every held page's refcount equals the number of live holders
+    for p, n in held.items():
+        assert virt.page_refs(p) == n, (p, n, virt.page_refs(p))
+    # conservation: every budgeted page is free xor held (exactly once)
+    assert len(free) + len(held) == virt.page_budget
+
+
+def _ids(rng, base, n):
+    """Prompts share a common base (forced prefix overlap) + random tail."""
+    n = max(n, 1)
+    shared = min(n, len(base))
+    tail = rng.integers(0, 4, n - shared).astype(np.int32)
+    return np.concatenate([base[:shared], tail])
+
+
+_OPS = st.lists(
+    st.tuples(st.sampled_from(["produce", "share", "shed", "evict",
+                               "release"]),
+              st.integers(0, 2 ** 30)),
+    min_size=5, max_size=40)
+
+
+class TestAccountingProperties:
+    @settings(max_examples=20, deadline=None)
+    @given(_OPS, st.integers(0, 2 ** 30))
+    def test_never_leaks_or_aliases(self, ops, seed):
+        rng = np.random.default_rng(seed)
+        virt = KVVirtualizer(_models(), page_budget=64, page_bytes=4096,
+                             allocate_device_pool=False)
+        cache = PrefixCache(virt, CacheConfig(enabled=True,
+                                              max_pages_fraction=0.4))
+        base = rng.integers(0, 4, 48).astype(np.int32)
+        live = []          # request ids registered and not yet released
+        next_rid = [0]
+
+        def produce(arg):
+            model = (MOE, MLA)[arg % 2]
+            ids = _ids(rng, base, 4 + arg % 29)
+            rid = next_rid[0]
+            next_rid[0] += 1
+            try:
+                virt.register_request(rid, model, len(ids))
+            except OutOfPagesError:
+                return
+            live.append(rid)
+            tpp = virt.views[model].tokens_per_page
+            rp = virt.requests[rid]
+            L = virt.views[model].n_kv_layers
+            n_chunks = -(-len(ids) // tpp)
+            cache.insert(model, 64, ids,
+                         [[rp.tables[l][c] for l in range(L)]
+                          for c in range(n_chunks)])
+
+        def share(arg):
+            model = (MOE, MLA)[arg % 2]
+            ids = _ids(rng, base, 4 + arg % 29)
+            matched, nodes = cache.match_prefix(model, 64, ids)
+            fork = min(matched, len(ids) - 1)
+            tpp = virt.views[model].tokens_per_page
+            n_full, rem = fork // tpp, fork % tpp
+            rid = next_rid[0]
+            next_rid[0] += 1
+            try:
+                if fork > 0:
+                    cache.fault_chunks(nodes[:n_full + (1 if rem else 0)])
+                    virt.register_request_with_prefix(
+                        rid, model, len(ids),
+                        [n.pages for n in nodes[:n_full]],
+                        nodes[n_full].pages if rem else None)
+                else:
+                    virt.register_request(rid, model, len(ids))
+            except OutOfPagesError:
+                return
+            live.append(rid)
+
+        def release(arg):
+            if live:
+                virt.release_request(live.pop(arg % len(live)))
+
+        for op, arg in ops:
+            if op == "produce":
+                produce(arg)
+            elif op == "share":
+                share(arg)
+            elif op == "shed":
+                cache.shed(1 + arg % 8)
+            elif op == "evict":
+                cache.evict(1 + arg % 8)
+            else:
+                release(arg)
+            _check_invariants(virt, cache)
+        # teardown: releasing every request and dropping the whole tree
+        # returns EVERY page to the free list (zero leak at quiescence)
+        for rid in live:
+            virt.release_request(rid)
+        cache.evict(virt.page_budget)
+        _check_invariants(virt, cache)
+        assert cache.device_pages_held == 0
+        assert virt.free_pages + virt.swapped_now == virt.page_budget
+
+    def test_shed_keeps_nodes_matchable(self):
+        """Second-chance shed moves pages to the swap tier but the chunk
+        stays in the tree and faults back on the next match."""
+        virt = KVVirtualizer(_models(), page_budget=64, page_bytes=4096,
+                             allocate_device_pool=False)
+        cache = PrefixCache(virt, CacheConfig(enabled=True))
+        ids = np.arange(16, dtype=np.int32)
+        virt.register_request(1, MOE, len(ids))
+        rp = virt.requests[1]
+        L = virt.views[MOE].n_kv_layers
+        tpp = virt.views[MOE].tokens_per_page
+        n_chunks = -(-len(ids) // tpp)
+        cache.insert(MOE, 64, ids,
+                     [[rp.tables[l][c] for l in range(L)]
+                      for c in range(n_chunks)])
+        virt.release_request(1)
+        held = cache.device_pages_held
+        assert held > 0
+        assert cache.shed(held) == held
+        assert cache.device_pages_held == 0
+        matched, nodes = cache.match_prefix(MOE, 64, ids)
+        assert matched == len(ids)           # swapped chunks still match
+        assert all(n.swapped for n in nodes)
+        cache.fault_chunks(nodes)
+        assert cache.device_pages_held == held   # bit-exact fault-in
+        assert not any(n.swapped for n in nodes)
+        _check_invariants(virt, cache)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end multi-turn parity (real compute, smoke models)
+# ---------------------------------------------------------------------------
+
+_STREAMS = {}     # (model, lowering, cache_on, shed) -> list of streams
+
+
+def _multiturn(model, lowering, cache_on, shed=False):
+    """Serve a 3-turn conversation (each turn = previous prompt + output +
+    delta, all in one prefill bucket); returns the per-turn token streams."""
+    key = (model, lowering, cache_on, shed)
+    if key in _STREAMS:
+        return _STREAMS[key]
+    models = {model: get_smoke_config(model).replace(dtype="float32")}
+    cfg = EngineConfig(mode=EngineMode(pipeline=False, lowering=lowering),
+                       cache=CacheConfig(enabled=cache_on))
+    eng = CrossPoolEngine(models, page_budget=4096, page_bytes=4096,
+                          max_batch=2, max_ctx=32, config=cfg, seed=0)
+    rng = np.random.default_rng(7)
+    prompt = rng.integers(0, models[model].vocab_size, 17).astype(np.int32)
+    streams, hits = [], []
+    for turn in range(3):
+        req = Request(request_id=turn, model=model,
+                      prompt_tokens=len(prompt), max_new_tokens=3,
+                      arrival_time=0.0, prompt_ids=prompt.copy())
+        h = eng.submit(req)
+        assert h.admission == "admitted"
+        for _ in range(30):
+            eng.step()
+            if h.done:
+                break
+        assert h.done
+        streams.append(list(req.output_ids))
+        hits.append((h.cache_hit, h.cached_tokens))
+        if shed and eng.cache is not None:
+            # force the whole tree to the host swap tier between turns:
+            # the next hit must fault back bit-exactly (second chance)
+            eng.cache.shed(eng.cache.device_pages_held)
+        delta = rng.integers(0, models[model].vocab_size, 2).astype(np.int32)
+        prompt = np.concatenate(
+            [prompt, np.asarray(streams[-1], np.int32), delta])
+    if cache_on:
+        # warm turns actually hit, and the hit covers the full prior turn
+        assert hits[0] == (False, 0)
+        assert hits[1][0] and hits[1][1] == 17
+        assert hits[2][0] and hits[2][1] == 22
+        if shed:
+            assert eng.cache.faulted_pages > 0, \
+                "forced shed should exercise the fault-back path"
+    _STREAMS[key] = streams
+    return streams
+
+
+class TestMultiTurnParity:
+    def test_fused_moe_bit_exact(self):
+        assert _multiturn(MOE, True, True) == _multiturn(MOE, True, False)
+
+    def test_fused_mla_bit_exact(self):
+        assert _multiturn(MLA, True, True) == _multiturn(MLA, True, False)
+
+    def test_host_moe_bit_exact(self):
+        assert _multiturn(MOE, False, True) == _multiturn(MOE, False, False)
+
+    def test_shed_then_refault_bit_exact(self):
+        """Evict-to-swap-tier between turns, then fault back on the next
+        hit: the stream stays identical to the cache-off run."""
+        assert _multiturn(MOE, True, True, shed=True) \
+            == _multiturn(MOE, True, False)
+
+
+class TestUnifiedConfig:
+    def test_config_equivalent_to_legacy_kwargs(self):
+        """CrossPoolEngine(config=EngineConfig(mode=...)) serves the same
+        streams as the deprecated loose kwargs."""
+        import warnings as _w
+        models = {MLA: get_smoke_config(MLA).replace(dtype="float32")}
+        outs = []
+        for use_config in (True, False):
+            mode = EngineMode(pipeline=False, lowering=True)
+            if use_config:
+                eng = CrossPoolEngine(models, page_budget=2048,
+                                      page_bytes=4096, max_batch=2,
+                                      max_ctx=32,
+                                      config=EngineConfig(mode=mode), seed=3)
+            else:
+                with _w.catch_warnings(record=True) as caught:
+                    _w.simplefilter("always")
+                    eng = CrossPoolEngine(models, page_budget=2048,
+                                          page_bytes=4096, max_batch=2,
+                                          max_ctx=32, mode=mode, seed=3)
+                assert any(issubclass(c.category, DeprecationWarning)
+                           for c in caught)
+            rng = np.random.default_rng(11)
+            ids = rng.integers(0, models[MLA].vocab_size, 9).astype(np.int32)
+            req = Request(request_id=0, model=MLA, prompt_tokens=9,
+                          max_new_tokens=3, arrival_time=0.0, prompt_ids=ids)
+            h = eng.submit(req)
+            for _ in range(20):
+                eng.step()
+                if h.done:
+                    break
+            assert h.done
+            outs.append(list(req.output_ids))
+        assert outs[0] == outs[1]
+
+    def test_config_and_legacy_kwargs_conflict(self):
+        import pytest
+        models = {MLA: get_smoke_config(MLA)}
+        with pytest.raises(TypeError):
+            CrossPoolEngine(models, page_budget=64,
+                            config=EngineConfig(),
+                            mode=EngineMode())

@@ -377,3 +377,29 @@ def test_rejection_visible_on_handle():
     # nothing can ever drain these; the session exits instead of spinning
     stats = engine.drain()
     assert stats.tokens_out == 0
+
+
+def test_synthetic_prompts_are_silently_cache_cold():
+    """A request without ``prompt_ids`` has no token content to key the
+    radix tree — with the cache ON it must run cache-cold (no hit, no
+    insert) and serve the exact same stream as a cache-off engine."""
+    from repro.configs.base import CacheConfig, EngineConfig
+
+    streams = []
+    for cache_on in (True, False):
+        cfg = EngineConfig(mode=EngineMode(pipeline=True, lowering=True),
+                           cache=CacheConfig(enabled=cache_on))
+        engine = CrossPoolEngine(_models((MLA,)), page_budget=2048,
+                                 page_bytes=4096, max_batch=2, max_ctx=64,
+                                 config=cfg, seed=0)
+        handles = [engine.submit(Request(i, MLA, 6, 3, 0.0))
+                   for i in range(2)]
+        engine.drain()
+        assert all(h.state is HandleState.FINISHED for h in handles)
+        assert all(not h.cache_hit and h.cached_tokens == 0
+                   for h in handles)
+        if cache_on:
+            snap = engine.cache.snapshot()
+            assert snap["hits"] == 0 and snap["inserted_chunks"] == 0
+        streams.append([list(h.tokens) for h in handles])
+    assert streams[0] == streams[1]
