@@ -28,7 +28,8 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks._stats import percentile
-from repro.configs import ElasticConfig, PAPER_COLOC_SET, get_smoke_config
+from repro.configs import (ElasticConfig, EngineConfig, PAPER_COLOC_SET,
+                           get_smoke_config)
 from repro.runtime.engine import CrossPoolEngine, EngineMode
 from repro.runtime.observe import EngineObserver
 from repro.runtime.request import Request
@@ -54,18 +55,20 @@ def _engine(elastic: bool, decode_steps: int = 1) -> CrossPoolEngine:
     # bookkeeping, so the guarded integer ratio is unaffected
     return CrossPoolEngine(
         _models(), page_budget=PAGE_BUDGET, page_bytes=PAGE_BYTES,
-        slab_bytes=SLAB_BYTES, max_batch=8, max_ctx=64,
-        mode=EngineMode(pipeline=True, lowering=True,
-                        decode_steps_per_dispatch=decode_steps), seed=0,
+        slab_bytes=SLAB_BYTES, max_batch=8, max_ctx=64, seed=0,
         observer=EngineObserver(),
-        # one-jump growth (max_step_fraction >> 1): every resize changes
-        # the pool SHAPE and recompiles the fused step, so a burst response
-        # wants one large aligned move, not eight geometric ones
-        elastic=ElasticConfig(interval_steps=2, cooldown_steps=2,
-                              hysteresis=0.05, window_s=60.0,
-                              max_step_fraction=32.0,
-                              min_page_budget=PAGE_BUDGET)
-        if elastic else None)
+        config=EngineConfig(
+            mode=EngineMode(pipeline=True, lowering=True,
+                            decode_steps_per_dispatch=decode_steps),
+            # one-jump growth (max_step_fraction >> 1): every resize
+            # changes the pool SHAPE and recompiles the fused step, so a
+            # burst response wants one large aligned move, not eight
+            # geometric ones
+            elastic=ElasticConfig(interval_steps=2, cooldown_steps=2,
+                                  hysteresis=0.05, window_s=60.0,
+                                  max_step_fraction=32.0,
+                                  min_page_budget=PAGE_BUDGET)
+            if elastic else None))
 
 
 def _burst():

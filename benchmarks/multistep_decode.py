@@ -34,7 +34,7 @@ import jax
 import numpy as np
 
 from benchmarks._stats import percentile
-from repro.configs import PAPER_COLOC_SET, get_smoke_config
+from repro.configs import EngineConfig, PAPER_COLOC_SET, get_smoke_config
 from repro.runtime.engine import CrossPoolEngine, EngineMode
 from repro.runtime.request import Request
 
@@ -58,8 +58,9 @@ def _engine(k: int) -> CrossPoolEngine:
     return CrossPoolEngine(
         _models(), page_budget=PAGE_BUDGET, page_bytes=PAGE_BYTES,
         slab_bytes=SLAB_BYTES, max_batch=2, max_ctx=64,
-        mode=EngineMode(pipeline=True, lowering=True,
-                        decode_steps_per_dispatch=k),
+        config=EngineConfig(
+            mode=EngineMode(pipeline=True, lowering=True,
+                            decode_steps_per_dispatch=k)),
         seed=0)
 
 

@@ -28,7 +28,7 @@ dispatches, lost coalescing) still trips it.
 from __future__ import annotations
 
 from benchmarks._stats import percentile
-from repro.configs import PAPER_COLOC_SET, get_smoke_config
+from repro.configs import EngineConfig, PAPER_COLOC_SET, get_smoke_config
 from repro.runtime import trace as trace_mod
 from repro.runtime.engine import CrossPoolEngine, EngineMode
 from repro.runtime.observe import EngineObserver
@@ -45,7 +45,8 @@ def _engine():
     # measurement source and any observer overhead cancels in the ratio
     return CrossPoolEngine(_models(), page_budget=4096, page_bytes=4096,
                            slab_bytes=4096, max_batch=2, max_ctx=64,
-                           mode=EngineMode(pipeline=True, lowering=True),
+                           config=EngineConfig(
+                               mode=EngineMode(pipeline=True, lowering=True)),
                            seed=0, observer=EngineObserver())
 
 

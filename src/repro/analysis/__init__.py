@@ -1,0 +1,31 @@
+"""Static-analysis subsystem: checkable invariants for the pool layers.
+
+Three legs (DESIGN.md §12):
+
+  * ``repro.analysis.lint`` — AST-based repo-specific lint rules
+    (CP001..CP007) codifying the DESIGN.md contracts; CLI:
+    ``python -m repro.analysis.lint``.
+  * ``repro.analysis.jaxpr_audit`` — traces the fused step/prefill
+    callables and structurally verifies closure/donation/transfer/
+    dispatch invariants (CPA01..CPA04); CLI:
+    ``python -m repro.analysis.jaxpr_audit``.
+  * ``repro.analysis.sanitizer`` — a runtime shadow-sanitizer
+    (``PoolSanitizer``) mirroring every page/slab/refcount/swap/reserve
+    transition and raising on violations (SAN01..SAN07).
+"""
+__all__ = ["Finding", "lint_paths", "lint_source", "PoolSanitizer",
+           "PoolSanitizerError"]
+
+_HOMES = {"Finding": "lint", "lint_paths": "lint", "lint_source": "lint",
+          "PoolSanitizer": "sanitizer", "PoolSanitizerError": "sanitizer"}
+
+
+def __getattr__(name):
+    # lazy re-exports: ``python -m repro.analysis.lint`` must not trigger
+    # an eager sibling import (runpy warns), and importing the sanitizer
+    # must not pull the AST linter into the engine's hot path
+    if name in _HOMES:
+        import importlib
+        mod = importlib.import_module(f"repro.analysis.{_HOMES[name]}")
+        return getattr(mod, name)
+    raise AttributeError(name)

@@ -386,11 +386,19 @@ class EngineConfig:
     config layer stays import-free of the runtime); ``elastic`` enables the
     online KV<->weights rebalancer; ``cache`` configures the radix-tree
     prefix cache.  ``None`` fields mean "engine default".
+
+    ``sanitize`` attaches the pool shadow-sanitizer
+    (``repro.analysis.sanitizer.PoolSanitizer``): every hook event is
+    reconciled against the pool counters and a full structural audit runs
+    at each step boundary — pure checking, no behavior change.  The
+    ``CROSSPOOL_SANITIZE=1`` environment variable forces it on regardless
+    (how CI runs the whole tier-1 suite sanitized).
     """
 
     mode: Optional[object] = None            # runtime.engine.EngineMode
     elastic: Optional[ElasticConfig] = None
     cache: Optional[CacheConfig] = None
+    sanitize: bool = False
 
 
 # ---------------------------------------------------------------------------

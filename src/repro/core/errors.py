@@ -1,0 +1,33 @@
+"""Typed errors for the pool-accounting layer (DESIGN.md §12).
+
+``PoolAccountingError`` replaces the bare ``assert``s that used to guard
+the virtualizer's and arena's accounting paths: asserts vanish under
+``python -O``, which is exactly the mode a production launcher might run
+in, and a silently skipped accounting check is the memory-corruption bug
+class MemServe/eLLM-style elastic pools break on.  Raising a dedicated
+exception type also lets callers (and the shadow sanitizer,
+``repro.analysis.sanitizer``) distinguish an accounting-contract
+violation from capacity exhaustion (``OutOfPagesError`` /
+``OutOfSlabsError``), which is an expected, recoverable outcome.
+
+Lint rule CP007 (``repro.analysis.lint``) guards regressions: a bare
+``assert`` in a pool-accounting module fails the static-analysis gate.
+"""
+from __future__ import annotations
+
+
+class PoolAccountingError(RuntimeError):
+    """An internal pool-accounting invariant was violated.
+
+    Unlike ``OutOfPagesError``/``OutOfSlabsError`` (capacity verdicts a
+    caller may catch and retry), this signals a CONTRACT bug — e.g. a
+    table write on a swapped request, a retain of a non-device entry, or
+    a resize below the 1-page floor — and survives ``python -O``.
+    """
+
+
+def check(cond: bool, message: str) -> None:
+    """``assert`` replacement for accounting paths: raises
+    :class:`PoolAccountingError` (never elided by ``-O``)."""
+    if not cond:
+        raise PoolAccountingError(message)

@@ -83,3 +83,69 @@ class CoreHooks:
     # --- elastic rebalancer --------------------------------------------
     def rebalance(self, decision) -> None:
         """One applied boundary move (a ``RebalanceDecision``)."""
+
+
+class CompositeHooks(CoreHooks):
+    """Fan one hook stream out to several sinks, in attachment order.
+
+    The engine uses this when more than one consumer wants the core
+    events (e.g. the ``EngineObserver`` plus the shadow sanitizer,
+    ``repro.analysis.sanitizer.PoolSanitizer``).  Sinks are invoked in
+    order; a raising sink aborts the step like any single hook would
+    (the sanitizer RELIES on that — a detected violation must surface,
+    not be swallowed so later sinks still run)."""
+
+    def __init__(self, *sinks: CoreHooks):
+        self.sinks = [s for s in sinks if s is not None]
+
+    def _fan(self, name, *args):
+        for s in self.sinks:
+            getattr(s, name)(*args)
+
+    def kv_swap_out(self, pages):
+        self._fan("kv_swap_out", pages)
+
+    def kv_swap_in(self, pages):
+        self._fan("kv_swap_in", pages)
+
+    def kv_reserved(self, pages):
+        self._fan("kv_reserved", pages)
+
+    def kv_trimmed(self, pages):
+        self._fan("kv_trimmed", pages)
+
+    def kv_resize(self, old_pages, new_pages, swapped_out, moved):
+        self._fan("kv_resize", old_pages, new_pages, swapped_out, moved)
+
+    def arena_activate(self, model, slabs):
+        self._fan("arena_activate", model, slabs)
+
+    def arena_evict(self, model, slabs):
+        self._fan("arena_evict", model, slabs)
+
+    def arena_upload(self, model, slabs):
+        self._fan("arena_upload", model, slabs)
+
+    def arena_resize(self, old_slots, new_slots, evicted, moved):
+        self._fan("arena_resize", old_slots, new_slots, evicted, moved)
+
+    def admission(self, model, outcome, blocker):
+        self._fan("admission", model, outcome, blocker)
+
+    def admission_wait(self, model, seconds):
+        self._fan("admission_wait", model, seconds)
+
+    def cache_hit(self, model, tokens):
+        self._fan("cache_hit", model, tokens)
+
+    def cache_miss(self, model):
+        self._fan("cache_miss", model)
+
+    def cache_evict(self, pages):
+        self._fan("cache_evict", pages)
+
+    def cache_fault(self, pages):
+        self._fan("cache_fault", pages)
+
+    def rebalance(self, decision):
+        self._fan("rebalance", decision)

@@ -127,7 +127,8 @@ def plan_pool(specs: Sequence[WorkloadSpec], *,
             total = u if total is None else total + u           # Eq. (2)
         samples.append(total)
     pooled = np.concatenate(samples)
-    target = float(np.quantile(pooled, quantile)) * headroom
+    # cp: allow(CP005) — the provisioning quantile of Eq. (2), a planner
+    target = float(np.quantile(pooled, quantile)) * headroom  # input, not a latency statistic
     budget_pages = int(math.ceil(target / page_bytes)) or 1
 
     per_model: Dict[str, ModelPlan] = {}

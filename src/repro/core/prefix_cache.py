@@ -41,6 +41,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.configs.base import CacheConfig
+from repro.core.errors import check
 from repro.core.virtualizer import _SWAP_BASE, KVVirtualizer
 
 
@@ -379,7 +380,7 @@ class PrefixCache:
 
     def _drop_node(self, node: _Chunk) -> None:
         """Remove a LEAF node from the tree, releasing its page holds."""
-        assert node.is_leaf, "only leaves are evictable"
+        check(node.is_leaf, "only leaves are evictable")
         self._release_node_pages(node)
         parent = node.parent
         if parent is not None:

@@ -51,6 +51,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.errors import PoolAccountingError, check
 from repro.kernels.ops import donate_argnums, paged_kv_write
 
 #: The single page-size constant shared by the virtualizer, the pools and
@@ -62,6 +63,11 @@ DEFAULT_PAGE_BYTES = 16 * 1024
 
 class OutOfPagesError(RuntimeError):
     pass
+
+
+# re-exported for callers that treat the virtualizer as the accounting
+# surface; defined in ``repro.core.errors`` so the weights arena shares it
+__all__ = ["KVVirtualizer", "OutOfPagesError", "PoolAccountingError"]
 
 
 @dataclass
@@ -324,7 +330,7 @@ class KVVirtualizer:
     def retain_page(self, page: int) -> None:
         """Add one holder to a device page (prefix tree or a sharing
         request); freshly ``_take``n pages carry an implicit refcount 1."""
-        assert page >= 0, f"cannot retain non-device entry {page}"
+        check(page >= 0, f"cannot retain non-device entry {page}")
         self._refs[page] = self._refs.get(page, 1) + 1
 
     def _unref(self, page: int) -> bool:
@@ -408,8 +414,10 @@ class KVVirtualizer:
         chunks = math.ceil(max(prompt_tokens, 1) / view.tokens_per_page) \
             if L else 0
         n_shared = len(shared_chunks)
-        assert n_shared + (1 if cow_chunk is not None else 0) <= chunks, (
-            n_shared, chunks)
+        check(n_shared + (1 if cow_chunk is not None else 0) <= chunks,
+              f"prefix covers {n_shared} shared chunks"
+              f"{' + a CoW chunk' if cow_chunk is not None else ''} but the "
+              f"prompt only spans {chunks}")
         state_pages = math.ceil(cfg.state_bytes_per_request() / self.page_bytes)
         fresh_per_layer = chunks - n_shared
         pages = self._take(fresh_per_layer * L + state_pages)
@@ -429,7 +437,8 @@ class KVVirtualizer:
             # copy: one vectorized device row copy, byte-exact
             srcs = [int(cow_chunk[layer]) for layer in range(L)]
             dsts = [req.tables[layer][n_shared] for layer in range(L)]
-            assert all(s >= 0 for s in srcs), srcs
+            check(all(s >= 0 for s in srcs),
+                  f"copy-on-write source chunk is not device-resident: {srcs}")
             if self.pool is not None:
                 rows = _pool_row_gather(self.pool,
                                         jnp.asarray(np.asarray(srcs, np.int32)))
@@ -451,9 +460,9 @@ class KVVirtualizer:
         Shared pages are read in place (never copied)."""
         view = self.views[model]
         req = self.requests[request_id]
-        assert req.n_swapped == 0, (
-            f"request {request_id} has swapped pages; call ensure_resident "
-            f"before gathering prefix KV")
+        check(req.n_swapped == 0,
+              f"request {request_id} has swapped pages; call ensure_resident "
+              f"before gathering prefix KV")
         typed = self.typed_pages(model)
         toks = np.arange(n_tokens)
         chunk = toks // view.tokens_per_page
@@ -525,9 +534,9 @@ class KVVirtualizer:
         if not view.n_kv_layers:
             self.touch(request_id)
             return 0
-        assert req.n_swapped == 0, (
-            f"request {request_id} has swapped pages; call ensure_resident "
-            f"before reserving a decode block")
+        check(req.n_swapped == 0,
+              f"request {request_id} has swapped pages; call ensure_resident "
+              f"before reserving a decode block")
         have = len(req.tables[0])
         need = math.ceil(max(req.tokens + k, 1) / view.tokens_per_page)
         delta = need - have
@@ -708,7 +717,8 @@ class KVVirtualizer:
         bit-exact."""
         if not pages:
             return []
-        assert all(p >= 0 and self.page_refs(p) == 1 for p in pages), pages
+        check(all(p >= 0 and self.page_refs(p) == 1 for p in pages),
+              f"swap_pages_out requires sole-owned device pages: {list(pages)}")
         slots = self._swap_slots(len(pages))
         if self.pool is not None:
             ids = jnp.asarray(np.asarray(list(pages), np.int32))
@@ -728,7 +738,8 @@ class KVVirtualizer:
         ``_take``, so ``OutOfPagesError`` leaves the swap tier intact."""
         if not encoded:
             return []
-        assert all(e <= _SWAP_BASE for e in encoded), encoded
+        check(all(e <= _SWAP_BASE for e in encoded),
+              f"fault_pages_in takes swapped encodings only: {list(encoded)}")
         slots = [_swap_decode(e) for e in encoded]
         pages = self._take(len(slots))
         if self.pool is not None:
@@ -791,7 +802,7 @@ class KVVirtualizer:
         when protected requests alone exceed the new budget.
         """
         new_budget = int(new_budget)
-        assert new_budget >= 1, new_budget
+        check(new_budget >= 1, f"page budget must be >= 1, got {new_budget}")
         old_budget = self.page_budget
         if new_budget == old_budget:
             return {"page_budget": old_budget, "swapped_out": 0, "moved": 0}
@@ -892,9 +903,9 @@ class KVVirtualizer:
                max_pages)
         for rid in request_ids:
             if rid is not None and rid in self.requests:
-                assert self.requests[rid].n_swapped == 0, (
-                    f"request {rid} has swapped pages; call "
-                    f"ensure_resident before building batch tables")
+                check(self.requests[rid].n_swapped == 0,
+                      f"request {rid} has swapped pages; call "
+                      f"ensure_resident before building batch tables")
         revs = tuple(
             -1 if rid is None or rid not in self.requests
             else self.requests[rid].rev
@@ -945,9 +956,9 @@ class KVVirtualizer:
         ``layer=None`` vectorizes over ALL layers: ``tokens`` is [n] and the
         result is [n_layers * n] in layer-major order.
         """
-        assert req.n_swapped == 0, (
-            f"request {req.request_id} has swapped pages; call "
-            f"ensure_resident before writing KV")
+        check(req.n_swapped == 0,
+              f"request {req.request_id} has swapped pages; call "
+              f"ensure_resident before writing KV")
         chunk = tokens // view.tokens_per_page
         slots = (tokens % view.tokens_per_page).astype(np.int32)
         if layer is not None:
@@ -1025,7 +1036,8 @@ class KVVirtualizer:
                 [cache["latent"][:, batch_index, :n_tokens],
                  cache["rope"][:, batch_index, :n_tokens]], axis=-1)
         L = kv.shape[0]
-        assert L == view.n_kv_layers, (L, view.n_kv_layers)
+        check(L == view.n_kv_layers,
+              f"prefill cache has {L} layers, view expects {view.n_kv_layers}")
         flat = kv.reshape(L * n_tokens, view.per_token_elems)
         toks = np.arange(n_tokens)
         pages, slots = self._token_coords(req, view, toks)

@@ -47,6 +47,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.errors import check
 from repro.kernels.ops import donate_argnums
 from repro.models.moe import EXPERT_STACKED_LEAVES
 
@@ -512,7 +513,7 @@ class WeightArena:
         evictions.
         """
         new_budget = int(new_budget)
-        assert new_budget >= 1, new_budget
+        check(new_budget >= 1, f"slot budget must be >= 1, got {new_budget}")
         old_budget = self.slot_budget
         if new_budget == old_budget:
             return {"slot_budget": old_budget, "evicted": 0, "moved": 0}

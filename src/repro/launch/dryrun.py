@@ -36,6 +36,7 @@ from repro.configs.base import ModelConfig, ShapeConfig
 from repro.launch import roofline as rf
 from repro.launch.mesh import make_production_mesh, mesh_chip_count
 from repro.models import build_model
+from repro.runtime.sampler import sample
 from repro.sharding.strategies import Strategy, make_strategy
 from repro.training.optimizer import AdamW
 from repro.training.train_step import make_train_step, TrainState
@@ -157,7 +158,7 @@ def build_serve_cell(cfg: ModelConfig, shape: ShapeConfig,
         def serve_step(params, tokens, cache, lengths):
             logits, cache = model.decode_step(params, tokens, cache, lengths,
                                               hooks=hooks)
-            return jnp.argmax(logits, -1).astype(jnp.int32), cache
+            return sample(logits), cache
 
         # donate the KV cache: the updated cache aliases the old buffers
         jitted = jax.jit(
@@ -176,7 +177,7 @@ def build_serve_cell(cfg: ModelConfig, shape: ShapeConfig,
         kw = dict(zip(extra_keys, extra))
         logits, cache = model.prefill(params, tokens, cache, hooks=hooks,
                                       **kw)
-        return jnp.argmax(logits, -1).astype(jnp.int32), cache
+        return sample(logits), cache
 
     jitted = jax.jit(
         prefill_fn,

@@ -258,6 +258,51 @@ def host_transfer_count(hlo: str) -> int:
     return total
 
 
+_ALIAS_ENTRY_RE = re.compile(
+    r"\{([\d,\s]*)\}:\s*\(\s*(\d+)\s*,\s*\{([\d,\s]*)\}")
+
+
+def input_output_aliases(hlo: str) -> List[Tuple[Tuple[int, ...], int,
+                                                 Tuple[int, ...]]]:
+    """Donation aliases from the ``HloModule`` header line.
+
+    Each entry is ``(output_index, param_number, param_index)`` — the
+    compiled proof that a ``donate_argnums`` buffer is actually reused
+    in place (XLA drops the alias silently when shapes/layouts prevent
+    it, so "we passed donate_argnums" is a claim, THIS is the fact).
+    Indices are shape-tree paths: ``()`` for the whole (non-tuple)
+    value, ``(i,)`` for tuple element i.
+    """
+    header = next((ln for ln in hlo.splitlines()
+                   if ln.startswith("HloModule")), "")
+    start = header.find("input_output_alias={")
+    if start < 0:
+        return []
+    # balanced-brace scan: the block nests ``{0}: (0, {}, may-alias)``
+    # entries, so a non-greedy regex would stop at the first inner ``}``
+    i = start + len("input_output_alias=")
+    depth, end = 0, i
+    for end in range(i, len(header)):
+        if header[end] == "{":
+            depth += 1
+        elif header[end] == "}":
+            depth -= 1
+            if depth == 0:
+                break
+    block = header[i + 1:end]
+    out = []
+    for om, param, pm in _ALIAS_ENTRY_RE.findall(block):
+        o_idx = tuple(int(d) for d in om.split(",") if d.strip())
+        p_idx = tuple(int(d) for d in pm.split(",") if d.strip())
+        out.append((o_idx, int(param), p_idx))
+    return out
+
+
+def donated_params(hlo: str) -> List[int]:
+    """Entry-parameter numbers that alias some output (sorted, unique)."""
+    return sorted({param for _, param, _ in input_output_aliases(hlo)})
+
+
 def while_trip_structure(hlo: str) -> List[Tuple[int, Optional[int]]]:
     """(nesting depth, known trip count) for every while under ENTRY.
 

@@ -58,6 +58,7 @@ production-mesh behaviour of the same code paths is proven by the dry-run.
 from __future__ import annotations
 
 import math
+import os
 import time
 import warnings
 from dataclasses import dataclass, field
@@ -74,7 +75,9 @@ from repro.core.admission import (AdmissionController, AdmissionStats,
                                   PendingRequest)
 from repro.core.control import (HostDrivenStep, MultiStepFusedStep,
                                 StreamingPrefill)
+from repro.analysis.sanitizer import PoolSanitizer
 from repro.core.elastic import ElasticRebalancer
+from repro.core.hooks import CompositeHooks
 from repro.core.pipeline import InflightBatch, LayerPipelineScheduler
 from repro.core import split_exec
 from repro.core.pools import build_pools
@@ -639,13 +642,30 @@ class CrossPoolEngine:
         self.observer = observer
         self.metrics = (observer.metrics if observer is not None
                         else MetricsRegistry())
-        if observer is not None:
-            self.virt.hooks = observer
+        # pool shadow-sanitizer (DESIGN.md §12): pure checking, attached
+        # only on request — ``EngineConfig(sanitize=True)`` or the
+        # ``CROSSPOOL_SANITIZE=1`` env var (CI's sanitized tier-1 leg).
+        # It rides the same hook stream as the observer (CompositeHooks
+        # fans out, sanitizer last so the observer sees the event even
+        # when the sanitizer raises) and audits at step boundaries.
+        self.sanitizer: Optional[PoolSanitizer] = None
+        want_sanitize = ((config is not None and config.sanitize)
+                         or os.environ.get("CROSSPOOL_SANITIZE", "") == "1")
+        if want_sanitize:
+            self.sanitizer = PoolSanitizer(
+                self.virt, arena=self.arena, admission=self.admission,
+                cache=self.cache)
+        sink = observer
+        if self.sanitizer is not None:
+            sink = (CompositeHooks(observer, self.sanitizer)
+                    if observer is not None else self.sanitizer)
+        if sink is not None:
+            self.virt.hooks = sink
             if self.arena is not None:
-                self.arena.hooks = observer
-            self.admission.hooks = observer
+                self.arena.hooks = sink
+            self.admission.hooks = sink
             if self.cache is not None:
-                self.cache.hooks = observer
+                self.cache.hooks = sink
         # elastic boundary (DESIGN.md §8): windowed demand telemetry +
         # step-boundary KV<->weights repartitioning.  Telemetry observes
         # even with rebalancing disabled IF a config is passed; both stay
@@ -661,8 +681,8 @@ class CrossPoolEngine:
             # cache-aware re-plan: the tree's hit-token fraction
             # discounts windowed KV demand (shared pages map free)
             self.rebalancer.cache = self.cache
-            if observer is not None:
-                self.rebalancer.hooks = observer
+            if sink is not None:
+                self.rebalancer.hooks = sink
 
         self.host_steps = None
         self.scheduler = None
@@ -758,6 +778,8 @@ class CrossPoolEngine:
         self.handles[req.request_id] = handle
         if self.observer is not None:
             self.observer.request_submitted(req, outcome)
+        if self.sanitizer is not None and not self._in_step:
+            self.sanitizer.audit()     # admission mapping is quiescent too
         return handle
 
     def step(self, now: Optional[float] = None) -> List[TokenEvent]:
@@ -780,6 +802,10 @@ class CrossPoolEngine:
             deferred, self._deferred_cancels = self._deferred_cancels, []
             for handle in deferred:     # reentrant cancels, now safe
                 self.cancel(handle)
+        if self.sanitizer is not None:
+            # quiescent point: no cross-object handoff is mid-flight here,
+            # so the full structural walk (SAN01..SAN08) is sound
+            self.sanitizer.audit()
         return self._events
 
     def _drain_front_door(self) -> None:
@@ -1324,9 +1350,9 @@ class CrossPoolEngine:
                 groups = rest
         for g in groups:
             runner = self.runners[g.model]
-            t0 = time.perf_counter()
+            t0 = time.perf_counter()  # cp: allow(CP006) real dispatch duration
             runner.prefill_group(g)
-            dt = time.perf_counter() - t0
+            dt = time.perf_counter() - t0  # cp: allow(CP006) real dispatch duration
             now += dt
             if self.observer is not None:
                 self.observer.prefill(g.model, g.batch_size, dt)
@@ -1337,13 +1363,13 @@ class CrossPoolEngine:
     def _prefill_pipelined(self, groups: List[PrefillGroup],
                            now: float) -> float:
         """Concurrent cold-model prompt phases through the scheduler."""
-        t0 = time.perf_counter()
+        t0 = time.perf_counter()  # cp: allow(CP006) real dispatch duration
         batches = [self.runners[g.model].make_prefill_batch(g, i)
                    for i, g in enumerate(groups)]
         done, pool = self.scheduler.run(batches, self.virt.pool,
                                         max_inflight=2)
         self.virt.pool = pool
-        dt = time.perf_counter() - t0
+        dt = time.perf_counter() - t0  # cp: allow(CP006) real dispatch duration
         now += dt
         by_model = {g.model: g for g in groups}
         for b in done:
@@ -1361,7 +1387,7 @@ class CrossPoolEngine:
     def _decode_model(self, name: str, now: float) -> float:
         runner = self.runners[name]
         obs = self.observer
-        t0 = time.perf_counter()
+        t0 = time.perf_counter()  # cp: allow(CP006) real dispatch duration
         if obs is not None:
             obs.phase_begin("dispatch")
         pending = runner.issue_decode(self._host_step(name))
@@ -1371,7 +1397,7 @@ class CrossPoolEngine:
         toks, counts, act = runner.commit_decode(pending)
         if obs is not None:
             obs.phase_end("commit")
-        dt = time.perf_counter() - t0
+        dt = time.perf_counter() - t0  # cp: allow(CP006) real dispatch duration
         self._record_step(name, dt)
         self._book_tokens(runner, toks, counts, act, now, dt)
         return now + dt
@@ -1387,7 +1413,7 @@ class CrossPoolEngine:
         if not self.mode.lowering:
             return self._decode_pipelined_host(active, now)
         obs = self.observer
-        t0 = time.perf_counter()
+        t0 = time.perf_counter()  # cp: allow(CP006) real dispatch duration
         if obs is not None:
             obs.phase_begin("dispatch")
         issued = [(n, self.runners[n].issue_decode(None)) for n in active]
@@ -1398,7 +1424,7 @@ class CrossPoolEngine:
         for n, pending in issued:
             runner = self.runners[n]
             toks, counts, act = runner.commit_decode(pending)
-            dt_all = time.perf_counter() - t0
+            dt_all = time.perf_counter() - t0  # cp: allow(CP006) real dispatch duration
             self._book_tokens(runner, toks, counts, act, now, dt_all)
         if obs is not None:
             obs.phase_end("commit")
@@ -1409,7 +1435,7 @@ class CrossPoolEngine:
     def _decode_pipelined_host(self, active: List[str], now: float) -> float:
         """Layer-wise two-batch pipeline over the disaggregated pools."""
         obs = self.observer
-        t0 = time.perf_counter()
+        t0 = time.perf_counter()  # cp: allow(CP006) real dispatch duration
         if obs is not None:
             obs.phase_begin("dispatch")
         paged = [n for n in active if self.runners[n].paged]
@@ -1422,7 +1448,7 @@ class CrossPoolEngine:
         done, pool = self.scheduler.run(batches, self.virt.pool,
                                         max_inflight=2)
         self.virt.pool = pool
-        dt_all = time.perf_counter() - t0
+        dt_all = time.perf_counter() - t0  # cp: allow(CP006) real dispatch duration
         if obs is not None:
             obs.phase_end("dispatch")
             obs.phase_begin("commit")
