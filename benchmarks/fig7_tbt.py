@@ -12,7 +12,7 @@ import numpy as np
 
 from benchmarks._stats import percentile
 from repro.configs import PAPER_COLOC_SET, get_config
-from repro.runtime import trace as trace_mod
+from repro.runtime import observe as trace_mod
 from repro.runtime.simulator import DecodeSimulator, paper_placements
 
 RATES = (0.2, 0.4, 0.6, 0.8, 1.0)

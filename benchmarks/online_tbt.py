@@ -29,7 +29,7 @@ from __future__ import annotations
 
 from benchmarks._stats import percentile
 from repro.configs import EngineConfig, PAPER_COLOC_SET, get_smoke_config
-from repro.runtime import trace as trace_mod
+from repro.runtime import observe as trace_mod
 from repro.runtime.engine import CrossPoolEngine, EngineMode
 from repro.runtime.observe import EngineObserver
 from repro.runtime.request import Request

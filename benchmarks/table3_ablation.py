@@ -18,7 +18,7 @@ import subprocess
 import sys
 
 from repro.configs import PAPER_COLOC_SET, get_config
-from repro.runtime import trace as trace_mod
+from repro.runtime import observe as trace_mod
 from repro.runtime.simulator import DecodeSimulator, paper_placements
 
 MODES = [(False, False), (False, True), (True, False), (True, True)]
@@ -28,7 +28,7 @@ import time
 import jax, jax.numpy as jnp, numpy as np
 from repro.configs import PAPER_COLOC_SET, get_smoke_config
 from repro.runtime.engine import CrossPoolEngine, EngineMode
-from repro.runtime import trace as trace_mod
+from repro.runtime import observe as trace_mod
 
 assert len(jax.devices()) == 2, jax.devices()
 models = {n: get_smoke_config(n).replace(n_layers=8, dtype="float32")

@@ -16,12 +16,13 @@ import argparse
 
 import numpy as np
 
-from repro.configs import (ElasticConfig, EngineConfig, PAPER_COLOC_SET,
+from repro.configs import (ElasticConfig, EngineConfig, FlightRecorderConfig,
+                           PAPER_COLOC_SET, SLObjective, SLOConfig,
                            get_smoke_config)
 from repro.core.planner import (WorkloadSpec, plan_pool, split_device_budget,
                                 worst_case_pages, worst_case_weight_bytes)
 from repro.core.weight_pool import slabs_for_config
-from repro.runtime import trace as trace_mod
+from repro.runtime import observe as trace_mod
 from repro.runtime.engine import CrossPoolEngine, EngineMode
 from repro.runtime.observe import EngineObserver, percentile
 
@@ -71,6 +72,12 @@ def main():
                     help="enable the online KV<->weights boundary "
                          "rebalancer (windowed re-plan + host KV swap "
                          "tier; DESIGN.md §8)")
+    ap.add_argument("--slo-demo", default=None, metavar="RECORD_PATH",
+                    help="postmortem demo (DESIGN.md §13): attach "
+                         "deliberately unmeetable latency SLOs so the "
+                         "burn-rate monitor breaches mid-run, auto-dumping "
+                         "a flight record here; replay it with "
+                         "`python -m repro.launch.replay RECORD_PATH`")
     ap.add_argument("--metrics-out", default=None, metavar="PATH",
                     help="write Prometheus-text metrics here after the run")
     ap.add_argument("--trace-out", default=None, metavar="PATH",
@@ -121,6 +128,16 @@ def main():
     page_budget = max(dev_plan.page_budget, 512)   # smoke-scale floor
     print(f"engine budgets: {page_budget} pages, "
           f"{dev_plan.slot_budget} slabs")
+    # --slo-demo: objectives no smoke run can meet (sub-microsecond TTFT /
+    # TBT) so the multi-rate burn monitor breaches within the first window
+    # and the flight recorder auto-dumps a postmortem record
+    slo = (SLOConfig(objectives={n: SLObjective(ttft_ms=1e-3, tbt_p99_ms=1e-3)
+                                 for n in models},
+                     window_s=4.0, short_window_s=0.5)
+           if args.slo_demo else None)
+    flightrec = (FlightRecorderConfig(dump_path=args.slo_demo,
+                                      snapshot_interval_steps=2)
+                 if args.slo_demo else None)
     engine = CrossPoolEngine(
         models, page_budget=page_budget,
         page_bytes=4096, slot_budget=dev_plan.slot_budget,
@@ -128,7 +145,8 @@ def main():
         config=EngineConfig(
             mode=EngineMode(pipeline=True, lowering=True),
             elastic=ElasticConfig(window_s=max(args.horizon, 4.0))
-            if args.elastic else None),
+            if args.elastic else None,
+            slo=slo, flightrec=flightrec),
         observer=observer)
     reqs = trace_mod.make_requests(
         list(models), rps_per_model=args.rps, horizon_s=args.horizon,
@@ -177,6 +195,17 @@ def main():
     assert all(r.params is None for r in engine.runners.values() if r.paged), \
         "a paged runner still holds a full param tree"
     assert stats.tokens_out > 0
+    if args.slo_demo:
+        rec = engine.recorder
+        assert engine.slo.breach_count() > 0, \
+            "SLO demo thresholds should be unmeetable"
+        assert rec.dumps > 0, "breach should have auto-dumped a flight record"
+        print(f"SLO breaches: {engine.slo.breach_count()} "
+              f"({engine.slo.report_line(engine.now)})")
+        print(f"flight record auto-dumped on first breach -> "
+              f"{args.slo_demo} ({len(rec.ring)} events, "
+              f"{len(rec.snapshots)} snapshots)")
+        print(f"postmortem: python -m repro.launch.replay {args.slo_demo}")
     if observer is not None:
         if args.metrics_out:
             observer.metrics.write(args.metrics_out)

@@ -13,11 +13,14 @@ from repro.configs.base import (  # noqa: F401  (re-export)
     CacheConfig,
     ElasticConfig,
     EngineConfig,
+    FlightRecorderConfig,
     MLAConfig,
     ModelConfig,
     SHAPES,
     SHAPES_BY_NAME,
     ShapeConfig,
+    SLObjective,
+    SLOConfig,
     SSMConfig,
     shape_applicable,
 )

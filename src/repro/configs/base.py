@@ -11,7 +11,7 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass
-from typing import Optional, Tuple
+from typing import Mapping, Optional, Tuple
 
 # ---------------------------------------------------------------------------
 # Runtime defaults
@@ -372,6 +372,70 @@ class CacheConfig:
 
 
 # ---------------------------------------------------------------------------
+# Service-level objectives (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class SLObjective:
+    """Per-model latency objectives, in milliseconds.
+
+    ``None`` fields are not monitored.  ``target`` is the availability
+    target for every monitored metric on this model: a sample is "bad"
+    when it strictly exceeds the threshold (exact equality is within
+    SLO), and the error budget is ``1 - target``.
+    """
+
+    ttft_ms: Optional[float] = None       # time to first token
+    tbt_p99_ms: Optional[float] = None    # inter-token gap (tail objective)
+    queue_wait_ms: Optional[float] = None  # admission front-door wait
+    target: float = 0.99
+
+
+@dataclass(frozen=True)
+class SLOConfig:
+    """Declarative SLOs, evaluated by ``runtime.observe.SLOMonitor``.
+
+    Multi-rate burn-rate alerting (the SRE-workbook shape): a breach
+    fires only when BOTH the long window and the short window burn the
+    error budget faster than ``burn_rate_threshold`` — the long window
+    keeps alerts significant, the short window makes them reset quickly
+    once the condition clears.  Windows are in engine virtual time.
+    """
+
+    objectives: Mapping[str, SLObjective] = dataclasses.field(
+        default_factory=dict)           # model name -> objectives
+    window_s: float = 30.0              # long (significance) window
+    short_window_s: float = 3.0         # fast (recency) window
+    burn_rate_threshold: float = 1.0    # budget-burn multiple to alert at
+
+
+# ---------------------------------------------------------------------------
+# Flight recorder (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class FlightRecorderConfig:
+    """Knobs for the session flight recorder (``runtime.flightrec``).
+
+    The recorder keeps a bounded ring of every causal input (submits,
+    clock reads, cancels, injections) plus informational pool events,
+    periodic pool snapshots at quiescent step boundaries, and the full
+    per-request token streams.  ``dump_path`` is the auto-dump target on
+    a pool accounting failure or the first SLO breach; ``None`` means
+    on-demand dumps only (``engine.recorder.dump(path)``).
+    """
+
+    enabled: bool = True
+    ring_size: int = 4096               # bounded event ring (drops counted)
+    snapshot_interval_steps: int = 8    # pool snapshot cadence (steps)
+    max_snapshots: int = 128            # bounded snapshot ring
+    dump_path: Optional[str] = None     # auto-dump target (JSON)
+    dump_on_breach: bool = True         # dump on first SLO breach too
+
+
+# ---------------------------------------------------------------------------
 # Unified engine construction surface
 # ---------------------------------------------------------------------------
 
@@ -399,6 +463,8 @@ class EngineConfig:
     elastic: Optional[ElasticConfig] = None
     cache: Optional[CacheConfig] = None
     sanitize: bool = False
+    slo: Optional[SLOConfig] = None          # burn-rate SLO monitoring
+    flightrec: Optional[FlightRecorderConfig] = None  # session black box
 
 
 # ---------------------------------------------------------------------------

@@ -59,6 +59,22 @@ class RebalanceDecision:
     def kv_grew(self) -> bool:
         return self.new_page_budget > self.old_page_budget
 
+    def to_record(self) -> Dict[str, object]:
+        """Stable flight-record form — the replayer compares the applied
+        decision SEQUENCE across record/replay field-by-field, so this is
+        schema, not convenience: keep it in sync with DESIGN.md §13."""
+        return {
+            "step": self.step,
+            "now": self.now,
+            "page_budget": [self.old_page_budget, self.new_page_budget],
+            "slot_budget": [self.old_slot_budget, self.new_slot_budget],
+            "swapped_out": self.swapped_out,
+            "evicted_models": self.evicted_models,
+            "moved_pages": self.moved_pages,
+            "moved_slabs": self.moved_slabs,
+            "reason": self.reason,
+        }
+
 
 class ElasticRebalancer:
     """Step-boundary driver of the live KV<->weights repartition."""

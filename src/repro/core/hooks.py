@@ -84,6 +84,13 @@ class CoreHooks:
     def rebalance(self, decision) -> None:
         """One applied boundary move (a ``RebalanceDecision``)."""
 
+    # --- SLO engine (DESIGN.md §13) ------------------------------------
+    def slo_breach(self, breach) -> None:
+        """A multi-rate burn-rate breach (a ``runtime.observe.SLOBreach``;
+        held loosely typed so the core layer stays runtime-import-free).
+        Fires once per (model, metric) on the breaching EDGE — re-arms
+        only after the condition clears."""
+
 
 class CompositeHooks(CoreHooks):
     """Fan one hook stream out to several sinks, in attachment order.
@@ -149,3 +156,6 @@ class CompositeHooks(CoreHooks):
 
     def rebalance(self, decision):
         self._fan("rebalance", decision)
+
+    def slo_breach(self, breach):
+        self._fan("slo_breach", breach)

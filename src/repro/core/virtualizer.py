@@ -1045,6 +1045,32 @@ class KVVirtualizer:
                                   jnp.asarray(slots))
 
     # ------------------------------------------------------------------
+    def accounting_snapshot(self) -> Dict[str, int]:
+        """Integer holder-class partition of the page budget — the pool
+        half of a flight-recorder snapshot (DESIGN.md §13).  Pure reads;
+        every field is deterministic given the session's input stream, so
+        a replayed session must reproduce it bit-exactly.
+        """
+        live = set()
+        for req in self.requests.values():
+            for _, _, page in req.device_entries():
+                live.add(page)
+        return {
+            "page_budget": self.page_budget,
+            "free_pages": self.free_pages,
+            "mapped_pages": self.mapped_pages,
+            "request_pages": len(live),     # device pages held by live tables
+            "swapped_now": self.swapped_now,
+            "peak_mapped": self.peak_mapped,
+            "swap_out_pages": self.swap_out_pages,
+            "swap_in_pages": self.swap_in_pages,
+            "resizes": self.resizes,
+            # refcount summary (prefix sharing): pages with >1 holder and
+            # the total explicit holder count across them
+            "shared_pages": sum(1 for c in self._refs.values() if c > 1),
+            "ref_total": sum(self._refs.values()),
+        }
+
     def utilization(self) -> Dict[str, float]:
         frag = 0.0
         for rid, req in self.requests.items():

@@ -381,6 +381,12 @@ class WeightArena:
                       default=1)
         return max(self.pinned_slabs(), largest, 1)
 
+    def residency_by_model(self) -> Dict[str, int]:
+        """Resident slab count per model — the slab-timeline source for
+        flight-recorder snapshots and Perfetto counter tracks."""
+        return {name: int(res.slots.size)
+                for name, res in self.residency.items()}
+
     def utilization(self) -> Dict[str, float]:
         return {
             "slot_budget": self.slot_budget,

@@ -18,6 +18,34 @@ from typing import Optional
 import numpy as np
 
 
+def parse_slo_specs(specs: list, model_names: list):
+    """``"model:ttft_ms=200,tbt_p99_ms=50"`` (repeatable) -> SLOConfig.
+    Model ``*`` expands to every colocated model; later specs override."""
+    from repro.configs.base import SLObjective, SLOConfig
+    objectives = {}
+    for spec in specs:
+        model, _, body = spec.partition(":")
+        if not body:
+            raise SystemExit(f"--slo {spec!r}: expected model:k=v[,k=v...]")
+        kwargs = {}
+        for item in body.split(","):
+            key, _, val = item.partition("=")
+            try:
+                kwargs[key.strip()] = float(val)
+            except ValueError:
+                raise SystemExit(f"--slo {spec!r}: bad value {item!r}")
+        try:
+            obj = SLObjective(**kwargs)
+        except TypeError as err:
+            raise SystemExit(f"--slo {spec!r}: {err}")
+        for name in (model_names if model.strip() == "*" else [model.strip()]):
+            if name not in model_names:
+                raise SystemExit(f"--slo {spec!r}: unknown model {name!r} "
+                                 f"(colocated: {model_names})")
+            objectives[name] = obj
+    return SLOConfig(objectives=objectives)
+
+
 def main(argv: Optional[list] = None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None, help="dry-run arch")
@@ -43,12 +71,24 @@ def main(argv: Optional[list] = None) -> None:
                          "pool (DESIGN.md §11): trace requests get real "
                          "prompt ids sharing a per-model system prefix, "
                          "and the cache snapshot is reported")
+    ap.add_argument("--elastic", action="store_true",
+                    help="enable the online KV<->weights rebalancer "
+                         "(DESIGN.md §8)")
     ap.add_argument("--metrics-out", default=None, metavar="PATH",
                     help="write Prometheus-text metrics here after serving "
                          "(DESIGN.md §10)")
     ap.add_argument("--trace-out", default=None, metavar="PATH",
                     help="write Chrome trace-event JSON here after serving "
                          "(open in Perfetto / chrome://tracing)")
+    ap.add_argument("--slo", action="append", default=None, metavar="SPEC",
+                    help='per-model latency objective, repeatable: '
+                         '"model:ttft_ms=200,tbt_p99_ms=50,'
+                         'queue_wait_ms=500,target=0.99" — model "*" '
+                         'applies to every colocated model (DESIGN.md §13)')
+    ap.add_argument("--flight-record-out", default=None, metavar="PATH",
+                    help="dump the flight record (full causal input "
+                         "stream + pool snapshots) here after serving; "
+                         "replay with `python -m repro.launch.replay PATH`")
     args = ap.parse_args(argv)
 
     if args.dry_run:
@@ -60,20 +100,26 @@ def main(argv: Optional[list] = None) -> None:
         raise SystemExit(0 if rec.get("ok") else 1)
 
     from repro.configs import PAPER_COLOC_SET, get_smoke_config
-    from repro.configs.base import CacheConfig, EngineConfig
-    from repro.runtime import trace as trace_mod
+    from repro.configs.base import (CacheConfig, ElasticConfig, EngineConfig,
+                                    FlightRecorderConfig)
+    from repro.runtime import observe as trace_mod
     from repro.runtime.engine import CrossPoolEngine, EngineMode
     from repro.runtime.observe import EngineObserver, percentile
 
     observer = (EngineObserver()
                 if args.metrics_out or args.trace_out else None)
     models = {n: get_smoke_config(n) for n in PAPER_COLOC_SET}
+    slo_cfg = parse_slo_specs(args.slo, list(models)) if args.slo else None
+    rec_cfg = (FlightRecorderConfig(dump_path=args.flight_record_out)
+               if args.flight_record_out else None)
     engine = CrossPoolEngine(
         models, page_budget=args.page_budget, max_batch=4, max_ctx=128,
         config=EngineConfig(
             mode=EngineMode(pipeline=args.pipeline, lowering=args.lowering,
                             decode_steps_per_dispatch=args.decode_steps),
-            cache=CacheConfig(enabled=args.cache)),
+            elastic=ElasticConfig() if args.elastic else None,
+            cache=CacheConfig(enabled=args.cache),
+            slo=slo_cfg, flightrec=rec_cfg),
         observer=observer)
     reqs = trace_mod.make_requests(
         list(models), rps_per_model=args.rps, horizon_s=args.horizon,
@@ -104,6 +150,14 @@ def main(argv: Optional[list] = None) -> None:
     if engine.cache is not None:
         print(f"prefix cache: {engine.cache.snapshot()}")
     print(f"straggler steps flagged: {stats.slow_steps}")
+    if engine.slo is not None:
+        print(engine.slo.report_line(engine.now))
+    if args.flight_record_out:
+        engine.recorder.dump(args.flight_record_out)
+        print(f"flight record -> {args.flight_record_out} "
+              f"({len(engine.recorder.ring)} events, "
+              f"{len(engine.recorder.snapshots)} snapshots); replay with "
+              f"`python -m repro.launch.replay {args.flight_record_out}`")
     if observer is not None:
         if args.metrics_out:
             observer.metrics.write(args.metrics_out)

@@ -57,6 +57,7 @@ production-mesh behaviour of the same code paths is proven by the dry-run.
 """
 from __future__ import annotations
 
+import collections
 import math
 import os
 import time
@@ -75,8 +76,9 @@ from repro.core.admission import (AdmissionController, AdmissionStats,
                                   PendingRequest)
 from repro.core.control import (HostDrivenStep, MultiStepFusedStep,
                                 StreamingPrefill)
-from repro.analysis.sanitizer import PoolSanitizer
+from repro.analysis.sanitizer import PoolSanitizer, PoolSanitizerError
 from repro.core.elastic import ElasticRebalancer
+from repro.core.errors import PoolAccountingError
 from repro.core.hooks import CompositeHooks
 from repro.core.pipeline import InflightBatch, LayerPipelineScheduler
 from repro.core import split_exec
@@ -87,7 +89,9 @@ from repro.core.virtualizer import (DEFAULT_PAGE_BYTES, KVVirtualizer,
 from repro.core.weight_pool import DEFAULT_SLAB_BYTES, OutOfSlabsError
 from repro.models import build_model
 from repro.models.moe import expert_capacity
-from repro.runtime.observe import EngineObserver, MetricsRegistry
+from repro.runtime.flightrec import (FlightRecorder, ReplayDivergence,
+                                     engine_header, pool_snapshot)
+from repro.runtime.observe import EngineObserver, MetricsRegistry, SLOMonitor
 from repro.runtime.request import Phase, Request
 from repro.runtime.sampler import sample
 from repro.runtime.session import (HandleState, PrefillBatcher, PrefillGroup,
@@ -572,6 +576,8 @@ class CrossPoolEngine:
         # surface; the loose ``mode=`` / ``elastic=`` kwargs that accreted
         # across PRs remain as deprecated aliases for one release
         cache_cfg: Optional[CacheConfig] = None
+        slo_cfg = None
+        rec_cfg = None
         if config is not None:
             if mode is not None or elastic is not None:
                 raise TypeError(
@@ -580,6 +586,8 @@ class CrossPoolEngine:
             mode = config.mode
             elastic = config.elastic
             cache_cfg = config.cache
+            slo_cfg = config.slo
+            rec_cfg = config.flightrec
         elif mode is not None or elastic is not None:
             warnings.warn(
                 "CrossPoolEngine(mode=..., elastic=...) is deprecated; "
@@ -655,10 +663,37 @@ class CrossPoolEngine:
             self.sanitizer = PoolSanitizer(
                 self.virt, arena=self.arena, admission=self.admission,
                 cache=self.cache)
-        sink = observer
-        if self.sanitizer is not None:
-            sink = (CompositeHooks(observer, self.sanitizer)
-                    if observer is not None else self.sanitizer)
+        # SLO engine (DESIGN.md §13): declarative burn-rate objectives,
+        # evaluated once per step over engine-virtual-time samples.  It
+        # shares the engine registry, so breach counters/events land next
+        # to the latency histograms they judge.
+        self.slo: Optional[SLOMonitor] = None
+        if slo_cfg is not None and slo_cfg.objectives:
+            self.slo = SLOMonitor(slo_cfg, registry=self.metrics)
+        # flight recorder (DESIGN.md §13): the session black box.  Built
+        # AFTER the pools (its dumps snapshot final accounting) and wired
+        # into the hook stream between the observer and the sanitizer, so
+        # a raising audit cannot hide the event that tripped it.
+        self.recorder: Optional[FlightRecorder] = None
+        if rec_cfg is not None and rec_cfg.enabled:
+            self.recorder = FlightRecorder(
+                rec_cfg,
+                header=engine_header(
+                    models=models, page_budget=page_budget,
+                    page_bytes=page_bytes, slot_budget=slot_budget,
+                    slab_bytes=slab_bytes, max_batch=max_batch,
+                    max_ctx=max_ctx, seed=seed, mode=self.mode,
+                    elastic=elastic, cache=cache_cfg,
+                    sanitize=want_sanitize, slo=slo_cfg,
+                    flightrec=rec_cfg),
+                virt=self.virt, arena=self.arena, cache=self.cache)
+        sinks = [s for s in (observer, self.recorder, self.sanitizer)
+                 if s is not None]
+        sink = (sinks[0] if len(sinks) == 1
+                else CompositeHooks(*sinks) if sinks else None)
+        # the fan-out target for engine-originated events too (SLO
+        # breaches), so observer/recorder/sanitizer see one stream
+        self._sink = sink
         if sink is not None:
             self.virt.hooks = sink
             if self.arena is not None:
@@ -739,6 +774,11 @@ class CrossPoolEngine:
         self._events: List[TokenEvent] = []
         self._in_step = False
         self._deferred_cancels: List[RequestHandle] = []
+        self._step_index = 0               # monotone step counter
+        # replay clock (flightrec): when attached, dispatch dt comes from
+        # the recorded stream instead of time.perf_counter — the ONLY
+        # nondeterministic input the engine folds into virtual time
+        self._replay_dts: Optional[collections.deque] = None
 
     # ------------------------------------------------------------------
     # the session API
@@ -749,6 +789,8 @@ class CrossPoolEngine:
         submitting it, so admission/queue-wait bookkeeping is stamped
         with the arrival clock — exactly as the ``run()`` wrapper does."""
         self.now = max(self.now, float(now))
+        if self.recorder is not None:
+            self.recorder.record_op("advance", now=self.now)
         return self.now
 
     def submit(self, req: Request, on_token=None) -> RequestHandle:
@@ -756,6 +798,10 @@ class CrossPoolEngine:
         time; the admission verdict is on the returned handle."""
         assert req.request_id not in self._submitted, \
             f"request id {req.request_id} already submitted"
+        if self.recorder is not None:
+            # recorded BEFORE any mutation: the op is the causal input,
+            # whatever verdict admission hands back
+            self.recorder.record_submit(req, self.now)
         self._submitted[req.request_id] = req
         self._window.add(req.request_id)
         if self.telemetry is not None:
@@ -778,8 +824,17 @@ class CrossPoolEngine:
         self.handles[req.request_id] = handle
         if self.observer is not None:
             self.observer.request_submitted(req, outcome)
+        if self.slo is not None and outcome == "admitted":
+            # immediate admissions are zero-wait queue samples: without
+            # them one slow drain would read as a 100% bad window
+            self.slo.note("queue_wait", req.model, 0.0, self.now)
         if self.sanitizer is not None and not self._in_step:
-            self.sanitizer.audit()     # admission mapping is quiescent too
+            try:
+                self.sanitizer.audit()  # admission mapping is quiescent too
+            except (PoolSanitizerError, PoolAccountingError) as err:
+                if self.recorder is not None:
+                    self.recorder.note_failure(self._step_index, err)
+                raise
         return handle
 
     def step(self, now: Optional[float] = None) -> List[TokenEvent]:
@@ -788,24 +843,41 @@ class CrossPoolEngine:
         callbacks fire inline as each batch commits)."""
         if now is not None:
             self.now = max(self.now, float(now))
+        self._step_index += 1
+        rec = self.recorder
+        if rec is not None:
+            rec.record_step(self._step_index, self.now)
         self._events = []
         self._in_step = True
         obs = self.observer
         if obs is not None:
             obs.step_begin(self.now)
         try:
-            self._step_phases()
-        finally:
-            if obs is not None:
-                obs.step_end()
-            self._in_step = False
-            deferred, self._deferred_cancels = self._deferred_cancels, []
-            for handle in deferred:     # reentrant cancels, now safe
-                self.cancel(handle)
-        if self.sanitizer is not None:
-            # quiescent point: no cross-object handoff is mid-flight here,
-            # so the full structural walk (SAN01..SAN08) is sound
-            self.sanitizer.audit()
+            try:
+                self._step_phases()
+            finally:
+                if obs is not None:
+                    obs.step_end()
+                self._in_step = False
+                deferred, self._deferred_cancels = \
+                    self._deferred_cancels, []
+                for handle in deferred:     # reentrant cancels, now safe
+                    self.cancel(handle, _deferred=True)
+            if self.sanitizer is not None:
+                # quiescent point: no cross-object handoff is mid-flight
+                # here, so the full structural walk (SAN01..SAN08) is sound
+                self.sanitizer.audit()
+        except (PoolSanitizerError, PoolAccountingError) as err:
+            # black-box the incident before surfacing it: the dumped
+            # record replays to this same failing step (DESIGN.md §13)
+            if rec is not None:
+                rec.note_failure(self._step_index, err)
+            raise
+        if rec is not None:
+            # breach auto-dumps land HERE, not at the breach itself: the
+            # step has fully retired, so the record's final accounting is
+            # a state replay can reproduce (DESIGN.md §13)
+            rec.maybe_breach_dump()
         return self._events
 
     def _drain_front_door(self) -> None:
@@ -813,6 +885,9 @@ class CrossPoolEngine:
         for p in self.admission.drain(self.now):
             req = self._submitted[p.request_id]
             req.admit_time = self.now
+            if self.slo is not None:
+                self.slo.note("queue_wait", p.model,
+                              self.now - p.enqueue_time, self.now)
             handle = self.handles[req.request_id]
             handle.state = HandleState.ADMITTED
             if self.cache is not None:
@@ -875,6 +950,23 @@ class CrossPoolEngine:
         self._observe_and_rebalance()
         if obs is not None:
             obs.phase_end("rebalance")
+
+        # --- SLO burn-rate scan + pool timelines/snapshots ---------------
+        # (after rebalance so breaches and snapshots see the step's final
+        # pool shape; all guarded — observer=None + recorder-off pays two
+        # ``is not None`` checks and allocates nothing)
+        if self.slo is not None:
+            for breach in self.slo.evaluate(self.now):
+                if self._sink is not None:
+                    self._sink.slo_breach(breach)
+        rec = self.recorder
+        snap_due = rec is not None and rec.snapshot_due(self._step_index)
+        if obs is not None or snap_due:
+            snap = pool_snapshot(self.virt, self.arena, self.cache)
+            if obs is not None:
+                obs.pool_counters(snap)
+            if snap_due:
+                rec.snapshot(self._step_index, self.now, snap)
 
     def _observe_and_rebalance(self) -> None:
         """Fold this step into the telemetry window and let the
@@ -951,7 +1043,8 @@ class CrossPoolEngine:
                 evicted_models=decision.evicted_models,
                 reason=decision.reason))
 
-    def cancel(self, handle: Union[RequestHandle, int]) -> bool:
+    def cancel(self, handle: Union[RequestHandle, int], *,
+               _deferred: bool = False) -> bool:
         """Abort a submitted request, atomically returning its resources.
 
         Unpins weight slabs and frees KV pages in one host-side
@@ -970,6 +1063,13 @@ class CrossPoolEngine:
         """
         if isinstance(handle, int):
             handle = self.handles[handle]
+        if self.recorder is not None and (_deferred or not self._in_step):
+            # ringed at APPLICATION time, not request time: a mid-step
+            # cancel is deferred to the step boundary, and recording it
+            # there keeps the ring position one a replayed session (which
+            # applies the op after the step retires) lands on exactly
+            self.recorder.record_cancel(handle.request.request_id,
+                                        self.now, in_step=self._in_step)
         if handle.state.terminal:
             return False
         if self._in_step:
@@ -1042,6 +1142,10 @@ class CrossPoolEngine:
         requests and their handles are PRUNED here — this is the point
         that bounds a long-lived session's memory — so a session that
         never resets retains every handle it ever created."""
+        if self.recorder is not None:
+            # causal: pruning changes later admission-assert behavior and
+            # the stats window, so a replay must reset at the same point
+            self.recorder.record_op("reset_stats", now=self.now)
         self.stats = EngineStats(step_times={n: [] for n in self.models},
                                  admission=self.admission.stats)
         for rid, handle in list(self.handles.items()):
@@ -1051,6 +1155,9 @@ class CrossPoolEngine:
         self._window.clear()
         if self.observer is not None:
             self.observer.reset_window()
+        if self.slo is not None:
+            # windowed SLO state follows the windowed histograms
+            self.slo.reset()
         return self.stats
 
     # ------------------------------------------------------------------
@@ -1244,9 +1351,64 @@ class CrossPoolEngine:
                 f"  device FFN bytes (prefill AND decode): "
                 f"{w['device_bytes'] / 2 ** 20:.1f} MiB — slot_budget x "
                 f"slab_bytes, no full-tree phase remains")
+        if self.slo is not None:
+            lines.append(self.slo.report_line(self.now))
+            for e in self.metrics.recent_events("slo_breach", 3):
+                lines.append(
+                    f"  breach @{e['time']:.2f}s: {e['model']} "
+                    f"{e['metric']} > {e['threshold_ms']:g}ms "
+                    f"(burn {e['long_burn']:.1f}x long / "
+                    f"{e['short_burn']:.1f}x short, "
+                    f"window value {e['window_value_ms']:.1f}ms)")
+        dropped = self.metrics.events_dropped()
+        if dropped:
+            # the event log is bounded: consumers of recent_events() must
+            # be able to see that the lines above may be truncated
+            lines.append("event log overflow: " + ", ".join(
+                f"{kind} dropped {n}"
+                for kind, n in sorted(dropped.items())))
+        if self.recorder is not None:
+            lines.append(
+                f"flight recorder: {len(self.recorder.ring)} events "
+                f"ringed, {len(self.recorder.snapshots)} snapshots, "
+                f"{self.recorder.dumps} dumps")
         return "\n".join(lines)
 
     # ------------------------------------------------------------------
+    # virtual-clock folding (the engine's ONLY nondeterministic input)
+    # ------------------------------------------------------------------
+    def attach_replay_clock(self, entries) -> None:
+        """Replay mode: dispatch durations come from this recorded
+        ``(tag, dt)`` stream instead of the host clock.  Everything else
+        in the engine is deterministic, so consuming the stream in order
+        reproduces the original session bit-exactly (flightrec/replay)."""
+        self._replay_dts = collections.deque(entries)
+
+    def _clocked(self, tag: str, t0: float) -> float:
+        """Wall duration of one dispatch since ``t0``: replay-injectable
+        (a replaying engine consumes the recorded stream) and recorded
+        (a recording engine logs the dt ACTUALLY USED, post-injection,
+        so a replay re-records a bit-identical clock stream)."""
+        dt = time.perf_counter() - t0  # cp: allow(CP006) real dispatch duration
+        if self._replay_dts is not None:
+            dt = self._next_replay_dt(tag)
+        if self.recorder is not None:
+            self.recorder.record_dt(tag, dt)
+        return dt
+
+    def _next_replay_dt(self, tag: str) -> float:
+        if not self._replay_dts:
+            raise ReplayDivergence(
+                f"clock stream exhausted at '{tag}' "
+                f"(step {self._step_index}): the replay dispatched more "
+                f"work than the record")
+        rec_tag, dt = self._replay_dts.popleft()
+        if rec_tag != tag:
+            raise ReplayDivergence(
+                f"clock stream diverged at step {self._step_index}: "
+                f"recorded '{rec_tag}', live '{tag}'")
+        return float(dt)
+
     def _record_step(self, name: str, dt: float) -> None:
         log = self.stats.step_times[name]
         if len(log) > 8 and dt > np.median(log) * 4.0:
@@ -1281,22 +1443,32 @@ class CrossPoolEngine:
         Streaming callbacks fire per token, preserving the K=1 contract.
         """
         obs = self.observer
+        rec = self.recorder
+        slo = self.slo
         for i in act:
             req = runner.slots[i]
             n = int(counts[i])
-            if obs is not None and n:
-                obs.decode_block(req, n, dt)
+            if n:
+                if obs is not None:
+                    obs.decode_block(req, n, dt)
+                if rec is not None:
+                    rec.record_commit(req.request_id, req.model, n, dt)
             for t in range(n):
                 tok = int(toks[i, t])
                 req.generated += 1
                 req.output_ids.append(tok)
                 when = start + dt * (t + 1) / n
+                # the same pairwise gap tbt_samples() reconstructs — the
+                # shared TBT histogram, EngineStats.tbt and the SLO
+                # window all hold identical values
+                gap = when - req.token_times[-1]
                 if obs is not None:
-                    # the same pairwise gap tbt_samples() reconstructs —
-                    # the shared TBT histogram and EngineStats.tbt hold
-                    # identical values
-                    obs.token(req, when - req.token_times[-1])
+                    obs.token(req, gap)
+                if slo is not None:
+                    slo.note("tbt", req.model, gap, when)
                 req.token_times.append(when)
+                if rec is not None:
+                    rec.note_token(req.request_id, req.model, tok, when)
                 self.stats.tokens_out += 1
                 if req.eos_id is not None and tok == req.eos_id:
                     req.eos_seen = True
@@ -1313,6 +1485,13 @@ class CrossPoolEngine:
         self.stats.ttft.append(now - req.arrival_time)
         if self.observer is not None:
             self.observer.first_token(req, now - req.arrival_time)
+        if self.slo is not None:
+            self.slo.note("ttft", req.model, now - req.arrival_time, now)
+        if self.recorder is not None:
+            self.recorder.record_commit(req.request_id, req.model, 1,
+                                        0.0, first=True)
+            self.recorder.note_token(req.request_id, req.model,
+                                     req.output_ids[-1], now)
         handle = self.handles.get(req.request_id)
         if handle is not None:
             handle.state = HandleState.DECODING
@@ -1352,7 +1531,7 @@ class CrossPoolEngine:
             runner = self.runners[g.model]
             t0 = time.perf_counter()  # cp: allow(CP006) real dispatch duration
             runner.prefill_group(g)
-            dt = time.perf_counter() - t0  # cp: allow(CP006) real dispatch duration
+            dt = self._clocked("prefill", t0)
             now += dt
             if self.observer is not None:
                 self.observer.prefill(g.model, g.batch_size, dt)
@@ -1369,7 +1548,7 @@ class CrossPoolEngine:
         done, pool = self.scheduler.run(batches, self.virt.pool,
                                         max_inflight=2)
         self.virt.pool = pool
-        dt = time.perf_counter() - t0  # cp: allow(CP006) real dispatch duration
+        dt = self._clocked("prefill_pipe", t0)
         now += dt
         by_model = {g.model: g for g in groups}
         for b in done:
@@ -1397,7 +1576,7 @@ class CrossPoolEngine:
         toks, counts, act = runner.commit_decode(pending)
         if obs is not None:
             obs.phase_end("commit")
-        dt = time.perf_counter() - t0  # cp: allow(CP006) real dispatch duration
+        dt = self._clocked("decode", t0)
         self._record_step(name, dt)
         self._book_tokens(runner, toks, counts, act, now, dt)
         return now + dt
@@ -1424,7 +1603,9 @@ class CrossPoolEngine:
         for n, pending in issued:
             runner = self.runners[n]
             toks, counts, act = runner.commit_decode(pending)
-            dt_all = time.perf_counter() - t0  # cp: allow(CP006) real dispatch duration
+            # one clock read per model commit: each is a replay-injection
+            # point, consumed in model order
+            dt_all = self._clocked("decode_pipe", t0)
             self._book_tokens(runner, toks, counts, act, now, dt_all)
         if obs is not None:
             obs.phase_end("commit")
@@ -1448,7 +1629,7 @@ class CrossPoolEngine:
         done, pool = self.scheduler.run(batches, self.virt.pool,
                                         max_inflight=2)
         self.virt.pool = pool
-        dt_all = time.perf_counter() - t0  # cp: allow(CP006) real dispatch duration
+        dt_all = self._clocked("decode_host", t0)
         if obs is not None:
             obs.phase_end("dispatch")
             obs.phase_begin("commit")

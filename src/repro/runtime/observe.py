@@ -30,15 +30,21 @@ import bisect
 import collections
 import json
 import time
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
+from repro.configs.base import SLOConfig
 from repro.core.hooks import CoreHooks
+from repro.runtime.request import Request
 
 __all__ = [
     "percentile", "summarize", "MetricsRegistry", "SpanTracer",
     "EngineObserver", "Counter", "Gauge", "Histogram",
+    "SLOBreach", "SLOMonitor",
+    "TraceStats", "sharegpt_like", "longalign_like", "poisson_arrivals",
+    "make_requests",
 ]
 
 
@@ -260,6 +266,7 @@ class MetricsRegistry:
         self._events: Dict[str, collections.deque] = \
             collections.defaultdict(
                 lambda: collections.deque(maxlen=event_log_size))
+        self._events_dropped: collections.Counter = collections.Counter()
 
     def _get_or_create(self, cls, name: str, help: str,
                        labelnames: Sequence[str], **kw):
@@ -290,12 +297,28 @@ class MetricsRegistry:
 
     # -- structured events (report()'s last-N source) -------------------
     def log_event(self, kind: str, **fields) -> None:
-        self._events[kind].append(dict(fields))
+        dq = self._events[kind]
+        if dq.maxlen is not None and len(dq) == dq.maxlen:
+            # bounded log about to silently truncate: count the drop so
+            # recent_events() consumers can detect it (surfaced by
+            # engine.report() and crosspool_events_dropped_total)
+            self._events_dropped[kind] += 1
+            self.counter("crosspool_events_dropped_total",
+                         "structured events lost to the bounded log",
+                         ("kind",)).labels(kind).inc()
+        dq.append(dict(fields))
 
     def recent_events(self, kind: str, n: Optional[int] = None
                       ) -> List[Dict]:
         ev = list(self._events.get(kind, ()))
         return ev if n is None else ev[-n:]
+
+    def events_dropped(self, kind: Optional[str] = None):
+        """Per-kind count of events lost to the bounded log — the whole
+        dict, or one kind's count."""
+        if kind is not None:
+            return self._events_dropped.get(kind, 0)
+        return dict(self._events_dropped)
 
     # -- exposition ------------------------------------------------------
     def prometheus_text(self) -> str:
@@ -382,6 +405,16 @@ class SpanTracer:
             "name": name, "cat": cat, "ph": "i", "s": "t",
             "ts": self.now_us(), "pid": self.PID,
             "tid": self._tid(track), "args": args})
+
+    def counter(self, track: str, name: str, **values: float) -> None:
+        """A Perfetto counter sample (ph "C"): one multi-series counter
+        track per (track tid, name); Perfetto renders the series stacked,
+        which is exactly the holder-class partition view the pool
+        timelines want."""
+        self.events.append({
+            "name": name, "ph": "C", "ts": self.now_us(),
+            "pid": self.PID, "tid": self._tid(track),
+            "args": {k: float(v) for k, v in values.items()}})
 
     # -- export ----------------------------------------------------------
     def chrome_trace(self) -> Dict:
@@ -658,6 +691,28 @@ class EngineObserver(CoreHooks):
         self._queue_depth.set(admission.queued_count())
         self._waiting.set(waiting)
 
+    def pool_counters(self, snap: Dict) -> None:
+        """Per-step Perfetto counter tracks from one pool snapshot
+        (``runtime.flightrec.pool_snapshot``): KV pages by holder class,
+        slabs by model, swap-tier depth, cache tree pages — the visual
+        attribution layer for elastic decisions (DESIGN.md §13)."""
+        kv = snap["kv"]
+        self.tracer.counter("pool/kv", "kv_pages",
+                            free=kv["free_pages"],
+                            request=kv["request_pages"],
+                            tree=kv["tree_pages"])
+        self.tracer.counter("pool/kv", "swap_tier",
+                            swapped=kv["swapped_now"])
+        arena = snap.get("arena")
+        if arena is not None:
+            series = {"free": float(arena["free_slabs"])}
+            series.update(arena["resident"])
+            self.tracer.counter("pool/arena", "slabs", **series)
+        cache = snap.get("cache")
+        if cache is not None:
+            self.tracer.counter("pool/cache", "tree_pages",
+                                held=cache["device_pages_held"])
+
     # gauge accessors for DemandTelemetry's gauge-fed EWMAs
     def kv_occupancy(self) -> float:
         return self._kv_occ.value
@@ -760,3 +815,269 @@ class EngineObserver(CoreHooks):
                                    decision.new_page_budget),
                             slabs=(decision.old_slot_budget,
                                    decision.new_slot_budget))
+
+    def slo_breach(self, breach) -> None:
+        """Breach instant on the engine track (the counter and the
+        structured event are bumped by :class:`SLOMonitor` itself, which
+        shares this observer's registry — bumping here too would double
+        count)."""
+        self.tracer.instant(self.ENGINE_TRACK, "slo_breach", cat="slo",
+                            model=breach.model, metric=breach.metric,
+                            long_burn=breach.long_burn,
+                            short_burn=breach.short_burn)
+
+
+# ---------------------------------------------------------------------------
+# SLO engine: multi-rate burn-rate evaluation (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class SLOBreach:
+    """One burn-rate breach edge for one (model, metric) objective."""
+
+    model: str
+    metric: str            # "ttft" | "tbt" | "queue_wait"
+    threshold_s: float
+    target: float
+    long_burn: float       # budget-burn multiple over the long window
+    short_burn: float      # ... over the short (fast) window
+    window_value: float    # target-quantile of the long window (seconds)
+    now: float             # engine virtual time of the evaluation
+
+
+# (SLObjective field, metric key) pairs the monitor tracks
+_SLO_METRICS = (("ttft_ms", "ttft"),
+                ("tbt_p99_ms", "tbt"),
+                ("queue_wait_ms", "queue_wait"))
+
+
+def _bad_fraction(values: Sequence[float], threshold_s: float) -> float:
+    """Fraction of samples STRICTLY over the threshold: a sample exactly
+    at the objective is within SLO."""
+    if not values:
+        return 0.0
+    return sum(1 for v in values if v > threshold_s) / len(values)
+
+
+class SLOMonitor:
+    """Windowed multi-rate burn-rate evaluation over latency samples.
+
+    The engine feeds raw samples (``note``) in virtual time — the same
+    values the registry histograms receive, so the monitor's windowed
+    quantiles agree with ``np.percentile`` over the raw histogram
+    samples exactly.  ``evaluate(now)`` prunes each (model, metric)
+    window and fires an :class:`SLOBreach` on the breaching EDGE: both
+    the long and the short window must burn the error budget faster
+    than ``burn_rate_threshold`` (each with at least one sample), and
+    the pair re-arms only after the condition clears.  Breaches land in
+    the shared registry (``crosspool_slo_breaches_total`` + an
+    ``slo_breach`` structured event) here, and are fanned to the hook
+    sinks (observer trace, flight recorder) by the engine.
+
+    Evaluation is pure arithmetic over deques of ``(time, value)`` —
+    deterministic given the session's input stream, so a replayed
+    session reproduces the exact breach sequence.
+    """
+
+    def __init__(self, cfg: SLOConfig,
+                 registry: Optional[MetricsRegistry] = None):
+        self.cfg = cfg
+        self.metrics = registry if registry is not None else MetricsRegistry()
+        self._breaches = self.metrics.counter(
+            "crosspool_slo_breaches_total",
+            "multi-rate burn-rate breach edges", ("model", "metric"))
+        # (model, metric) -> (threshold_s, target)
+        self._objectives: Dict[Tuple[str, str], Tuple[float, float]] = {}
+        for model, obj in cfg.objectives.items():
+            for attr, metric in _SLO_METRICS:
+                thr_ms = getattr(obj, attr)
+                if thr_ms is not None:
+                    self._objectives[(model, metric)] = (
+                        float(thr_ms) / 1e3, float(obj.target))
+        self._samples: Dict[Tuple[str, str], collections.deque] = {
+            key: collections.deque() for key in self._objectives}
+        self._active: Set[Tuple[str, str]] = set()
+        self.evaluations = 0
+
+    def note(self, metric: str, model: str, value_s: float,
+             now: float) -> None:
+        """One latency sample in engine virtual time; untracked
+        (model, metric) pairs are dropped at the cost of one dict get."""
+        q = self._samples.get((model, metric))
+        if q is not None:
+            q.append((float(now), float(value_s)))
+
+    def _burns(self, key, now: float):
+        """(long_burn, short_burn, long_values, short_n) after pruning
+        the window; ``None`` when the long window is empty."""
+        thr, target = self._objectives[key]
+        q = self._samples[key]
+        horizon = now - self.cfg.window_s
+        while q and q[0][0] < horizon:
+            q.popleft()
+        if not q:
+            return None
+        budget = max(1.0 - target, 1e-9)
+        long_vals = [v for _, v in q]
+        fast_horizon = now - self.cfg.short_window_s
+        short_vals = [v for t, v in q if t >= fast_horizon]
+        long_burn = _bad_fraction(long_vals, thr) / budget
+        short_burn = _bad_fraction(short_vals, thr) / budget
+        return long_burn, short_burn, long_vals, len(short_vals)
+
+    def evaluate(self, now: float) -> List[SLOBreach]:
+        """Edge-triggered breach scan; called by the engine once per
+        step (and callable directly in tests)."""
+        self.evaluations += 1
+        out: List[SLOBreach] = []
+        for key, (thr, target) in self._objectives.items():
+            burns = self._burns(key, now)
+            if burns is None:
+                self._active.discard(key)
+                continue
+            long_burn, short_burn, long_vals, short_n = burns
+            breaching = (short_n > 0
+                         and long_burn > self.cfg.burn_rate_threshold
+                         and short_burn > self.cfg.burn_rate_threshold)
+            if not breaching:
+                self._active.discard(key)
+                continue
+            if key in self._active:
+                continue
+            self._active.add(key)
+            model, metric = key
+            breach = SLOBreach(
+                model=model, metric=metric, threshold_s=thr, target=target,
+                long_burn=long_burn, short_burn=short_burn,
+                window_value=percentile(long_vals, target * 100.0), now=now)
+            self._breaches.labels(model, metric).inc()
+            self.metrics.log_event(
+                "slo_breach", model=model, metric=metric,
+                threshold_ms=thr * 1e3, long_burn=long_burn,
+                short_burn=short_burn,
+                window_value_ms=breach.window_value * 1e3, time=now)
+            out.append(breach)
+        return out
+
+    def status(self, now: float) -> Dict[Tuple[str, str], Dict[str, float]]:
+        """Read-only window view per objective (no pruning, no edges):
+        sample count, bad fraction, burn rates, and the target-quantile
+        of the long window — the reporting surface."""
+        out = {}
+        for key, (thr, target) in self._objectives.items():
+            q = self._samples[key]
+            long_vals = [v for t, v in q if t >= now - self.cfg.window_s]
+            short_vals = [v for t, v in q
+                          if t >= now - self.cfg.short_window_s]
+            budget = max(1.0 - target, 1e-9)
+            out[key] = {
+                "n": len(long_vals),
+                "threshold_s": thr,
+                "target": target,
+                "bad_fraction": _bad_fraction(long_vals, thr),
+                "long_burn": _bad_fraction(long_vals, thr) / budget,
+                "short_burn": _bad_fraction(short_vals, thr) / budget,
+                "window_value": (percentile(long_vals, target * 100.0)
+                                 if long_vals else float("nan")),
+                "breaching": key in self._active,
+            }
+        return out
+
+    def breach_count(self) -> int:
+        return int(self._breaches.value)
+
+    def reset(self) -> None:
+        """Drop every window and re-arm every edge — wired to
+        ``engine.reset_stats()`` so windowed SLO state matches the
+        windowed histograms."""
+        for q in self._samples.values():
+            q.clear()
+        self._active.clear()
+
+    def report_line(self, now: float) -> str:
+        n_breaching = sum(1 for key in self._objectives
+                          if key in self._active)
+        return (f"slo: {len(self._objectives)} objectives, "
+                f"{self.breach_count()} breach edges, "
+                f"{n_breaching} currently breaching")
+
+
+# ---------------------------------------------------------------------------
+# workload trace synthesis (formerly runtime/trace.py)
+# ---------------------------------------------------------------------------
+#
+# Offline datasets are unavailable in this container, so we synthesize
+# traces whose marginal token statistics match the published dataset
+# summaries:
+#
+# * ShareGPT (Vicuna conversations): prompt/output token counts are
+#   log-normal-ish with medians of a few hundred tokens and a heavy tail
+#   (median prompt ~220, median output ~180, p99 ~2k) — the "balanced
+#   input/output" workload of paper §5.1.
+# * LongAlign-10k: context lengths spread 1k..64k with substantial mass
+#   beyond 8k (the long-context scalability workload of Fig. 6), outputs
+#   a few hundred tokens.
+#
+# Arrivals are Poisson at a configurable per-model RPS (paper: 0.2-1.0).
+
+
+@dataclass(frozen=True)
+class TraceStats:
+    prompt_tokens: np.ndarray
+    output_tokens: np.ndarray
+
+
+def sharegpt_like(n: int, rng: np.random.Generator,
+                  clip: int = 4096) -> TraceStats:
+    prompt = np.clip(rng.lognormal(mean=5.4, sigma=0.9, size=n), 8,
+                     clip).astype(int)
+    output = np.clip(rng.lognormal(mean=5.2, sigma=0.8, size=n), 8,
+                     clip).astype(int)
+    return TraceStats(prompt, output)
+
+
+def longalign_like(n: int, rng: np.random.Generator,
+                   max_ctx: int = 65536) -> TraceStats:
+    """Context lengths across 1k..64k bins with heavy long-tail mass."""
+    bins = np.array([1024, 2048, 4096, 8192, 16384, 32768, 65536])
+    weights = np.array([0.18, 0.2, 0.2, 0.16, 0.12, 0.09, 0.05])
+    hi = rng.choice(bins, size=n, p=weights / weights.sum())
+    prompt = (hi * rng.uniform(0.55, 1.0, size=n)).astype(int)
+    prompt = np.minimum(prompt, max_ctx - 512)
+    output = np.clip(rng.lognormal(5.0, 0.7, size=n), 16, 512).astype(int)
+    return TraceStats(prompt, output)
+
+
+def poisson_arrivals(rate: float, horizon_s: float,
+                     rng: np.random.Generator) -> np.ndarray:
+    n = rng.poisson(rate * horizon_s)
+    return np.sort(rng.uniform(0.0, horizon_s, n))
+
+
+def make_requests(models: List[str], *, rps_per_model: float,
+                  horizon_s: float, kind: str = "sharegpt",
+                  seed: int = 0, scale_tokens: float = 1.0,
+                  max_new_cap: Optional[int] = None) -> List[Request]:
+    """Interleaved multi-model request stream sorted by arrival time.
+
+    ``scale_tokens`` shrinks token counts for CPU-scale engine runs while
+    preserving the distribution shape.
+    """
+    rng = np.random.default_rng(seed)
+    reqs: List[Request] = []
+    rid = 0
+    for model in models:
+        arrivals = poisson_arrivals(rps_per_model, horizon_s, rng)
+        stats = (sharegpt_like(len(arrivals), rng) if kind == "sharegpt"
+                 else longalign_like(len(arrivals), rng))
+        for t, p, o in zip(arrivals, stats.prompt_tokens,
+                           stats.output_tokens):
+            p = max(int(p * scale_tokens), 1)
+            o = max(int(o * scale_tokens), 1)
+            if max_new_cap:
+                o = min(o, max_new_cap)
+            reqs.append(Request(rid, model, p, o, float(t)))
+            rid += 1
+    reqs.sort(key=lambda r: r.arrival_time)
+    return reqs

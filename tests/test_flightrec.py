@@ -1,0 +1,214 @@
+"""Flight recorder + deterministic replay acceptance (ISSUE 10).
+
+* a session with elastic rebalancing, prefix caching, and K=4 multi-step
+  decode — plus mid-session cancel and ``reset_stats`` — records a
+  flight record that replays BIT-EXACTLY (token streams, event ring,
+  rebalance decisions, pool snapshots, final accounting) in BOTH
+  lowering modes, including in a fresh process via
+  ``python -m repro.launch.replay``;
+* induced pool corruption (``inject_corruption``) auto-dumps an incident
+  record that the replayer reproduces to the same failing step and
+  sanitizer rule;
+* the recorder-off / observer-off path stays bit-exact with the fully
+  instrumented one;
+* record hygiene: causal drops are refused, version is checked.
+"""
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.analysis.sanitizer import PoolSanitizerError
+from repro.configs import (CacheConfig, ElasticConfig, EngineConfig,
+                           FlightRecorderConfig, SLObjective, SLOConfig,
+                           get_smoke_config)
+from repro.runtime import flightrec
+from repro.runtime.engine import CrossPoolEngine, EngineMode
+from repro.runtime.request import Request
+from repro.launch import replay as replay_mod
+
+MOE, MLA = "qwen3-moe-235b-a22b", "minicpm3-4b"
+
+
+def _models():
+    return {n: get_smoke_config(n).replace(dtype="float32")
+            for n in (MOE, MLA)}
+
+
+def _config(lowering, *, flightrec_on=True, slo=False, sanitize=False,
+            dump_path=None):
+    return EngineConfig(
+        mode=EngineMode(pipeline=True, lowering=lowering,
+                        decode_steps_per_dispatch=4),
+        elastic=ElasticConfig(interval_steps=2, cooldown_steps=2,
+                              window_s=8.0),
+        cache=CacheConfig(enabled=True),
+        sanitize=sanitize,
+        slo=(SLOConfig(objectives={MOE: SLObjective(ttft_ms=1e-3,
+                                                    tbt_p99_ms=1e-3)},
+                       window_s=4.0, short_window_s=0.5) if slo else None),
+        flightrec=(FlightRecorderConfig(ring_size=65536,
+                                        snapshot_interval_steps=2,
+                                        dump_path=dump_path)
+                   if flightrec_on else None))
+
+
+def _engine(lowering, observer=None, **cfg_kw):
+    return CrossPoolEngine(_models(), page_budget=2048, page_bytes=4096,
+                           slab_bytes=4096, max_batch=2, max_ctx=64, seed=0,
+                           config=_config(lowering, **cfg_kw),
+                           observer=observer)
+
+
+def _requests(models):
+    """Real prompt ids with a shared per-model system prefix, so the
+    radix cache gets hits — constructed from a fixed seed so every
+    engine in a test sees the identical workload."""
+    rng = np.random.default_rng(7)
+    system = {n: rng.integers(0, cfg.vocab_size, 32).astype(np.int32)
+              for n, cfg in models.items()}
+
+    def mk(rid, model, n_prompt, n_new, t):
+        tail = rng.integers(0, models[model].vocab_size,
+                            max(0, n_prompt - 32)).astype(np.int32)
+        ids = np.concatenate([system[model], tail])[:n_prompt]
+        return Request(rid, model, n_prompt, n_new, t,
+                       prompt_ids=ids.astype(np.int32))
+
+    return [mk(0, MOE, 40, 6, 0.0), mk(1, MLA, 36, 6, 0.0),
+            mk(2, MOE, 40, 12, 0.1),       # shares r0's full prompt
+            mk(3, MLA, 44, 6, 0.3), mk(4, MOE, 38, 4, 0.5)]
+
+
+def _drive(engine):
+    """A representative session: staggered submits, multi-step decode,
+    a cancel landing mid-decode from an on_token callback, a stats
+    reset, and a drain to quiescence."""
+    reqs = _requests(_models())
+    h0 = engine.submit(reqs[0])
+    engine.submit(reqs[1])
+    engine.step(0.05)
+    engine.advance(0.1)
+    engine.submit(reqs[2])
+    victim = engine.submit(reqs[3],
+                           on_token=lambda ev: engine.cancel(victim))
+    engine.step()
+    engine.submit(reqs[4])
+    for _ in range(40):
+        if not engine.busy:
+            break
+        engine.step()
+    engine.cancel(h0)            # no-op terminal cancel, still an op
+    return engine.finalize()
+
+
+@pytest.mark.parametrize("lowering", [True, False],
+                         ids=["lowered", "interpret"])
+def test_record_replay_bit_exact(lowering):
+    engine = _engine(lowering)
+    _drive(engine)
+    record = json.loads(json.dumps(engine.recorder.to_record()))
+    assert record["version"] == flightrec.RECORD_VERSION
+    assert not flightrec.causal_drops(record)
+    kinds = {e["kind"] for e in record["events"]}
+    assert {"op", "clock", "commit"} <= kinds
+    assert "cache_hit" in kinds, "shared prefix should hit the radix cache"
+    assert record["snapshots"], "interval-2 snapshots should have fired"
+    assert record["streams"], "token streams should have been captured"
+
+    report = replay_mod.replay(record)
+    assert report.ok, report.mismatches
+    assert report.tokens > 0 and report.steps > 0
+
+
+def test_replay_fresh_process(tmp_path):
+    engine = _engine(True)
+    _drive(engine)
+    path = tmp_path / "flight.json"
+    engine.recorder.dump(str(path))
+    env = dict(os.environ)
+    src = str(Path(__file__).resolve().parent.parent / "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.replay", str(path)],
+        capture_output=True, text=True, env=env, timeout=1200)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "BIT-EXACT" in proc.stdout
+
+
+@pytest.mark.parametrize("kind", flightrec.INJECTION_KINDS)
+def test_corruption_record_replays_to_same_step(tmp_path, kind):
+    path = tmp_path / f"incident_{kind}.json"
+    engine = _engine(True, sanitize=True, dump_path=str(path))
+    reqs = _requests(_models())
+    engine.submit(reqs[0])
+    engine.submit(reqs[2])     # 12 new tokens: still decoding at injection
+    engine.step(0.05)
+    engine.step()
+    flightrec.inject_corruption(engine, kind)
+    with pytest.raises(PoolSanitizerError) as exc:
+        engine.step()
+    assert path.exists(), "incident should auto-dump the black box"
+    record = replay_mod.load_record(str(path))
+    failure = record["failure"]
+    assert failure["type"] == "PoolSanitizerError"
+    assert failure["rule"] == exc.value.rule
+    assert failure["step"] == engine._step_index
+
+    report = replay_mod.replay(record)
+    assert report.failure_reproduced, report.mismatches
+    assert report.ok, report.mismatches
+
+
+def test_recorder_off_path_bit_exact():
+    """observer=None + flightrec=None + slo=None must not perturb the
+    session: token ids AND virtual timestamps identical to the fully
+    instrumented engine's."""
+    from repro.runtime.observe import EngineObserver
+
+    instrumented = _engine(True, observer=EngineObserver(), slo=True)
+    bare = _engine(True, flightrec_on=False)
+    assert bare.recorder is None and bare.slo is None
+
+    # identical workloads; the bare engine re-uses the instrumented run's
+    # recorded dispatch-duration stream so virtual timestamps compare
+    # exactly (real perf_counter readings differ run to run)
+    stats_a = _drive(instrumented)
+    bare.attach_replay_clock(
+        flightrec.record_clock(instrumented.recorder.to_record()))
+    stats_b = _drive(bare)
+    streams_a = {rid: (h.request.output_ids, h.request.token_times)
+                 for rid, h in instrumented.handles.items()}
+    streams_b = {rid: (h.request.output_ids, h.request.token_times)
+                 for rid, h in bare.handles.items()}
+    assert streams_a == streams_b
+    assert stats_a.tokens_out == stats_b.tokens_out
+    assert instrumented.slo.breach_count() > 0   # and it saw real breaches
+
+
+def test_replay_refuses_causal_drops(tmp_path):
+    engine = _engine(True)
+    record = engine.recorder.to_record()
+    record["dropped"] = {"op": 3, "cache_hit": 5}
+    path = tmp_path / "dropped.json"
+    path.write_text(json.dumps(record))
+    with pytest.raises(replay_mod.ReplayError, match="causal"):
+        replay_mod.load_record(str(path))
+    # informational drops alone are fine: the causal stream is intact
+    record["dropped"] = {"cache_hit": 5}
+    path.write_text(json.dumps(record))
+    assert replay_mod.load_record(str(path))["dropped"] == {"cache_hit": 5}
+
+
+def test_record_version_guard(tmp_path):
+    engine = _engine(True)
+    record = engine.recorder.to_record()
+    record["version"] = 999
+    path = tmp_path / "bad.json"
+    path.write_text(json.dumps(record))
+    with pytest.raises(replay_mod.ReplayError, match="version"):
+        replay_mod.load_record(str(path))

@@ -188,7 +188,7 @@ def _validate_chrome_trace(trace: dict) -> None:
     named_tids = set()
     depth: dict = {}
     for e in events:
-        assert e["ph"] in {"B", "E", "X", "i", "M"}, e
+        assert e["ph"] in {"B", "E", "X", "i", "M", "C"}, e
         assert e["pid"] == SpanTracer.PID and isinstance(e["tid"], int)
         assert isinstance(e["name"], str) and e["name"]
         if e["ph"] == "M":
@@ -202,6 +202,9 @@ def _validate_chrome_trace(trace: dict) -> None:
             assert e["dur"] >= 0
         elif e["ph"] == "i":
             assert e["s"] == "t"
+        elif e["ph"] == "C":
+            assert e["args"] and all(isinstance(v, float)
+                                     for v in e["args"].values())
         elif e["ph"] == "B":
             depth[e["tid"]] = depth.get(e["tid"], 0) + 1
         elif e["ph"] == "E":
@@ -402,3 +405,106 @@ def test_telemetry_gauge_fed_matches_direct_sampling():
     assert fed.kv_occupancy_ewma == direct.kv_occupancy_ewma
     assert fed.queue_depth_ewma == direct.queue_depth_ewma
     assert fed.last == direct.last
+
+
+# ---------------------------------------------------------------------------
+# SLO burn-rate monitor edge cases (ISSUE 10)
+# ---------------------------------------------------------------------------
+
+def _slo_monitor(threshold_ms=100.0, target=0.9, window_s=10.0,
+                 short_window_s=2.0):
+    from repro.configs.base import SLObjective, SLOConfig
+    from repro.runtime.observe import SLOMonitor
+    cfg = SLOConfig(
+        objectives={"m": SLObjective(ttft_ms=threshold_ms, target=target)},
+        window_s=window_s, short_window_s=short_window_s)
+    return SLOMonitor(cfg)
+
+
+def test_slo_empty_window_never_breaches():
+    mon = _slo_monitor()
+    assert mon.evaluate(0.0) == [] and mon.evaluate(1e9) == []
+    st = mon.status(1e9)[("m", "ttft")]
+    assert st["n"] == 0 and not st["breaching"]
+    assert np.isnan(st["window_value"])
+    assert mon.breach_count() == 0
+
+
+def test_slo_single_sample_breach_edge():
+    mon = _slo_monitor()
+    mon.note("ttft", "m", 0.5, 1.0)            # 500ms against a 100ms SLO
+    breaches = mon.evaluate(1.0)
+    assert len(breaches) == 1
+    b = breaches[0]
+    assert (b.model, b.metric) == ("m", "ttft")
+    assert b.long_burn == b.short_burn == pytest.approx(1.0 / 0.1)
+    # edge-triggered: still breaching, but no NEW edge without recovery
+    assert mon.evaluate(1.5) == []
+    assert mon.breach_count() == 1
+    # sample ages out of the window -> condition clears -> edge re-arms
+    assert mon.evaluate(20.0) == []
+    mon.note("ttft", "m", 0.5, 21.0)
+    assert len(mon.evaluate(21.0)) == 1
+    assert mon.breach_count() == 2
+
+
+def test_slo_exact_threshold_is_within_slo():
+    """A sample EQUAL to the objective does not burn budget (bad is
+    strictly greater-than)."""
+    mon = _slo_monitor(threshold_ms=100.0)
+    for i in range(8):
+        mon.note("ttft", "m", 0.1, float(i) * 0.1)
+    assert mon.evaluate(0.8) == []
+    st = mon.status(0.8)[("m", "ttft")]
+    assert st["bad_fraction"] == 0.0 and st["long_burn"] == 0.0
+    # one ulp above the threshold and the whole window burns
+    mon.note("ttft", "m", np.nextafter(0.1, 1.0), 0.9)
+    assert len(mon.evaluate(0.9)) == 1
+
+
+def test_slo_reset_mid_window_drops_samples_and_rearms():
+    """The ``engine.reset_stats()`` path: windows clear and the edge
+    re-arms, so the same condition fires a fresh breach afterwards."""
+    mon = _slo_monitor()
+    mon.note("ttft", "m", 0.5, 1.0)
+    assert len(mon.evaluate(1.0)) == 1
+    mon.reset()
+    st = mon.status(1.0)[("m", "ttft")]
+    assert st["n"] == 0 and not st["breaching"]
+    assert mon.evaluate(1.1) == []             # empty again, no breach
+    mon.note("ttft", "m", 0.5, 1.2)
+    assert len(mon.evaluate(1.2)) == 1         # re-armed edge fires
+    assert mon.breach_count() == 2
+
+
+def test_slo_window_value_matches_np_percentile_of_histogram():
+    """Breach parity: the monitor's window quantile is EXACTLY
+    ``np.percentile`` over the same raw samples a registry histogram
+    holds (same linear interpolation, no bucketing error)."""
+    mon = _slo_monitor(threshold_ms=100.0, target=0.95, window_s=100.0)
+    hist = mon.metrics.histogram("ttft_seconds", "raw ttft", ("model",))
+    rng = np.random.default_rng(3)
+    samples = rng.uniform(0.0, 0.4, 64)
+    for i, v in enumerate(samples):
+        mon.note("ttft", "m", v, float(i))
+        hist.labels("m").observe(v)
+    mon.evaluate(float(len(samples) - 1))
+    st = mon.status(float(len(samples) - 1))[("m", "ttft")]
+    assert st["window_value"] == float(np.percentile(samples, 95.0))
+    assert st["window_value"] == hist.labels("m").percentile(95.0)
+    ev = mon.metrics.recent_events("slo_breach")
+    assert ev and ev[-1]["window_value_ms"] == st["window_value"] * 1e3
+
+
+def test_metrics_registry_counts_dropped_events():
+    reg = MetricsRegistry(event_log_size=4)
+    for i in range(7):
+        reg.log_event("rebalance", step=i)
+    assert reg.events_dropped("rebalance") == 3
+    assert reg.events_dropped() == {"rebalance": 3}
+    assert reg.events_dropped("slo_breach") == 0
+    # the companion counter family is exported for scrapes
+    ctr = reg.get("crosspool_events_dropped_total")
+    assert ctr is not None and ctr.labels("rebalance").value == 3
+    # the log still holds the most recent events only
+    assert [e["step"] for e in reg.recent_events("rebalance")] == [3, 4, 5, 6]

@@ -145,7 +145,7 @@ class TestEngineAcceptance:
         assert one.virt.pool.nbytes == three.virt.pool.nbytes
 
     def test_serves_and_releases(self):
-        from repro.runtime import trace as trace_mod
+        from repro.runtime import observe as trace_mod
         engine = self._engine(PAPER_COLOC_SET)
         reqs = trace_mod.make_requests(
             list(PAPER_COLOC_SET), rps_per_model=2.0, horizon_s=2,

@@ -2,7 +2,7 @@
 import numpy as np
 
 from repro.configs import PAPER_COLOC_SET, get_config, get_smoke_config
-from repro.runtime import trace as trace_mod
+from repro.runtime import observe as trace_mod
 from repro.runtime.engine import CrossPoolEngine, EngineMode
 from repro.runtime.observe import percentile
 from repro.runtime.simulator import (DecodeSimulator, decode_step_time,
